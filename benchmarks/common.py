@@ -1,0 +1,83 @@
+"""Shared benchmark utilities.
+
+Performance convention (paper Sect. 4): "calculated performance" divides
+the THEORETICAL flop count of Eq. (1) by wall time — navigation overhead
+and redundant flops then LOWER the reported number instead of inflating
+it.  "measured performance" divides the flops the implementation actually
+executes (flops_exact, the 2-mul unreduced form) by the same wall time —
+reproducing the paper's Fig. 5/6 lesson that measured flops mislead.
+
+The container benches run the jit-compiled JNP implementations on the CPU
+(1 core); the Pallas kernels are validated in interpret mode (numerics)
+and projected on the TPU roofline (benchmarks/kernel_roofline.py) — wall
+time of interpret-mode emulation is meaningless and never reported.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List
+
+import jax
+import numpy as np
+
+__all__ = ["time_call", "BenchRow", "emit_csv", "perf_gflops"]
+
+
+def time_call(fn: Callable, *args, reps: int = 5, warmup: int = 2,
+              min_time_s: float = 0.0) -> float:
+    """Median wall seconds of ``fn(*args)`` (blocks on jax outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+@dataclass
+class BenchRow:
+    bench: str
+    case: str
+    method: str
+    bytes_in: int
+    seconds: float
+    flops_eq1: int
+    flops_exact: int
+
+    @property
+    def calc_gflops(self) -> float:
+        return self.flops_eq1 / self.seconds / 1e9 if self.seconds else 0.0
+
+    @property
+    def meas_gflops(self) -> float:
+        return self.flops_exact / self.seconds / 1e9 if self.seconds else 0.0
+
+    @property
+    def gbps(self) -> float:
+        """Effective 2x-traffic bandwidth (1 read + 1 write per pass)."""
+        return 2 * self.bytes_in / self.seconds / 1e9 if self.seconds else 0.0
+
+    def csv(self) -> str:
+        return (f"{self.bench},{self.case},{self.method},{self.bytes_in},"
+                f"{self.seconds * 1e6:.1f},{self.calc_gflops:.4f},"
+                f"{self.meas_gflops:.4f},{self.gbps:.3f}")
+
+
+CSV_HEADER = ("bench,case,method,bytes,us_per_call,calc_gflops,"
+              "meas_gflops,eff_gbps")
+
+
+def emit_csv(rows: Iterable[BenchRow], header: bool = True) -> str:
+    lines = [CSV_HEADER] if header else []
+    lines += [r.csv() for r in rows]
+    return "\n".join(lines)
+
+
+def perf_gflops(flops: int, seconds: float) -> float:
+    return flops / seconds / 1e9 if seconds else 0.0

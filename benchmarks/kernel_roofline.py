@@ -1,0 +1,102 @@
+"""TPU v5e roofline projection for the hierarchization kernels.
+
+The transform is bandwidth-bound by construction (paper Sect. 5 reached 5%
+of FLOP peak ~ its full STREAM bandwidth).  On TPU the score that matters
+is the fraction of the HBM roofline each kernel schedule sustains, which
+is fixed by its PASS COUNT over the data set:
+
+  * paper-faithful pole kernel: one pass per dimension (d passes, each
+    1 read + 1 write of the grid)
+  * beyond-paper fused schedule: 2 passes for ANY d >= 2 (tail axes fused
+    in VMEM while tiling axis 0, then axis 0 while tiling lanes), 1 pass
+    for d == 1
+  * matmul (MXU) variant: same traffic as its host schedule; converts the
+    gather/branch structure into dense (N x N) MXU work that stays below
+    the compute roof for N <= ~1900 (ridge: 2N^2B flops vs 16NB bytes).
+
+Numbers below are derived from the kernels' BlockSpec tiling (exact HBM
+traffic of the pallas_call grid) + Eq. (1)-exact flop counts; the kernels'
+numerics are validated in interpret mode by tests/test_kernels_pallas.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.levels import (flops_exact, grid_bytes, grid_shape,
+                               hierarchization_bytes, muls_reduced)
+from repro.launch.analysis import TPU_V5E
+
+__all__ = ["kernel_cases", "main"]
+
+
+@dataclass
+class KernelProjection:
+    case: str
+    method: str
+    passes: float
+    hbm_bytes: int
+    flops: int
+
+    @property
+    def ai(self) -> float:
+        return self.flops / self.hbm_bytes
+
+    @property
+    def t_mem_us(self) -> float:
+        return self.hbm_bytes / TPU_V5E.hbm_bw * 1e6
+
+    @property
+    def t_compute_us(self) -> float:
+        return self.flops / TPU_V5E.peak_flops * 1e6
+
+    @property
+    def bound(self) -> str:
+        return "memory" if self.t_mem_us >= self.t_compute_us else "compute"
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the single-pass HBM roofline this schedule reaches
+        (1.0 == the data set crosses HBM exactly once in + once out)."""
+        return 1.0 / self.passes
+
+    def row(self) -> str:
+        return (f"kernel_roofline,{self.case},{self.method},{self.passes},"
+                f"{self.hbm_bytes},{self.ai:.4f},{self.t_mem_us:.1f},"
+                f"{self.t_compute_us:.2f},{self.bound},"
+                f"{self.roofline_frac:.3f}")
+
+
+def kernel_cases(levels_list=((20,), (10, 10), (7, 7, 6), (5, 5, 5, 5),
+                              (3, 3, 3, 3, 3, 3, 2, 2, 2, 2))):
+    rows = []
+    for lv in levels_list:
+        d = len(lv)
+        case = f"l={lv}"
+        gb = grid_bytes(lv)
+        fl = flops_exact(lv)
+        # paper-faithful: d passes (pole kernel per dimension)
+        rows.append(KernelProjection(case, "pole_paper", d,
+                                     hierarchization_bytes(lv), fl))
+        # beyond-paper fused: 2 passes for d >= 2 (1 if d == 1)
+        passes = 1 if d == 1 else 2
+        # matmul variant executes 2*N flops per output elem per axis
+        mm_flops = sum(2 * ((1 << li) - 1) * (gb // 8) for li in lv)
+        rows.append(KernelProjection(case, "fused_mxu", passes,
+                                     hierarchization_bytes(lv, passes=passes),
+                                     mm_flops))
+    return rows
+
+
+HEADER = ("bench,case,method,passes,hbm_bytes,flops_per_byte,t_mem_us,"
+          "t_compute_us,bound,frac_of_1pass_roofline")
+
+
+def main():
+    print(HEADER)
+    for r in kernel_cases():
+        print(r.row())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""§Roofline table: read the dry-run artifacts and print the three terms
+per (arch x shape x mesh) cell.
+
+  python -m benchmarks.roofline [--dir results/dryrun] [--mesh single]
+  python -m benchmarks.roofline --pick   # the 3 hillclimb cells (§Perf)
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.analysis import TPU_V5E, Roofline
+
+HEADER = ("cell,chips,compute_s,memory_s,collective_s,bottleneck,step_s,"
+          "model_flops,useful_ratio,mfu_at_roofline")
+
+
+def load(dir_: str, mesh: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if not r.get("ok"):
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def to_roofline(r: dict) -> Roofline:
+    return Roofline(cell=r["cell"], chips=r["chips"], hw=TPU_V5E,
+                    flops_per_device=r["flops_per_device"],
+                    bytes_per_device=r["bytes_per_device"],
+                    collective_per_device=r["collective_bytes"],
+                    model_flops_global=r["model_flops"])
+
+
+def fmt(rl: Roofline) -> str:
+    return (f"{rl.cell},{rl.chips},{rl.compute_s:.4e},{rl.memory_s:.4e},"
+            f"{rl.collective_s:.4e},{rl.bottleneck},{rl.step_s:.4e},"
+            f"{rl.model_flops_global:.3e},{rl.useful_flops_ratio:.3f},"
+            f"{rl.mfu_roofline:.4f}")
+
+
+def pick_hillclimb(recs):
+    """The 3 §Perf cells: worst MFU-at-roofline among train cells, most
+    collective-bound, and the paper-representative cell (the biggest
+    all-reduce/gather consumer relative to compute = where the comm-
+    preprocessing insight matters most)."""
+    rls = [to_roofline(r) for r in recs]
+    train = [r for r in rls if "train" in r.cell]
+    worst_mfu = min(train, key=lambda r: r.mfu_roofline)
+    coll = max(rls, key=lambda r: r.collective_s / max(r.step_s, 1e-30))
+    ratio = lambda r: r.collective_s / max(r.compute_s, 1e-30)
+    rep = max(train, key=ratio)
+    picked = []
+    for r in (worst_mfu, coll, rep):
+        if r.cell not in [p.cell for p in picked]:
+            picked.append(r)
+    # backfill if dedup removed one
+    for r in sorted(train, key=lambda r: r.mfu_roofline):
+        if len(picked) >= 3:
+            break
+        if r.cell not in [p.cell for p in picked]:
+            picked.append(r)
+    return picked
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "all"])
+    ap.add_argument("--pick", action="store_true")
+    args = ap.parse_args(argv)
+    mesh = None if args.mesh == "all" else args.mesh
+    recs = load(args.dir, mesh)
+    if not recs:
+        print(f"# no dry-run artifacts in {args.dir} — run "
+              f"`python -m repro.launch.dryrun --all` first")
+        return
+    if args.pick:
+        print("# §Perf hillclimb cells "
+              "(worst-MFU / most-collective-bound / paper-representative):")
+        for rl in pick_hillclimb(recs):
+            print(fmt(rl))
+        return
+    print(HEADER)
+    for r in recs:
+        print(fmt(to_roofline(r)))
+
+
+if __name__ == "__main__":
+    main()

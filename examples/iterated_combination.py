@@ -1,0 +1,57 @@
+"""The iterated combination technique (paper Fig. 2) on the heat equation.
+
+Every round: t solver steps on each combination grid -> hierarchize ->
+gather -> scatter -> dehierarchize.  Prints the max error of the combined
+solution against the exact separable solution after every round.
+
+Run:  PYTHONPATH=src python examples/iterated_combination.py [--dim 2]
+"""
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.iterated import IteratedCombination
+from repro.core.levels import CombinationScheme
+from repro.core.pde import heat_exact_factor, heat_init, heat_run, stable_dt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dim", type=int, default=2)
+    ap.add_argument("--level", type=int, default=5)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--t-steps", type=int, default=8)
+    ap.add_argument("--nu", type=float, default=0.05)
+    ap.add_argument("--hier-method", default="auto",
+                    choices=["auto", "ref", "fused", "matmul", "gather"])
+    args = ap.parse_args(argv)
+
+    scheme = CombinationScheme(args.dim, args.level)
+    dt = min(stable_dt(ell, args.nu) for ell, _ in scheme.grids)
+    print(f"dim={args.dim} level={args.level}: {len(scheme.grids)} grids, "
+          f"dt={dt:.3e}")
+
+    it = IteratedCombination(
+        scheme,
+        lambda ell, u, steps: heat_run(u, steps, nu=args.nu, dt=dt),
+        hier_method=args.hier_method)
+    it.init(heat_init)
+
+    pts = jnp.asarray(np.random.default_rng(0).random((256, args.dim))
+                      * 0.8 + 0.1)
+    exact0 = np.prod(np.sin(np.pi * np.asarray(pts)), axis=1)
+    t = 0.0
+    for r in range(1, args.rounds + 1):
+        it.round(args.t_steps)
+        t += args.t_steps * dt
+        exact = heat_exact_factor(args.dim, args.nu, t) * exact0
+        approx = np.asarray(it.evaluate(pts))
+        err = np.max(np.abs(approx - exact))
+        print(f"round {r}: physical t={t:.4f}  max|err|={err:.3e}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the FULL published config;
+``get_smoke_config(arch_id)`` returns the reduced same-family config used
+by CPU smoke tests (small widths/depths, tiny vocab, same code paths).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig, SHAPES, SHAPE_BY_NAME  # noqa: F401
+
+ARCH_IDS: List[str] = [
+    "whisper_small",
+    "qwen3_moe_235b_a22b",
+    "olmoe_1b_7b",
+    "chatglm3_6b",
+    "glm4_9b",
+    "smollm_360m",
+    "codeqwen15_7b",
+    "xlstm_1_3b",
+    "zamba2_1_2b",
+    "llava_next_34b",
+]
+
+# assignment spec: long_500k only for sub-quadratic archs (DESIGN.md Sect. 5)
+LONG_CONTEXT_ARCHS = {"xlstm_1_3b", "zamba2_1_2b"}
+
+
+def _module(arch_id: str):
+    return importlib.import_module(f"repro.configs.{arch_id}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).smoke_config()
+
+
+def shape_cells(arch_id: str):
+    """The (shape,) cells this arch runs (assignment skip rules applied)."""
+    out = []
+    for s in SHAPES:
+        if s.name == "long_500k" and arch_id not in LONG_CONTEXT_ARCHS:
+            continue  # full attention at 500k: skipped per assignment
+        out.append(s)
+    return out

@@ -1,0 +1,61 @@
+"""Measured-best launch configuration per architecture (EXPERIMENTS.md §Perf).
+
+These are the variants that won their hypothesis→measure cycles on the
+dry-run roofline; ``repro.launch.dryrun --tuned`` applies them.  Every
+entry cites the §Perf iteration that measured it.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+__all__ = ["tuned_variant"]
+
+# shared recipes (attn_chunk: traffic ∝ n_chunks, §Perf B6/B8 — train at
+# seq 4096 runs unchunked; prefill_32k keeps 2048)
+_DENSE = {"train": {"act_shard": "sp", "attn_chunk": 4096},
+          "prefill": {"act_shard": "sp", "attn_chunk": 2048},
+          "decode": {}}
+_MOE = {"moe_impl": "ep", "capacity_factor": 1.25,       # §Perf A1+A3+A5
+        "act_shard": "sp"}
+
+_TUNED: Dict[str, Dict] = {
+    # dense GQA family — sequence-sharded residual + bigger KV chunks
+    "chatglm3_6b": dict(_DENSE),
+    "glm4_9b": dict(_DENSE),
+    "codeqwen15_7b": dict(_DENSE),
+    # smollm: 15 heads have NO power-of-two factor — TP replicates its
+    # attention 16x.  The measured-best factorization is shape-dependent:
+    # train (batch 256) goes DP-only (64.6 -> 4.4 s, 14.7x); prefill
+    # (batch 32) caps DP at 32 (63.3 -> 31.7 s); decode keeps the default.
+    "smollm_360m": {"train": {"mesh_shape": "256x1", "act_shard": "sp"},
+                    "prefill": {"mesh_shape": "32x8"},
+                    "decode": {}},
+    # MoE family — expert-parallel dispatch (§Perf A)
+    "qwen3_moe_235b_a22b": dict(_MOE),
+    "olmoe_1b_7b": {"moe_impl": "ep", "capacity_factor": 1.25},
+    # llava: 56/8 head geometry caps clean TP at 8 — refactor the pod
+    # (§Perf C4: 2.46x, collective -35x)
+    "llava_next_34b": {"mesh_shape": "32x8"},
+    # SSM / hybrid / enc-dec: baseline is already the best measured config
+    "xlstm_1_3b": {},
+    "zamba2_1_2b": {},
+    "whisper_small": {},
+}
+
+
+def tuned_variant(arch_id: str, shape_kind: str = "train") -> Dict:
+    """The §Perf-winning variant for ``arch_id`` (may be empty).
+
+    ``mesh_shape`` entries only apply to the single-pod mesh; decode cells
+    drop ``attn_chunk`` (decode attention is not chunk-scanned) and
+    ``mesh_shape`` (measured 0.80x on llava decode: the KV-cache layout
+    prefers the default factorization).
+    """
+    v = dict(_TUNED.get(arch_id, {}))
+    if set(v) & {"train", "prefill", "decode"}:     # shape-keyed entry
+        v = dict(v.get(shape_kind, {}))
+    if shape_kind == "decode":
+        v.pop("attn_chunk", None)
+        v.pop("mesh_shape", None)
+    return v

@@ -1,0 +1,17 @@
+"""The paper's contribution: hierarchization for the sparse grid combination
+technique, as a composable JAX library.
+
+Layer map (DESIGN.md Sect. 3):
+  levels        — level-vector algebra, combination coefficients, flop counts
+  hierarchize   — layout strategies + (de)hierarchization entry points
+  combination   — gather/scatter communication phase (subspace + embedded)
+  interpolation — nodal / hierarchical-basis evaluation (validation anchor)
+  pde           — the black-box solvers of the compute phase
+  iterated      — the iterated combination technique driver
+  distributed   — shard_map comm phase + grid-group placement
+"""
+
+from repro.core.hierarchize import dehierarchize, hierarchize  # noqa: F401
+from repro.core.levels import (CombinationScheme, combination_grids,  # noqa: F401
+                               flops_eq1, flops_exact, grid_shape,
+                               hierarchization_bytes, muls_reduced, num_points)

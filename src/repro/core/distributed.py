@@ -1,0 +1,148 @@
+"""Distributed combination technique: shard_map comm phase + grid placement.
+
+Parallelism layers (DESIGN.md Sect. 4):
+
+  * across combination grids — the paper's "very coarse" parallelism: each
+    grid is solved by one device group; ``plan_grid_groups`` does the
+    load-balanced placement (LPT on grid points).
+  * within a grid — pole-parallel hierarchization: sharding any non-working
+    axis needs NO communication; only the transform along the sharded axis
+    itself communicates.  ``hierarchize_sharded`` shards axis 0, runs the
+    fused tail transform locally and realizes the axis-0 transform as
+    (local operator rows) @ (all-gathered poles) — one all-gather of the
+    grid per full d-dimensional hierarchization.
+  * the communication phase — in the hierarchical basis the gather step is
+    ONE weighted psum of surpluses embedded in a common fine grid
+    (``gather_full_psum``); the scatter step is a local strided read.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.levels import CombinationScheme, LevelVector, num_points
+from repro.kernels.hierarchize import _padded_operator  # shared constant builder
+from repro.kernels.ops import hierarchize as hier_local
+
+__all__ = ["plan_grid_groups", "hierarchize_sharded", "gather_full_psum",
+           "comm_phase_sharded"]
+
+
+def plan_grid_groups(scheme: CombinationScheme, num_groups: int
+                     ) -> Tuple[Tuple[LevelVector, ...], ...]:
+    """Longest-processing-time placement of combination grids onto groups.
+
+    Returns a tuple of per-group tuples of level vectors.  Cost model is
+    grid points (solver work and hierarchization bytes are both linear in
+    points).
+    """
+    grids = sorted((ell for ell, _ in scheme.grids), key=num_points, reverse=True)
+    loads = [0] * num_groups
+    buckets: list[list[LevelVector]] = [[] for _ in range(num_groups)]
+    for ell in grids:
+        g = int(np.argmin(loads))
+        buckets[g].append(ell)
+        loads[g] += num_points(ell)
+    return tuple(tuple(b) for b in buckets)
+
+
+# ---------------------------------------------------------------------------
+# Pole-parallel hierarchization under shard_map
+# ---------------------------------------------------------------------------
+
+def hierarchize_sharded(x_padded: jnp.ndarray, level0: int, mesh: Mesh,
+                        axis_name: str) -> jnp.ndarray:
+    """Hierarchize a d-dim grid whose axis 0 is padded to 2**level0 and
+    sharded over ``axis_name``; remaining axes are unpadded (2**l - 1) and
+    replicated.
+
+    Communication: exactly one all-gather of the array (the axis-0
+    transform); the tail axes are transformed locally (fused kernel path).
+    """
+    n0p = x_padded.shape[0]
+    assert n0p == 1 << level0, "axis 0 must be padded to 2**level0"
+    nshards = mesh.shape[axis_name]
+    assert n0p % nshards == 0
+    shard = n0p // nshards
+    hmat = jnp.asarray(_padded_operator(level0, np.float32, npad=n0p),
+                       dtype=x_padded.dtype)
+
+    def local_fn(h, x_loc):
+        # tail axes: pole bundles are fully local -> no communication
+        if x_loc.ndim > 1:
+            x_loc = _hier_tail_local(x_loc)
+        # axis 0: rows of the operator live here, columns are all-gathered
+        xg = jax.lax.all_gather(x_loc, axis_name, axis=0, tiled=True)
+        i = jax.lax.axis_index(axis_name)
+        h_rows = jax.lax.dynamic_slice_in_dim(h, i * shard, shard, axis=0)
+        return jnp.tensordot(h_rows, xg, axes=[[1], [0]]).astype(x_loc.dtype)
+
+    def _hier_tail_local(x_loc):
+        for ax in range(1, x_loc.ndim):
+            moved = jnp.moveaxis(x_loc, ax, 0)
+            from repro.kernels.ref import hierarchize_1d_ref
+            moved = hierarchize_1d_ref(moved, axis=0)
+            x_loc = jnp.moveaxis(moved, 0, ax)
+        return x_loc
+
+    spec = P(axis_name, *([None] * (x_padded.ndim - 1)))
+    fn = jax.shard_map(partial(local_fn, hmat), mesh=mesh,
+                       in_specs=(spec,), out_specs=spec, check_vma=False)
+    return fn(x_padded)
+
+
+# ---------------------------------------------------------------------------
+# Communication phase across grid groups
+# ---------------------------------------------------------------------------
+
+def gather_full_psum(embedded: jnp.ndarray, coeff: jnp.ndarray, mesh: Mesh,
+                     axis_name: str) -> jnp.ndarray:
+    """Gather step over grid groups: combined = psum_g coeff_g * embedded_g.
+
+    ``embedded``: (G, *full_shape) — group g's hierarchized surpluses already
+    embedded in the common fine grid (zero where the grid has no node);
+    sharded over ``axis_name``.  Returns the replicated combined buffer.
+    """
+    def local_fn(e_loc, c_loc):
+        contrib = jnp.tensordot(c_loc, e_loc, axes=[[0], [0]])
+        return jax.lax.psum(contrib, axis_name)
+
+    in_specs = (P(axis_name, *([None] * (embedded.ndim - 1))), P(axis_name))
+    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=P(*([None] * (embedded.ndim - 1))),
+                       check_vma=False)
+    return fn(embedded, coeff)
+
+
+def comm_phase_sharded(hier_grids, scheme: CombinationScheme, mesh: Mesh,
+                       axis_name: str, full_levels: Sequence[int] | None = None):
+    """Full communication phase with the gather realized as a psum.
+
+    Single-controller convenience wrapper: embeds every grid, stacks,
+    psums over the grid axis, extracts per grid.  In a multi-controller
+    deployment each group computes only its own embed/extract.
+    """
+    from repro.core.combination import embed_to_full, extract_from_full
+    if full_levels is None:
+        d = scheme.dim
+        full_levels = tuple(max(ell[i] for ell, _ in scheme.grids)
+                            for i in range(d))
+    ells = [ell for ell, _ in scheme.grids]
+    coeffs = jnp.asarray([float(c) for _, c in scheme.grids])
+    emb = jnp.stack([embed_to_full(hier_grids[ell], ell, full_levels)
+                     for ell in ells])
+    g = emb.shape[0]
+    nshards = mesh.shape[axis_name]
+    pad = (-g) % nshards
+    if pad:
+        emb = jnp.pad(emb, [(0, pad)] + [(0, 0)] * (emb.ndim - 1))
+        coeffs = jnp.pad(coeffs, (0, pad))
+    combined = gather_full_psum(emb, coeffs, mesh, axis_name)
+    return {ell: extract_from_full(combined, ell, full_levels) for ell in ells}

@@ -1,0 +1,86 @@
+"""Core-level hierarchization façade: layout strategies of the paper.
+
+Re-exports the kernel entry points and adds the BFS (level-major) data
+layout of the paper (Fig. 3 middle) so benchmarks can compare layouts
+faithfully.  On TPU the BFS layout is shown to be layout-neutral (DESIGN.md
+Sect. 6 item 2): the VMEM-staged kernels read the pole bundle contiguously
+from HBM either way — the benchmark quantifies this.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.ops import dehierarchize, hierarchize  # re-export  # noqa: F401
+
+__all__ = [
+    "hierarchize", "dehierarchize",
+    "to_bfs", "from_bfs", "hierarchize_1d_bfs",
+]
+
+
+@functools.lru_cache(maxsize=64)
+def _bfs_perms(level: int):
+    perm = ref.bfs_permutation(level)          # bfs position -> nodal index
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.size)           # nodal index -> bfs position
+    return perm, inv
+
+
+def to_bfs(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Reorder ``axis`` from nodal (row-major grid) to BFS (level-major)."""
+    level = int(np.log2(x.shape[axis] + 1))
+    perm, _ = _bfs_perms(level)
+    return jnp.take(x, jnp.asarray(perm), axis=axis)
+
+
+def from_bfs(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    level = int(np.log2(x.shape[axis] + 1))
+    _, inv = _bfs_perms(level)
+    return jnp.take(x, jnp.asarray(inv), axis=axis)
+
+
+@functools.lru_cache(maxsize=64)
+def _bfs_predecessors(level: int):
+    """Predecessor indices/masks expressed in BFS coordinates."""
+    li, ri, ml, mr = ref.predecessor_indices(level)
+    perm, inv = _bfs_perms(level)
+    # node at bfs position k is nodal index perm[k]; its predecessor nodal
+    # indices are li/ri[perm[k]], living at bfs positions inv[...]
+    return inv[li[perm]], inv[ri[perm]], ml[perm], mr[perm]
+
+
+def hierarchize_1d_bfs(x_bfs: jnp.ndarray, axis: int = -1,
+                       reverse: bool = False) -> jnp.ndarray:
+    """Hierarchize data already stored in (reverse-)BFS layout.
+
+    Level-by-level access is contiguous in this layout: level ``lam``
+    occupies the range [2**(lam-1)-1, 2**lam-1).  ``reverse=True`` emulates
+    the paper's Reverse-BFS (finest level first), which the paper measured
+    ~50% slower; here it only flips the ranges.
+    """
+    n = x_bfs.shape[axis]
+    level = int(np.log2(n + 1))
+    li, ri, ml, mr = _bfs_predecessors(level)
+    if reverse:
+        flip = np.arange(n)[::-1]
+        x_bfs = jnp.take(x_bfs, jnp.asarray(flip.copy()), axis=axis)
+        inv_flip = np.empty(n, dtype=np.int64)
+        inv_flip[flip] = np.arange(n)
+        li, ri = inv_flip[li][flip], inv_flip[ri][flip]
+        ml, mr = ml[flip], mr[flip]
+    x = jnp.moveaxis(x_bfs, axis, -1)
+    shape = (1,) * (x.ndim - 1) + (n,)
+    mlj = jnp.asarray(ml, x.dtype).reshape(shape)
+    mrj = jnp.asarray(mr, x.dtype).reshape(shape)
+    xl = jnp.take(x, jnp.asarray(li), axis=-1)
+    xr = jnp.take(x, jnp.asarray(ri), axis=-1)
+    out = x - 0.5 * (mlj * xl + mrj * xr)
+    out = jnp.moveaxis(out, -1, axis)
+    if reverse:
+        out = jnp.take(out, jnp.asarray(np.arange(n)[::-1].copy()), axis=axis)
+    return out

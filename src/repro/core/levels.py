@@ -1,0 +1,200 @@
+"""Level vectors, combination coefficients and flop counts.
+
+Conventions (paper, Sect. 2):
+  * A 1-D grid of refinement level ``l >= 1`` has ``2**l - 1`` interior points
+    (no boundary points; level 1 is the single midpoint).
+  * A combination grid is described by its level vector ``ell in N^d``.
+  * The regular sparse grid of level ``n`` in ``d`` dims is combined from the
+    grids with ``|ell|_1 in {n+d-1, ..., n}`` via inclusion-exclusion
+    (Griebel/Schneider/Zenger 1992):
+
+        u_n = sum_{q=0}^{d-1} (-1)^q C(d-1, q) sum_{|ell|_1 = n+d-1-q} u_ell
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass
+from functools import reduce
+from typing import Iterator, Sequence, Tuple
+
+LevelVector = Tuple[int, ...]
+
+
+def points_per_dim(level: int) -> int:
+    """Number of grid points along one axis of refinement ``level``."""
+    if level < 1:
+        raise ValueError(f"refinement level must be >= 1, got {level}")
+    return (1 << level) - 1
+
+
+def grid_shape(levels: Sequence[int]) -> Tuple[int, ...]:
+    """Array shape of the combination grid with level vector ``levels``."""
+    return tuple(points_per_dim(l) for l in levels)
+
+
+def num_points(levels: Sequence[int]) -> int:
+    return reduce(lambda a, b: a * b, grid_shape(levels), 1)
+
+
+def grid_bytes(levels: Sequence[int], dtype_bytes: int = 8) -> int:
+    return num_points(levels) * dtype_bytes
+
+
+def level_sums(levels: Sequence[int]) -> int:
+    return int(sum(levels))
+
+
+# ---------------------------------------------------------------------------
+# Enumeration of level vectors
+# ---------------------------------------------------------------------------
+
+def level_vectors_with_sum(dim: int, levelsum: int, min_level: int = 1) -> Iterator[LevelVector]:
+    """All level vectors ``ell >= min_level`` (componentwise) with |ell|_1 == levelsum."""
+    if dim == 1:
+        if levelsum >= min_level:
+            yield (levelsum,)
+        return
+    for first in range(min_level, levelsum - (dim - 1) * min_level + 1):
+        for rest in level_vectors_with_sum(dim - 1, levelsum - first, min_level):
+            yield (first,) + rest
+
+
+def combination_grids(dim: int, level: int) -> Iterator[Tuple[LevelVector, int]]:
+    """(level_vector, coefficient) pairs of the classical combination technique.
+
+    ``level`` is the sparse grid level ``n`` (target 1-D resolution); the
+    diagonal cuts are ``|ell|_1 = n + d - 1 - q`` for ``q = 0..d-1`` with
+    coefficient ``(-1)^q * C(d-1, q)``.
+    """
+    if level < 1:
+        raise ValueError("sparse grid level must be >= 1")
+    for q in range(min(dim, level)):
+        coeff = (-1) ** q * math.comb(dim - 1, q)
+        for ell in level_vectors_with_sum(dim, level + dim - 1 - q):
+            yield ell, coeff
+
+
+def sparse_grid_subspaces(dim: int, level: int) -> Iterator[LevelVector]:
+    """Hierarchical subspaces W_m contained in the regular sparse grid."""
+    for m in level_vectors_with_sum_at_most(dim, level + dim - 1):
+        yield m
+
+
+def level_vectors_with_sum_at_most(dim: int, max_sum: int) -> Iterator[LevelVector]:
+    for s in range(dim, max_sum + 1):
+        yield from level_vectors_with_sum(dim, s)
+
+
+def subspaces_of_grid(levels: Sequence[int]) -> Iterator[LevelVector]:
+    """All hierarchical subspaces W_m with m <= levels componentwise."""
+    ranges = [range(1, l + 1) for l in levels]
+    yield from (tuple(m) for m in itertools.product(*ranges))
+
+
+def subspace_num_points(m: Sequence[int]) -> int:
+    return reduce(lambda a, b: a * b, (1 << (mi - 1) for mi in m), 1)
+
+
+def subspace_slices(m: Sequence[int], levels: Sequence[int]) -> Tuple[slice, ...]:
+    """Strided slices extracting subspace W_m from the nodal-layout array of a
+    combination grid with level vector ``levels``.
+
+    Along axis i, level-m_i nodes sit at positions (2k+1)*2**(l_i - m_i),
+    i.e. 0-based indices 2**(l_i - m_i) - 1 :: 2**(l_i - m_i + 1).
+    """
+    out = []
+    for mi, li in zip(m, levels):
+        if mi > li:
+            raise ValueError(f"subspace level {mi} > grid level {li}")
+        step = 1 << (li - mi)
+        out.append(slice(step - 1, None, 2 * step))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Flop counts
+# ---------------------------------------------------------------------------
+
+def _prod_other(levels: Sequence[int], i: int) -> int:
+    return reduce(lambda a, b: a * b,
+                  ((1 << lj) - 1 for j, lj in enumerate(levels) if j != i), 1)
+
+
+def flops_eq1(levels: Sequence[int]) -> int:
+    """Paper Eq. (1), verbatim.  Used for 'calculated performance' plots."""
+    return 2 * sum(((1 << li) - 2 * li - 2) * _prod_other(levels, i)
+                   for i, li in enumerate(levels))
+
+
+def predecessor_edges_1d(level: int) -> int:
+    """Exact number of (node, predecessor) pairs in one pole: 2^{l+1}-2l-2."""
+    return (1 << (level + 1)) - 2 * level - 2
+
+
+def flops_exact(levels: Sequence[int]) -> int:
+    """Instrumented flop count of Alg. 1 as written: 1 add + 1 mul per
+    predecessor edge.  Exactly 2x Eq. (1); see DESIGN.md Sect. 1."""
+    return 2 * sum(predecessor_edges_1d(li) * _prod_other(levels, i)
+                   for i, li in enumerate(levels))
+
+
+def muls_reduced(levels: Sequence[int]) -> int:
+    """Multiplications after the flop-count reduction (paper Sect. 3):
+    one multiply per updated node."""
+    return sum(((1 << li) - 2) * _prod_other(levels, i)
+               for i, li in enumerate(levels))
+
+
+def adds_exact(levels: Sequence[int]) -> int:
+    return flops_exact(levels) // 2
+
+
+def hierarchization_bytes(levels: Sequence[int], dtype_bytes: int = 8,
+                          passes: int | None = None) -> int:
+    """Minimum HBM traffic: one read + one write of the full grid per pass.
+
+    ``passes`` defaults to d (one pass per working dimension, the paper's
+    algorithm); fused kernels lower it (DESIGN.md Sect. 2).
+    """
+    d = len(levels)
+    if passes is None:
+        passes = d
+    return 2 * passes * grid_bytes(levels, dtype_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Dataclass used by benchmarks / examples
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CombinationScheme:
+    """The set of combination grids and coefficients for one sparse grid."""
+
+    dim: int
+    level: int
+
+    @property
+    def grids(self) -> Tuple[Tuple[LevelVector, int], ...]:
+        return tuple(combination_grids(self.dim, self.level))
+
+    @property
+    def subspaces(self) -> Tuple[LevelVector, ...]:
+        return tuple(sparse_grid_subspaces(self.dim, self.level))
+
+    def total_points(self) -> int:
+        return sum(num_points(ell) for ell, _ in self.grids)
+
+    def sparse_points(self) -> int:
+        return sum(subspace_num_points(m) for m in self.subspaces)
+
+    def validate_partition_of_unity(self) -> bool:
+        """Inclusion-exclusion sanity: every subspace of the sparse grid is
+        covered with total coefficient exactly 1."""
+        for m in self.subspaces:
+            tot = sum(c for ell, c in self.grids
+                      if all(mi <= li for mi, li in zip(m, ell)))
+            if tot != 1:
+                return False
+        return True

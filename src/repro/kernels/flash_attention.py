@@ -1,0 +1,139 @@
+"""Pallas TPU flash attention (forward, causal/full, GQA).
+
+Motivation (EXPERIMENTS.md §Perf, dense-train hillclimb): the HLO walk of
+the chatglm3 train cell shows ~3e12 B/device/step of attention-score
+traffic — `attention_chunked`'s lax.scan bounds PEAK memory but XLA still
+round-trips the (Sq x kv_chunk) scores and the online-softmax carry
+through HBM every chunk.  A flash kernel keeps scores, m/l stats and the
+output accumulator in VMEM across the whole KV sweep: per (q-block) the
+only HBM traffic is Q once, K/V once, O once.
+
+Layout: q (BH, Sq, hd), k/v (BH, Skv, hd) with GQA heads pre-broadcast by
+the wrapper (`flash_attention`); grid (BH, n_q, n_kv) with the KV sweep as
+the innermost grid dim and (m, l, acc) in VMEM scratch persisting across
+it.  Causal masking is positional (absolute indices), so it also serves
+decode (Sq=1 against a long cache).
+
+Validated in interpret mode against ``attention_naive`` in
+tests/test_flash_attention.py (shapes x dtypes x causal sweep).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention", "flash_attention_bhsd"]
+
+_NEG_INF = -1e30
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, sm_scale: float, block_q: int, block_k: int,
+            kv_len: int):
+    _, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * sm_scale          # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+
+    q_pos = i * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask = jnp.logical_and(mask, q_pos >= k_pos)
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]                                   # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                                # (bq, bk)
+    scale = jnp.exp(m_prev - m_new)                       # (bq, 1)
+    l_scr[...] = l_scr[...] * scale + jnp.sum(p, -1, keepdims=True)
+    m_scr[...] = m_new
+    v = v_ref[0].astype(jnp.float32)                      # (bk, hd)
+    acc_scr[...] = acc_scr[...] * scale + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         block_q: int = 512, block_k: int = 512,
+                         interpret: bool | None = None) -> jnp.ndarray:
+    """q: (BH, Sq, hd); k/v: (BH, Skv, hd) — heads already expanded."""
+    if interpret is None:
+        interpret = _interpret_default()
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    sm_scale = hd ** -0.5
+    block_q = min(block_q, max(8, sq))
+    block_k = min(block_k, max(128, skv))
+    pad_q = (-sq) % block_q
+    pad_k = (-skv) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    nq, nk = q.shape[1] // block_q, k.shape[1] // block_k
+    kernel = functools.partial(_kernel, causal=causal, sm_scale=sm_scale,
+                               block_q=block_q, block_k=block_k, kv_len=skv)
+    try:  # m, l, acc live in VMEM across the KV sweep (TPU memory space)
+        from jax.experimental.pallas import tpu as pltpu
+        scratch = [pltpu.VMEM((block_q, 1), jnp.float32),
+                   pltpu.VMEM((block_q, 1), jnp.float32),
+                   pltpu.VMEM((block_q, hd), jnp.float32)]
+    except (ImportError, AttributeError):
+        scratch = [pl.MemorySpace.ANY((block_q, 1), jnp.float32)] * 2 + \
+            [pl.MemorySpace.ANY((block_q, hd), jnp.float32)]
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Drop-in for ``attention_chunked``: q (B,Sq,H,hd), k/v (B,Skv,KV,hd)."""
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    groups = h // kv
+    qt = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, hd)
+    kt = jnp.moveaxis(jnp.repeat(k, groups, axis=2), 2, 1).reshape(
+        b * h, skv, hd)
+    vt = jnp.moveaxis(jnp.repeat(v, groups, axis=2), 2, 1).reshape(
+        b * h, skv, hd)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return jnp.moveaxis(out.reshape(b, h, sq, hd), 1, 2)

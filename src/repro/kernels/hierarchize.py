@@ -1,0 +1,318 @@
+"""Pallas TPU kernels for (de)hierarchization.
+
+TPU adaptation of the paper's BFS-OverVectorized kernel (DESIGN.md Sect. 2):
+
+* ``pole``   — the paper-faithful kernel: the working dimension lives on
+  sublanes, *all* other dimensions are flattened onto lanes
+  ("over-vectorization" with a 128-wide VREG instead of a 4-wide AVX
+  register).  The fine-to-coarse level loop is unrolled at trace time and
+  runs entirely in VMEM on a (pole_len x lane_tile) block.
+
+* ``matmul`` — the beyond-paper MXU formulation: 1-D hierarchization is a
+  constant linear operator H with <=3 nonzeros per row, so the whole pole
+  transform is one (N x N) @ (N x lanes) matmul.  For N <= ~1900 the dense
+  matmul is still HBM-bound on v5e (2*N^2*B flops vs 16*N*B bytes crosses
+  the 197 TFLOP/s / 819 GB/s ridge at N ~ 1924), i.e. the "wasted" flops
+  are free and all gathers/branches disappear.
+
+* ``fused`` — beyond-paper: apply the operator along *several* axes per
+  HBM round-trip while the block is VMEM-resident.  Any d-dimensional grid
+  is hierarchized in 2 round trips (tail axes fused while tiling axis 0,
+  then axis 0 while tiling the lanes) instead of d.
+
+All kernels are validated in ``interpret=True`` mode against
+``repro.kernels.ref`` (CPU container; TPU is the compilation target).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+__all__ = [
+    "hier_pole_pallas",
+    "dehier_pole_pallas",
+    "apply_axis_matmul_pallas",
+    "hier_fused_tail_pallas",
+    "hier_axis0_pallas",
+    "hierarchize_nd_fused",
+    "dehierarchize_nd_fused",
+]
+
+_LANE = 128
+_SUBLANE = 8
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _level_of(n: int) -> int:
+    level = int(np.log2(n + 1))
+    if (1 << level) - 1 != n:
+        raise ValueError(f"axis length {n} is not 2**l - 1")
+    return level
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _padded_operator(level: int, dtype, inverse: bool = False,
+                     npad: int | None = None) -> np.ndarray:
+    """(npad, npad) operator with identity on the padding rows/cols."""
+    n = (1 << level) - 1
+    if npad is None:
+        npad = _round_up(n, _SUBLANE)
+    h = ref.dehier_operator_matrix(level) if inverse else ref.operator_matrix(level)
+    out = np.eye(npad)
+    out[:n, :n] = h
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pole kernel (paper-faithful: over-vectorization across lanes)
+# ---------------------------------------------------------------------------
+
+def _pole_kernel(x_ref, o_ref, *, level: int, reduced_op: bool):
+    """Unrolled fine-to-coarse level loop on a (Npad, T) VMEM block.
+
+    The strided level access of the nodal (``Ind``) layout is free inside
+    VMEM; branches are replaced by the static slice structure itself
+    (pre-branching is implicit: the first/last node of each level use the
+    zero-padded predecessor column).
+    """
+    x = x_ref[...]
+    zero = jnp.zeros((1,) + x.shape[1:], x.dtype)
+    for lam in range(level, 1, -1):
+        s = 1 << (level - lam)
+        odd = x[s - 1::2 * s]
+        even = x[2 * s - 1::2 * s][: odd.shape[0] - 1]
+        left = jnp.concatenate([zero, even], axis=0)
+        right = jnp.concatenate([even, zero], axis=0)
+        if reduced_op:
+            upd = odd - 0.5 * (left + right)
+        else:
+            upd = odd - 0.5 * left - 0.5 * right
+        x = x.at[s - 1::2 * s].set(upd)
+    o_ref[...] = x
+
+
+def hier_pole_pallas(x: jnp.ndarray, *, lane_tile: int = _LANE,
+                     reduced_op: bool = True,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Hierarchize along axis 0 of a (N, B) pole bundle.
+
+    N = 2**l - 1 poles points (sublanes), B poles (lanes).  One grid step
+    stages a (Npad, lane_tile) block HBM->VMEM, runs all levels, writes back:
+    exactly one HBM round trip, the paper's flat-performance property.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    n, b = x.shape
+    level = _level_of(n)
+    if level == 1:
+        return x
+    npad = _round_up(n, _SUBLANE)
+    bpad = _round_up(b, lane_tile)
+    xp = jnp.pad(x, ((0, npad - n), (0, bpad - b)))
+    kernel = functools.partial(_pole_kernel, level=level, reduced_op=reduced_op)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bpad // lane_tile,),
+        in_specs=[pl.BlockSpec((npad, lane_tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((npad, lane_tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((npad, bpad), x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:n, :b]
+
+
+def _dehier_pole_kernel(a_ref, o_ref, *, level: int):
+    """Inverse transform: coarse-to-fine level loop on a (Npad, T) block.
+
+    Unlike hierarchization (embarrassingly parallel across nodes), the
+    inverse is sequential in LEVEL (children need their parents' final
+    values) — but still fully lane-parallel across poles, and the whole
+    log-depth loop runs on one VMEM-resident block (1 HBM round trip)."""
+    a = a_ref[...]
+    zero = jnp.zeros((1,) + a.shape[1:], a.dtype)
+    for lam in range(2, level + 1):
+        s = 1 << (level - lam)
+        odd = a[s - 1::2 * s]
+        even = a[2 * s - 1::2 * s][: odd.shape[0] - 1]
+        left = jnp.concatenate([zero, even], axis=0)
+        right = jnp.concatenate([even, zero], axis=0)
+        a = a.at[s - 1::2 * s].set(odd + 0.5 * (left + right))
+    o_ref[...] = a
+
+
+def dehier_pole_pallas(a: jnp.ndarray, *, lane_tile: int = _LANE,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Dehierarchize along axis 0 of a (N, B) pole bundle (inverse of
+    ``hier_pole_pallas``; same BlockSpec tiling, same single round trip)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n, b = a.shape
+    level = _level_of(n)
+    if level == 1:
+        return a
+    npad = _round_up(n, _SUBLANE)
+    bpad = _round_up(b, lane_tile)
+    ap = jnp.pad(a, ((0, npad - n), (0, bpad - b)))
+    kernel = functools.partial(_dehier_pole_kernel, level=level)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bpad // lane_tile,),
+        in_specs=[pl.BlockSpec((npad, lane_tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((npad, lane_tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((npad, bpad), a.dtype),
+        interpret=interpret,
+    )(ap)
+    return out[:n, :b]
+
+
+# ---------------------------------------------------------------------------
+# Matmul (MXU) kernel: one axis per call
+# ---------------------------------------------------------------------------
+
+def _matmul_kernel(h_ref, x_ref, o_ref):
+    o_ref[...] = jnp.dot(h_ref[...], x_ref[...],
+                         preferred_element_type=o_ref.dtype)
+
+
+def apply_axis_matmul_pallas(x: jnp.ndarray, *, inverse: bool = False,
+                             lane_tile: int = 512,
+                             interpret: bool | None = None) -> jnp.ndarray:
+    """(De)hierarchize along axis 0 of a (N, B) bundle via one MXU matmul."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n, b = x.shape
+    level = _level_of(n)
+    if level == 1:
+        return x
+    npad = _round_up(n, _SUBLANE)
+    lane_tile = min(lane_tile, _round_up(b, _LANE))
+    bpad = _round_up(b, lane_tile)
+    hmat = jnp.asarray(_padded_operator(level, np.float32, inverse=inverse),
+                       dtype=x.dtype if x.dtype != jnp.bfloat16 else jnp.float32)
+    xp = jnp.pad(x, ((0, npad - n), (0, bpad - b)))
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(bpad // lane_tile,),
+        in_specs=[
+            pl.BlockSpec((npad, npad), lambda i: (0, 0)),
+            pl.BlockSpec((npad, lane_tile), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((npad, lane_tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((npad, bpad), x.dtype),
+        interpret=interpret,
+    )(hmat, xp)
+    return out[:n, :b]
+
+
+# ---------------------------------------------------------------------------
+# Fused kernels: several axes per HBM round trip
+# ---------------------------------------------------------------------------
+
+def _fused_tail_kernel(x_ref, *refs, inverse: bool):
+    """Apply per-axis operators to axes 1..d-1 of a (R, N2, ..., Nd) block.
+
+    The block stays VMEM-resident across all axis transforms — this is the
+    fusion the paper's CPU caches could not hold (DESIGN.md Sect. 2 item 5).
+    For dehierarchization the axes commute as well (the operator is a tensor
+    product), so order is irrelevant.
+
+    Pallas passes all input refs first, then the output ref.
+    """
+    ops, o_ref = refs[:-1], refs[-1]
+    x = x_ref[...]
+    for axis_off, h_ref in enumerate(ops):
+        axis = 1 + axis_off
+        h = h_ref[...]
+        # contract the operator with axis `axis`; result axis comes first
+        x = jnp.tensordot(h, x, axes=[[1], [axis]])
+        # restore axis order
+        x = jnp.moveaxis(x, 0, axis)
+    o_ref[...] = x
+
+
+def hier_fused_tail_pallas(x: jnp.ndarray, *, inverse: bool = False,
+                           row_tile: int | None = None,
+                           vmem_budget_bytes: int = 4 * 1024 * 1024,
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """(De)hierarchize axes 1..d-1 in ONE pass, tiling over axis 0."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if x.ndim < 2:
+        raise ValueError("need >= 2 dims; use apply_axis_matmul_pallas for 1-D")
+    shape = x.shape
+    levels = [_level_of(s) for s in shape]
+    pads = [_round_up(s, _SUBLANE if i < x.ndim - 1 else _LANE)
+            for i, s in enumerate(shape)]
+    # the per-axis operators must match the padded axis extents
+    op_pads = pads[1:]
+    tail_elems = int(np.prod(pads[1:]))
+    itemsize = jnp.dtype(x.dtype).itemsize
+    if row_tile is None:
+        row_tile = max(1, vmem_budget_bytes // max(1, tail_elems * itemsize * 2))
+        row_tile = min(_round_up(pads[0], 1), max(_SUBLANE, _round_up(row_tile, _SUBLANE)))
+        row_tile = min(row_tile, pads[0])
+    rpad = _round_up(pads[0], row_tile)
+    xp = jnp.pad(x, [(0, rpad - shape[0])] + [(0, p - s) for p, s in zip(pads[1:], shape[1:])])
+    ops_mats = [jnp.asarray(
+        _padded_operator(l, np.float32, inverse=inverse, npad=p),
+        dtype=x.dtype if x.dtype != jnp.bfloat16 else jnp.float32)
+        for l, p in zip(levels[1:], op_pads)]
+    ndim = x.ndim
+
+    def x_index(i):
+        return (i,) + (0,) * (ndim - 1)
+
+    in_specs = [pl.BlockSpec((row_tile,) + tuple(pads[1:]), x_index)]
+    for m in ops_mats:
+        in_specs.append(pl.BlockSpec(m.shape, lambda i: (0, 0)))
+    kernel = functools.partial(_fused_tail_kernel, inverse=inverse)
+    out = pl.pallas_call(
+        kernel,
+        grid=(rpad // row_tile,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((row_tile,) + tuple(pads[1:]), x_index),
+        out_shape=jax.ShapeDtypeStruct((rpad,) + tuple(pads[1:]), x.dtype),
+        interpret=interpret,
+    )(xp, *ops_mats)
+    return out[tuple(slice(0, s) for s in shape)]
+
+
+def hier_axis0_pallas(x: jnp.ndarray, *, inverse: bool = False,
+                      lane_tile: int = 512,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """(De)hierarchize axis 0 only, tiling the flattened trailing axes."""
+    shape = x.shape
+    flat = x.reshape(shape[0], -1)
+    out = apply_axis_matmul_pallas(flat, inverse=inverse, lane_tile=lane_tile,
+                                   interpret=interpret)
+    return out.reshape(shape)
+
+
+def hierarchize_nd_fused(x: jnp.ndarray, *, interpret: bool | None = None) -> jnp.ndarray:
+    """Full d-dim hierarchization in 2 HBM round trips (d>=2), 1 if d==1."""
+    if x.ndim == 1:
+        return apply_axis_matmul_pallas(x[:, None], interpret=interpret)[:, 0]
+    x = hier_fused_tail_pallas(x, interpret=interpret)
+    return hier_axis0_pallas(x, interpret=interpret)
+
+
+def dehierarchize_nd_fused(a: jnp.ndarray, *, interpret: bool | None = None) -> jnp.ndarray:
+    if a.ndim == 1:
+        return apply_axis_matmul_pallas(a[:, None], inverse=True,
+                                        interpret=interpret)[:, 0]
+    a = hier_fused_tail_pallas(a, inverse=True, interpret=interpret)
+    return hier_axis0_pallas(a, inverse=True, interpret=interpret)

@@ -1,0 +1,176 @@
+"""Roofline accounting from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell (EXPERIMENTS.md §Roofline):
+
+    compute_s    = HLO_FLOPs_per_device      / peak_FLOPs_per_chip
+    memory_s     = HLO_bytes_per_device      / HBM_bw_per_chip
+    collective_s = collective_bytes_per_dev  / link_bw_per_chip
+
+``compiled.cost_analysis()`` is the per-device (post-SPMD-partitioning)
+program, so dividing by per-chip peaks is equivalent to the global
+formula ``global_FLOPs / (chips * peak)``.
+
+``cost_analysis`` has no collective traffic, so ``collective_bytes``
+parses the optimized HLO text and sums **operand** bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(+ their -start async forms).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+__all__ = ["HW", "TPU_V5E", "collective_bytes", "roofline_from_artifacts",
+           "Roofline"]
+
+
+@dataclass(frozen=True)
+class HW:
+    """Per-chip hardware constants of the target (TPU v5e)."""
+    name: str
+    peak_flops: float          # FLOP/s (bf16)
+    hbm_bw: float              # B/s
+    link_bw: float             # B/s per ICI link
+
+
+TPU_V5E = HW(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one HLO op definition:  %name = TYPE op-name(OPERANDS), attrs
+_DEF_RE = re.compile(r"(?:^|\s)%([\w.\-]+)\s*=\s*(\(?[a-z0-9](?:[^=]*?)?)\s"
+                     r"([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^=]*?\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\s*\(([^)]*)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type (sums tuple elements)."""
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(type_str))
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of **operand** bytes per collective kind in an optimized HLO dump.
+
+    Modern HLO printers omit operand types on the op line, so this is a
+    two-pass parse: (1) name -> result bytes from every definition line,
+    (2) for each collective, sum the mapped operand names.  ``-done`` ops
+    repeat the ``-start`` payload and are skipped.
+    """
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if m:
+            sizes[m.group(1)] = _type_bytes(m.group(2))
+        else:  # parameters in computation headers: "name: f32[...]"
+            for pm in re.finditer(r"%?([\w.\-]+):\s*((?:\([^)]*\))|"
+                                  r"[a-z0-9]+\[[0-9,]*\][^,)]*)", line):
+                sizes.setdefault(pm.group(1), _type_bytes(pm.group(2)))
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group(2) == "-done":
+            continue
+        kind, operands = m.group(1), m.group(3)
+        total = 0
+        for om in _OPERAND_RE.finditer(operands):
+            total += sizes.get(om.group(1), 0)
+        if total == 0:  # fallback: inline-typed operands (older printers)
+            total = sum(_shape_bytes(d, s)
+                        for d, s in _SHAPE_RE.findall(operands))
+        out[kind] += total
+    return out
+
+
+@dataclass
+class Roofline:
+    cell: str
+    chips: int
+    hw: HW
+    flops_per_device: float
+    bytes_per_device: float
+    collective_per_device: Dict[str, int] = field(default_factory=dict)
+    model_flops_global: float = 0.0      # 6*N*D (or 2*N*D decode) analytic
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / self.hw.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / self.hw.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return sum(self.collective_per_device.values()) / self.hw.link_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step-time estimate: max of the three terms (perfect
+        overlap assumption; the sum is the no-overlap bound)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs(global) — remat/padding/routing waste."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu_roofline(self) -> float:
+        """Model-flops utilization AT the roofline estimate: what fraction of
+        the chips' peak the *useful* flops sustain if the step runs at
+        ``step_s``."""
+        denom = self.step_s * self.chips * self.hw.peak_flops
+        return self.model_flops_global / denom if denom else 0.0
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "cell": self.cell, "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck, "step_s": self.step_s,
+            "model_flops": self.model_flops_global,
+            "useful_ratio": self.useful_flops_ratio,
+            "mfu_roofline": self.mfu_roofline,
+        }
+
+
+def roofline_from_artifacts(cell: str, chips: int, cost: dict,
+                            coll: Dict[str, int], model_flops: float,
+                            hw: HW = TPU_V5E) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    return Roofline(cell=cell, chips=chips, hw=hw, flops_per_device=flops,
+                    bytes_per_device=byts, collective_per_device=coll,
+                    model_flops_global=model_flops)

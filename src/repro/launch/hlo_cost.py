@@ -1,0 +1,297 @@
+"""Scan-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` visits every computation ONCE — a
+``lax.scan``'d 94-layer stack therefore reports ~1/94th of the real
+flops (verified in tests/test_hlo_cost.py).  Since the dry-run programs
+scan over layers / KV chunks / SSD chunks, the naive numbers are useless
+for a roofline.  This module re-derives the three roofline inputs from
+the optimized HLO text itself:
+
+  1. parse computations + ops (name -> shape map per module),
+  2. build the call graph (fusion/call/while/conditional/to_apply edges),
+  3. infer while TRIP COUNTS from the loop-condition constant (scan bounds
+     are static in every dry-run program),
+  4. propagate execution multipliers from ENTRY,
+  5. accumulate per-op costs x multiplier:
+       * flops — exact 2*prod(out)*prod(contract) for dot ops (dimension
+         numbers parsed), prod(out) for elementwise,
+       * traffic — fusion-aware: a fusion moves its boundary operands +
+         result; ops INSIDE fused computations move nothing (that is the
+         TPU VMEM/register model),
+       * collective bytes — operand bytes of all-gather / all-reduce /
+         reduce-scatter / all-to-all / collective-permute.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloCost", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]+?\)?)\s+"
+                    r"([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|true_computation|false_computation)="
+    r"%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((-?\d+)\)")
+_TRIP_RE = re.compile(r"known_trip_count\\?\"?:\s*\{\\?\"?n\\?\"?:\\?\"?(\d+)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "after-all",
+               "iota", "partition-id", "replica-id", "custom-call"}
+_NO_FLOPS = _NO_TRAFFIC | {"copy", "transpose", "reshape", "broadcast",
+                           "slice", "dynamic-slice", "dynamic-update-slice",
+                           "concatenate", "gather", "scatter", "pad",
+                           "reverse", "convert", "reduce", "rng",
+                           "rng-bit-generator", "select", "compare"}
+
+
+def _parse_dims(dims: str) -> List[int]:
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            n = 1
+            for d in _parse_dims(dims):
+                n *= d
+            total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    total = 0
+    for _dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in _parse_dims(dims):
+            n *= d
+        total += n
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # operands + attributes (raw tail of the line)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    param_types: Dict[str, str] = field(default_factory=dict)
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for line in text.splitlines():
+        line = comment_re.sub("", line)   # /*index=5*/ breaks the op regex
+        if not line.strip():
+            continue
+        if not line.startswith(" "):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and "{" in line:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                # parameter types from the header signature
+                for pm in re.finditer(
+                        r"%?([\w.\-]+):\s*((?:\([^)]*\))|[a-z0-9]+"
+                        r"\[[0-9,]*\][^,)]*)", m.group(2)):
+                    cur.param_types[pm.group(1)] = pm.group(2)
+            elif line.startswith("}"):
+                cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur.ops.append(Op(m.group(1), m.group(2), m.group(3),
+                              m.group(4)))
+    return comps, entry
+
+
+def _while_trip_count(cond: Computation) -> int:
+    """Scan loops compare the induction variable against a constant bound;
+    take the largest integer constant in the condition computation."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            mm = re.search(r"constant\((-?\d+)\)", f"constant({op.rest}")
+            # constant ops print as: %c = s32[] constant(94)
+        m2 = _CONST_RE.search(f"{op.opcode}({op.rest}")
+        if m2:
+            best = max(best, int(m2.group(1)))
+    return max(best, 1)
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out_elems = _type_elems(op.type_str)
+    m = _DOT_DIMS_RE.search(op.rest)
+    contract = 1
+    if m:
+        dims = _parse_dims(m.group(1))
+        lhs_name_m = _OPERAND_RE.search(op.rest)
+        if lhs_name_m:
+            lhs_type = shapes.get(lhs_name_m.group(1), "")
+            sm = _SHAPE_RE.search(lhs_type)
+            if sm:
+                lhs_dims = _parse_dims(sm.group(2))
+                for d in dims:
+                    if d < len(lhs_dims):
+                        contract *= lhs_dims[d]
+    return 2.0 * out_elems * contract
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    while_trips: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_collective(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps, entry = _parse_computations(text)
+    if not entry:
+        # fall back: biggest computation
+        entry = max(comps, key=lambda c: len(comps[c].ops)) if comps else ""
+
+    # name -> type map (per computation, ops are SSA-unique module-wide in
+    # practice; collisions resolve to the latest definition which is fine
+    # for shape lookup)
+    shapes: Dict[str, str] = {}
+    for c in comps.values():
+        shapes.update(c.param_types)
+        for op in c.ops:
+            shapes[op.name] = op.type_str
+
+    # ---- call graph: (callee, multiplier_factor, fusion_internal) ----
+    edges: Dict[str, List[Tuple[str, int, bool]]] = {c: [] for c in comps}
+    for c in comps.values():
+        for op in c.ops:
+            callees = _CALL_ATTR_RE.findall(op.rest)
+            bm = _BRANCHES_RE.search(op.rest)
+            if bm:
+                callees += [x.strip().lstrip("%")
+                            for x in bm.group(1).split(",")]
+            if not callees:
+                continue
+            if op.opcode == "while":
+                body_m = re.search(r"body=%?([\w.\-]+)", op.rest)
+                cond_m = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                tm = _TRIP_RE.search(op.rest)
+                if tm:                               # XLA's own analysis
+                    trips = int(tm.group(1))
+                elif cond_m and cond_m.group(1) in comps:
+                    trips = _while_trip_count(comps[cond_m.group(1)])
+                else:
+                    trips = 1
+                if body_m and body_m.group(1) in comps:
+                    edges[c.name].append((body_m.group(1), trips, False))
+                if cond_m and cond_m.group(1) in comps:
+                    edges[c.name].append((cond_m.group(1), trips, False))
+            elif op.opcode == "fusion":
+                for callee in callees:
+                    if callee in comps:
+                        edges[c.name].append((callee, 1, True))
+            else:
+                for callee in callees:
+                    if callee in comps:
+                        edges[c.name].append((callee, 1, False))
+
+    # ---- propagate multipliers in topological order (HLO call graphs are
+    # DAGs); a computation's multiplier is the sum over callers of
+    # caller_mult x edge_factor, so all callers must be final first ----
+    reach = {entry}
+    stack = [entry]
+    while stack:
+        cur = stack.pop()
+        for callee, _f, _i in edges.get(cur, []):
+            if callee not in reach:
+                reach.add(callee)
+                stack.append(callee)
+    indeg: Dict[str, int] = {c: 0 for c in reach}
+    for c in reach:
+        for callee, _f, _i in edges.get(c, []):
+            if callee in reach:
+                indeg[callee] += 1
+    mult: Dict[str, float] = {c: 0.0 for c in reach}
+    internal: Dict[str, bool] = {c: True for c in reach}
+    mult[entry] = 1.0
+    internal[entry] = False
+    queue = [c for c in reach if indeg[c] == 0]
+    while queue:
+        cur = queue.pop()
+        for callee, factor, is_fusion in edges.get(cur, []):
+            if callee not in reach:
+                continue
+            mult[callee] += mult[cur] * factor
+            # traffic counts only if reachable via some non-fusion path
+            internal[callee] = internal[callee] and \
+                (internal[cur] or is_fusion)
+            indeg[callee] -= 1
+            if indeg[callee] == 0:
+                queue.append(callee)
+
+    cost = HloCost()
+    for cname, m in mult.items():
+        comp = comps[cname]
+        inside_fusion = internal[cname]
+        for op in comp.ops:
+            if op.opcode == "while":
+                cost.while_trips[op.name] = int(
+                    next((t for cal, t, _f in edges[cname]
+                          if cal == re.search(r"body=%?([\w.\-]+)",
+                                              op.rest).group(1)), 1)
+                    if "body=" in op.rest else 1)
+            # --- flops ---
+            if op.opcode in ("dot", "convolution"):
+                cost.flops += m * _dot_flops(op, shapes)
+            elif op.opcode not in _NO_FLOPS and op.opcode not in _COLLECTIVES:
+                cost.flops += m * _type_elems(op.type_str)
+            # --- collectives (operand bytes) ---
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+                operand_b = 0
+                paren = op.rest.split(")")[0]
+                for om in _OPERAND_RE.finditer(paren):
+                    operand_b += _type_bytes(shapes.get(om.group(1), ""))
+                cost.collective_bytes[base] += m * operand_b
+            # --- traffic (fusion-aware) ---
+            if not inside_fusion and op.opcode not in _NO_TRAFFIC:
+                b = _type_bytes(op.type_str)
+                paren = op.rest.split(")")[0]
+                for om in _OPERAND_RE.finditer(paren):
+                    b += _type_bytes(shapes.get(om.group(1), ""))
+                cost.traffic_bytes += m * b
+    return cost

@@ -1,0 +1,66 @@
+"""Re-derive roofline numbers from saved HLO dumps (no recompilation).
+
+  python -m repro.launch.reprocess --hlo-dir results/hlo --out results/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import SHAPE_BY_NAME, get_config
+from repro.launch.analysis import collective_bytes, roofline_from_artifacts
+from repro.launch.hlo_cost import analyze_hlo
+from repro.models.config import model_flops
+
+
+def reprocess(hlo_dir: str, out_dir: str) -> int:
+    n = 0
+    for path in sorted(glob.glob(os.path.join(hlo_dir, "*.hlo.txt"))):
+        cell = os.path.basename(path)[: -len(".hlo.txt")]
+        json_path = os.path.join(out_dir, cell + ".json")
+        if not os.path.exists(json_path):
+            continue
+        with open(json_path) as f:
+            rec = json.load(f)
+        if not rec.get("ok"):
+            continue
+        with open(path) as f:
+            hlo = f.read()
+        hc = analyze_hlo(hlo)
+        cfg = get_config(rec["arch"])
+        shape = SHAPE_BY_NAME[rec["shape"]]
+        rec["flops_per_device"] = hc.flops
+        rec["bytes_per_device"] = hc.traffic_bytes
+        rec["collective_bytes"] = {k: int(v)
+                                   for k, v in hc.collective_bytes.items()}
+        rec.setdefault("raw_cost_analysis", {})[
+            "collective_bytes_once"] = collective_bytes(hlo)
+        rec["while_trips"] = {k: int(v) for k, v in
+                              sorted(hc.while_trips.items())[:32]}
+        rec["model_flops"] = model_flops(cfg, shape)
+        rl = roofline_from_artifacts(cell, rec["chips"],
+                                     {"flops": hc.flops,
+                                      "bytes accessed": hc.traffic_bytes},
+                                     rec["collective_bytes"],
+                                     rec["model_flops"])
+        rec["roofline"] = rl.row()
+        with open(json_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    return n
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--hlo-dir", default="results/hlo")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+    n = reprocess(args.hlo_dir, args.out)
+    print(f"reprocessed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

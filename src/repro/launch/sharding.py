@@ -1,0 +1,182 @@
+"""PartitionSpec rules: DP / TP / EP / ZeRO-1 over the production mesh.
+
+Policy (DESIGN.md Sect. 4):
+
+* params — TP on the ``model`` axis: projections shard their flattened
+  head/ff output dim (all assigned configs have h*hd and d_ff divisible by
+  16); second projections shard the input dim; MoE experts shard the
+  expert dim (EP); embeddings/logits shard the vocab dim.
+* optimizer state — ZeRO-1: each m/v leaf additionally shards its first
+  still-unsharded divisible dim over ``data``.
+* activations — batch over (pod, data) when divisible (the long_500k cell
+  has batch 1 and replicates); decode caches shard batch over ``data`` and
+  head_dim over ``model``.
+
+Everything degrades to replication when an axis does not divide — a rule
+never produces an invalid spec.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+from repro.models.config import ModelConfig, ShapeConfig
+
+__all__ = ["param_specs", "opt_state_specs", "batch_specs", "cache_specs",
+           "named", "ALL_GATHER_NAMES"]
+
+# leaf-name -> sharding rule; see _spec_for_leaf
+_SHARD_LAST = {"wq", "wk", "wv", "w_gates", "w_ogate", "w_in", "wi_gate",
+               "wi_up", "wi", "in_proj", "router", "lm_head", "conv_w",
+               "bq", "bk", "bv", "bi"}
+_SHARD_FIRST = {"wo", "out_proj", "embed"}
+_REPLICATE = {"scale", "bias", "A_log", "D", "dt_bias", "norm", "r",
+              "pos", "dec_pos", "q_norm", "k_norm", "bo"}
+
+ALL_GATHER_NAMES = _SHARD_LAST | _SHARD_FIRST
+
+
+def _divisible(size: int, mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and size % mesh.shape[axis] == 0
+
+
+def _spec_for_leaf(name: str, shape, mesh, path_names=()) -> P:
+    """Leaves may carry a leading stacked-layer dim (scanned segments), so
+    rules address dims from the RIGHT.  MoE experts are detected from the
+    pytree path ('moe' parent), not from the rank — a stacked dense MLP is
+    also rank-3 and must TP-shard, not replicate (the 87 GB/device lesson,
+    EXPERIMENTS.md §Perf iteration 0)."""
+    nd = len(shape)
+    if name in _REPLICATE or nd == 0:
+        return P()
+    if "moe" in path_names and name in ("wi_gate", "wi_up", "wo"):
+        e_dim = nd - 3                  # (E,d,f) or stacked (L,E,d,f)
+        if e_dim >= 0 and _divisible(shape[e_dim], mesh, "model"):
+            parts = [None] * nd
+            parts[e_dim] = "model"      # EP: experts over the model axis
+            return P(*parts)
+        return P()
+    if name in _SHARD_LAST:
+        if _divisible(shape[-1], mesh, "model"):
+            return P(*([None] * (nd - 1) + ["model"]))
+        return P()
+    if name in _SHARD_FIRST:
+        dim = nd - 2 if nd >= 2 else 0  # (f,d) / stacked (L,f,d) / (V,d)
+        if _divisible(shape[dim], mesh, "model"):
+            parts = [None] * nd
+            parts[dim] = "model"
+            return P(*parts)
+        return P()
+    return P()
+
+
+def _walk(tree, mesh, fn) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        name = names[-1] if names else None
+        out.append(fn(str(name), np.shape(leaf), tuple(names)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_specs(params_shapes, mesh):
+    """Pytree of PartitionSpec for params (pass eval_shape output)."""
+    return _walk(params_shapes, mesh,
+                 lambda name, shape, path: _spec_for_leaf(name, shape, mesh,
+                                                          path))
+
+
+def opt_state_specs(params_shapes, mesh):
+    """ZeRO-1: like param specs, plus ``data`` on the first free dim."""
+    base = param_specs(params_shapes, mesh)
+
+    def add_zero(spec: P, shape) -> P:
+        if "data" not in mesh.axis_names:
+            return spec
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (sz, pt) in enumerate(zip(shape, parts)):
+            if pt is None and sz % mesh.shape["data"] == 0 and sz > 1:
+                parts[i] = "data"
+                break
+        return P(*parts)
+
+    flat_spec, treedef = jax.tree_util.tree_flatten(base)
+    flat_shape = treedef.flatten_up_to(jax.tree.map(np.shape, params_shapes))
+    m_specs = treedef.unflatten([add_zero(s, sh)
+                                 for s, sh in zip(flat_spec, flat_shape)])
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=P(), m=m_specs, v=m_specs)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Dict[str, P]:
+    """Input shardings for one input-shape cell."""
+    baxes = batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    bspec = baxes if (nb > 1 and shape.global_batch % nb == 0) else None
+    out = {}
+    if shape.kind in ("train", "prefill"):
+        out["tokens"] = P(bspec, None)
+        if shape.kind == "train":
+            out["labels"] = P(bspec, None)
+    else:
+        out["token"] = P(bspec, None)
+        out["pos"] = P()
+        return out                      # decode has no frontend inputs
+    if cfg.family == "encdec":
+        out["audio_embeds"] = P(bspec, None, None)
+    if cfg.family == "vlm":
+        out["patch_embeds"] = P(bspec, None, None)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cache_shapes, shape: ShapeConfig, mesh):
+    """Decode-cache shardings: batch over data, head_dim/state over model."""
+    data_ok = shape.global_batch % mesh.shape.get("data", 1) == 0 and \
+        shape.global_batch > 1
+
+    def spec(path_name, shp):
+        nd = len(shp)
+        if nd == 5:          # KV cache (L, B, S, KV, hd)
+            b = "data" if data_ok and shp[1] % mesh.shape["data"] == 0 else None
+            hd = "model" if shp[4] % mesh.shape["model"] == 0 else None
+            return P(None, b, None, None, hd)
+        if nd == 4:          # conv history (L, B, K-1, C) / mlstm (B*H,1,hd,hd+1)
+            if path_name == "conv":
+                c = "model" if shp[3] % mesh.shape["model"] == 0 else None
+                b = "data" if data_ok and shp[1] % mesh.shape["data"] == 0 else None
+                return P(None, b, None, c)
+            return P(None, None, None, None)
+        if nd == 3:          # slstm (B, H, hd)
+            hd = "model" if shp[2] % mesh.shape["model"] == 0 else None
+            return P(None, None, hd)
+        return P(*([None] * nd))
+
+    def spec5(path_name, shp):
+        if path_name == "ssd" and len(shp) == 5:
+            # mamba (L,B,H,S,P): heads over model; mlstm (L,B*H,1,hd,hd+1):
+            # batch*heads over data, hd over model
+            if shp[2] == 1:  # mlstm folded layout
+                b = "data" if data_ok and shp[1] % mesh.shape["data"] == 0 else None
+                hd = "model" if shp[3] % mesh.shape["model"] == 0 else None
+                return P(None, b, None, hd, None)
+            h = "model" if shp[2] % mesh.shape["model"] == 0 else None
+            b = "data" if data_ok and shp[1] % mesh.shape["data"] == 0 else None
+            return P(None, b, h, None, None)
+        return spec(path_name, shp)
+
+    return _walk(cache_shapes, mesh,
+                 lambda name, shp, _p: spec5(name, shp))
+
+
+def named(mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

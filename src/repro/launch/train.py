@@ -1,0 +1,189 @@
+"""Training driver: the fault-tolerant loop used by examples and tests.
+
+Wires together the substrate layers (DESIGN.md Sect. 4):
+
+  data pipeline (deterministic addressing)  ->  jitted train step (pjit'd
+  on the current mesh)  ->  health monitor (NaN / loss-spike / straggler)
+  ->  checkpoint (atomic, mesh-independent)  ->  rollback / resume.
+
+On the CPU container this runs reduced configs on the 1-device smoke mesh;
+on a pod the same loop runs the full config on ``make_production_mesh()``
+(the dry-run proves those cells lower+compile).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
+                                         save_checkpoint)
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch import sharding as rules
+from repro.launch.mesh import make_smoke_mesh
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models.config import ModelConfig
+from repro.optim.adamw import adamw_init
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.fault_tolerance import HealthConfig, HealthMonitor
+
+__all__ = ["TrainConfig", "TrainResult", "train"]
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    arch: str = "smollm_360m"
+    smoke: bool = True               # reduced config (CPU); False = published
+    steps: int = 50
+    seq_len: int = 64
+    global_batch: int = 8
+    peak_lr: float = 1e-3
+    warmup_steps: int = 20
+    grad_clip: float = 1.0
+    grad_accum: int = 1
+    seed: int = 0
+    # fault tolerance
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 20
+    health: HealthConfig = dataclasses.field(default_factory=HealthConfig)
+    max_rollbacks: int = 3
+    log_every: int = 10
+    # test hooks
+    loss_poison_step: Optional[int] = None    # inject a NaN at this step
+
+
+@dataclass
+class TrainResult:
+    losses: Dict[int, float]
+    final_step: int
+    rollbacks: int
+    events: list
+    params: object = None
+    opt_state: object = None
+
+
+def _build(cfg: ModelConfig, tc: TrainConfig, mesh):
+    lr_fn = warmup_cosine(tc.peak_lr, tc.warmup_steps, tc.steps)
+    step_fn = make_train_step(cfg, lr_fn, grad_clip=tc.grad_clip,
+                              grad_accum=tc.grad_accum)
+    sds = jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(tc.seed), cfg))
+    p_specs = rules.param_specs(sds[0], mesh)
+    o_specs = rules.opt_state_specs(sds[0], mesh)
+    named = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                   is_leaf=lambda x: isinstance(x, P))
+    jitted = jax.jit(step_fn,
+                     in_shardings=(named(p_specs), named(o_specs), None),
+                     out_shardings=(named(p_specs), named(o_specs), None),
+                     donate_argnums=(0, 1))
+    return jitted, (named(p_specs), named(o_specs))
+
+
+def train(tc: TrainConfig) -> TrainResult:
+    cfg = get_smoke_config(tc.arch) if tc.smoke else get_config(tc.arch)
+    mesh = make_smoke_mesh()
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=tc.seq_len,
+                                  global_batch=tc.global_batch,
+                                  seed=tc.seed))
+    jitted, shardings = _build(cfg, tc, mesh)
+    monitor = HealthMonitor(tc.health)
+
+    # ---- resume or init ----
+    start = 0
+    params = opt = None
+    if tc.checkpoint_dir:
+        last = latest_step(tc.checkpoint_dir)
+        if last is not None:
+            tmpl = jax.eval_shape(
+                lambda: init_train_state(jax.random.PRNGKey(tc.seed), cfg))
+            tmpl = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tmpl)
+            (params, opt), _meta = restore_checkpoint(
+                tc.checkpoint_dir, last, (tmpl[0], tmpl[1]))
+            start = last
+    if params is None:
+        params, opt = init_train_state(jax.random.PRNGKey(tc.seed), cfg)
+
+    losses: Dict[int, float] = {}
+    rollbacks = 0
+    last_good = start
+    step = start
+    with mesh:
+        while step < tc.steps:
+            t0 = time.time()
+            batch = data.batch(step)
+            if cfg.family == "encdec":
+                batch["audio_embeds"] = (jax.random.normal(
+                    jax.random.fold_in(jax.random.PRNGKey(tc.seed), step),
+                    (tc.global_batch, cfg.encoder_seq, cfg.d_model))
+                    * 0.02).astype(jnp.dtype(cfg.dtype))
+            if cfg.family == "vlm":
+                batch["patch_embeds"] = (jax.random.normal(
+                    jax.random.fold_in(jax.random.PRNGKey(tc.seed), step),
+                    (tc.global_batch, cfg.vision_patches, cfg.d_model))
+                    * 0.02).astype(jnp.dtype(cfg.dtype))
+            params, opt, metrics = jitted(params, opt, batch)
+            loss = float(metrics["loss"])
+            if tc.loss_poison_step is not None and step == tc.loss_poison_step:
+                loss = float("nan")   # simulated bad node / bit flip
+            verdict = monitor.observe(loss, time.time() - t0)
+
+            if verdict.rollback:
+                rollbacks += 1
+                if not tc.checkpoint_dir or rollbacks > tc.max_rollbacks:
+                    raise RuntimeError(
+                        f"unrecoverable bad step at {step}: {verdict.reason}")
+                tmpl = (params, opt)
+                tmpl = jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, x.dtype), tmpl)
+                (params, opt), _ = restore_checkpoint(
+                    tc.checkpoint_dir, last_good, tmpl)
+                # deterministic pipeline: skip the poisoned data range
+                step = last_good + 1 if tc.loss_poison_step != last_good \
+                    else last_good + 2
+                if tc.loss_poison_step is not None and step <= tc.loss_poison_step:
+                    step = tc.loss_poison_step + 1
+                continue
+
+            losses[step] = loss
+            step += 1
+            if tc.checkpoint_dir and step % tc.checkpoint_every == 0:
+                save_checkpoint(tc.checkpoint_dir, step, (params, opt),
+                                metadata={"arch": tc.arch, "loss": loss})
+                last_good = step
+
+    return TrainResult(losses=losses, final_step=step, rollbacks=rollbacks,
+                       events=monitor.events, params=params, opt_state=opt)
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--full-config", action="store_true")
+    args = ap.parse_args(argv)
+    tc = TrainConfig(arch=args.arch, steps=args.steps, seq_len=args.seq_len,
+                     global_batch=args.global_batch,
+                     checkpoint_dir=args.ckpt_dir,
+                     smoke=not args.full_config)
+    res = train(tc)
+    ls = sorted(res.losses)
+    print(f"steps={res.final_step} first_loss={res.losses[ls[0]]:.4f} "
+          f"last_loss={res.losses[ls[-1]]:.4f} rollbacks={res.rollbacks}")
+
+
+if __name__ == "__main__":
+    main()

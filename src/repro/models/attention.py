@@ -1,0 +1,126 @@
+"""Attention: GQA with chunked online-softmax (flash-style) for prefill/train
+and a cached single-token path for decode.
+
+The chunked implementation never materializes the (S x S) score matrix —
+required for the 32k-prefill cells to pass the compile-memory gate
+(DESIGN.md Sect. 4).  Validated against ``attention_naive`` in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_naive", "attention_chunked", "decode_attention", "KVCache"]
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, S_max, KV, hd)
+    v: jnp.ndarray          # (B, S_max, KV, hd)
+
+
+def _expand_kv(x: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, KV, hd) -> (B, S, KV*groups, hd) by repeat (GQA)."""
+    b, s, kv, hd = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, groups, hd))
+    return x.reshape(b, s, kv * groups, hd)
+
+
+def attention_naive(q, k, v, *, causal: bool = True,
+                    q_offset: int = 0) -> jnp.ndarray:
+    """Reference attention. q: (B,Sq,H,hd), k/v: (B,Skv,KV,hd)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    k = _expand_kv(k, h // kv)
+    v = _expand_kv(v, h // kv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / (hd ** 0.5)
+    if causal:
+        qi = jnp.arange(sq)[:, None] + q_offset
+        ki = jnp.arange(k.shape[1])[None, :]
+        scores = jnp.where(qi >= ki, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def attention_chunked(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                      kv_chunk: int = 1024) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV in chunks.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd); H = KV * groups.
+    Memory high-water: O(Sq * kv_chunk) scores per (batch, head).
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    groups = h // kvh
+    if skv % kv_chunk:
+        pad = kv_chunk - skv % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nchunks = k.shape[1] // kv_chunk
+    kc = k.reshape(b, nchunks, kv_chunk, kvh, hd)
+    vc = v.reshape(b, nchunks, kv_chunk, kvh, hd)
+
+    qf = (q * (hd ** -0.5)).reshape(b, sq, kvh, groups, hd)
+    qi = jnp.arange(sq) + q_offset
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kb, vb, ci = inputs                      # (B, C, KV, hd), chunk idx
+        ki = ci * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qf, kb).astype(jnp.float32)
+        mask = ki[None, :] <= qi[:, None] if causal else (ki[None, :] < skv)
+        mask = jnp.logical_and(mask, (ki < skv)[None, :])
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        scale = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        acc = acc * scale[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kvh, groups, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, groups, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, groups, sq, hd), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kc_t, vc_t, jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, cache: KVCache, cache_len, *,
+                     kv_chunk: Optional[int] = None) -> jnp.ndarray:
+    """Single-token attention against a KV cache.
+
+    q: (B, 1, H, hd); cache.k/v: (B, S_max, KV, hd); ``cache_len``: (B,) or
+    scalar count of valid cache entries (the new token must already be
+    written at position cache_len - 1).
+    """
+    b, _, h, hd = q.shape
+    kvh = cache.k.shape[2]
+    groups = h // kvh
+    qf = (q * (hd ** -0.5)).reshape(b, kvh, groups, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, cache.k).astype(jnp.float32)
+    valid = jnp.arange(cache.k.shape[1])[None, :] < jnp.reshape(
+        jnp.asarray(cache_len), (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w.astype(cache.v.dtype), cache.v)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def cache_update(cache: KVCache, k_new, v_new, position) -> KVCache:
+    """Write one token's K/V at ``position`` (scalar int32)."""
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, position, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, position, axis=1)
+    return KVCache(k, v)

@@ -1,0 +1,110 @@
+"""Shared neural-net building blocks (pure JAX, no framework deps)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rmsnorm", "layernorm", "rope", "mlp_swiglu", "mlp_gelu",
+           "init_dense", "init_norm", "cross_entropy", "shard_act"]
+
+
+def shard_act(x: jnp.ndarray, cfg, kind: str) -> jnp.ndarray:
+    """Pin an activation's sharding (requires a mesh context at trace time).
+
+    kinds (dims counted from the right so (B,S,..) and (B,1,..) both work):
+      residual — (B, S, D): batch over cfg.batch_axes; 'sp' also shards S
+                 over 'model' (Megatron sequence-parallel residual)
+      heads    — (B, S, H, hd): H over 'model'
+      ffn      — (B, S, F) / (B, S, V): F over 'model'
+    """
+    if getattr(cfg, "act_shard", "none") == "none":
+        return x
+    from jax.sharding import PartitionSpec as P
+    tp = getattr(cfg, "model_axis_size", 16)
+    b = tuple(cfg.batch_axes) or None
+    if kind == "residual":
+        seq = "model" if cfg.act_shard == "sp" and x.ndim >= 2 and \
+            x.shape[1] % tp == 0 else None
+        spec = P(b, seq, *([None] * (x.ndim - 2)))
+    elif kind == "heads":
+        h = "model" if x.shape[2] % tp == 0 else None
+        spec = P(b, None, h, *([None] * (x.ndim - 3)))
+    elif kind == "ffn":
+        f = "model" if x.shape[-1] % tp == 0 else None
+        spec = P(b, *([None] * (x.ndim - 2)), f)
+    else:
+        raise ValueError(kind)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, *, theta: float = 10000.0,
+         partial: float = 1.0) -> jnp.ndarray:
+    """Rotary embedding on the last axis of (..., S, H, hd).
+
+    ``partial`` < 1 rotates only the first ``partial * hd`` channels
+    (GLM-style 2d/partial rotary).  ``positions``: (..., S) int32.
+    """
+    hd = x.shape[-1]
+    rot = int(hd * partial)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-np.arange(0, half) * 2.0 / rot)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]   # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+def mlp_swiglu(x, wi_gate, wi_up, wo):
+    h = jax.nn.silu(x @ wi_gate) * (x @ wi_up)
+    return h @ wo
+
+
+def mlp_gelu(x, wi, bi, wo, bo):
+    h = jax.nn.gelu(x @ wi + bi, approximate=True)
+    return h @ wo + bo
+
+
+def init_dense(key, shape, scale: float | None = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    if scale is None:
+        scale = fan_in ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_norm(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  vocab_size: int) -> jnp.ndarray:
+    """Mean token cross-entropy; logits may be vocab-padded (padded ids never
+    appear in labels).  Computed in f32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

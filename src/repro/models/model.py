@@ -1,0 +1,323 @@
+"""Top-level model API: train/prefill/serve step functions + input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation) — the
+dry-run lowers against these.  ``make_batch`` materializes small real
+arrays for smoke tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ssm
+from repro.models.attention import KVCache, decode_attention
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.layers import rmsnorm, rope
+from repro.models.transformer import (Params, _mlp, _norm_apply,
+                                      _project_qkv, forward, loss_fn,
+                                      segment_plan)
+
+__all__ = ["input_specs", "make_batch", "prefill_step", "serve_step",
+           "init_decode_cache", "decode_cache_specs", "encode_for_decode"]
+
+
+# ---------------------------------------------------------------------------
+# Inputs
+# ---------------------------------------------------------------------------
+
+def _frontend_specs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    out = {}
+    if cfg.family == "encdec":
+        out["audio_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vision_patches, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        specs.update(_frontend_specs(cfg, b))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        specs.update(_frontend_specs(cfg, b))
+        return specs
+    if shape.kind == "decode":
+        # decode consumes only (token, pos) + the cache; the modality prefix
+        # is already resident in the cache, so no frontend inputs here
+        return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    out = {}
+    for name, sds in input_specs(cfg, shape).items():
+        if sds.dtype == jnp.int32 and sds.shape:
+            out[name] = jax.random.randint(ks[0], sds.shape, 0,
+                                           min(cfg.vocab_size, 1000), jnp.int32)
+        elif sds.dtype == jnp.int32:
+            out[name] = jnp.asarray(0, jnp.int32)
+        else:
+            out[name] = (jax.random.normal(ks[1], sds.shape) * 0.02).astype(sds.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def _kv_cache_struct(cfg: ModelConfig, n_layers: int, batch: int, max_seq: int):
+    hd, kv = cfg.resolved_head_dim, cfg.num_kv_heads
+    shp = (n_layers, batch, max_seq, kv, hd)
+    dt = jnp.dtype(cfg.dtype)
+    return {"k": jax.ShapeDtypeStruct(shp, dt),
+            "v": jax.ShapeDtypeStruct(shp, dt)}
+
+
+def decode_cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    """ShapeDtypeStruct pytree of the decode cache (mirrors init_decode_cache)."""
+    segs = segment_plan(cfg)
+    cache: Dict[str, Any] = {"segments": []}
+    for kind, n in segs:
+        if kind in ("dense",):
+            cache["segments"].append(_kv_cache_struct(cfg, n, batch, max_seq))
+        elif kind == "mamba":
+            di, s, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+            p = di // nh
+            cache["segments"].append({
+                "ssd": jax.ShapeDtypeStruct((n, batch, nh, s, p), jnp.float32),
+                "conv": jax.ShapeDtypeStruct(
+                    (n, batch, cfg.ssm_conv - 1, di + 2 * s),
+                    jnp.dtype(cfg.dtype))})
+        elif kind == "mlstm":
+            h, hd = cfg.num_heads, cfg.resolved_head_dim
+            cache["segments"].append({
+                "ssd": jax.ShapeDtypeStruct((n, batch * h, 1, hd, hd + 1),
+                                            jnp.float32)})
+        elif kind == "slstm":
+            h, hd = cfg.num_heads, cfg.resolved_head_dim
+            st = jax.ShapeDtypeStruct((batch, h, hd), jnp.float32)
+            cache["segments"].append({"c": st, "n": st, "m": st, "h": st})
+        elif kind == "shared_attn":
+            cache["segments"].append(_kv_cache_struct(cfg, 1, batch, max_seq))
+    if cfg.family == "encdec":
+        cache["segments"] = [_kv_cache_struct(cfg, cfg.num_layers, batch, max_seq)]
+        hd, kv = cfg.resolved_head_dim, cfg.num_kv_heads
+        dt = jnp.dtype(cfg.dtype)
+        cache["cross"] = {
+            "k": jax.ShapeDtypeStruct(
+                (cfg.num_layers, batch, cfg.encoder_seq, kv, hd), dt),
+            "v": jax.ShapeDtypeStruct(
+                (cfg.num_layers, batch, cfg.encoder_seq, kv, hd), dt)}
+    return cache
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Zero-initialized decode cache (real arrays, smoke-test scale)."""
+    def make(sds):
+        if sds.dtype == jnp.float32 and sds.shape[-1:] == ():
+            return jnp.zeros(sds.shape, sds.dtype)
+        z = jnp.zeros(sds.shape, sds.dtype)
+        return z
+    cache = jax.tree.map(make, decode_cache_specs(cfg, batch, max_seq))
+    # sLSTM stabilizer starts very negative, normalizer slightly positive
+    segs = segment_plan(cfg)
+    if cfg.family != "encdec":
+        for i, (kind, _n) in enumerate(segs):
+            if kind == "slstm":
+                cache["segments"][i]["m"] = cache["segments"][i]["m"] - 1e9
+                cache["segments"][i]["n"] = cache["segments"][i]["n"] + 1e-6
+    return cache
+
+
+def encode_for_decode(params: Params, cfg: ModelConfig, audio_embeds):
+    """Enc-dec only: run the encoder once and precompute the per-layer cross
+    K/V (the fixed part of the decode cache)."""
+    from repro.models.transformer import _run_encoder
+    assert cfg.family == "encdec"
+    enc_out = _run_encoder(params, cfg, audio_embeds)
+    b = enc_out.shape[0]
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    stack = params["segments"][0]
+    dt = jnp.dtype(cfg.dtype)
+
+    def per_layer(lp):
+        k = (enc_out @ lp["cross"]["wk"]).reshape(b, -1, kv, hd)
+        v = (enc_out @ lp["cross"]["wv"]).reshape(b, -1, kv, hd)
+        return k.astype(dt), v.astype(dt)
+
+    ks, vs = jax.vmap(per_layer, in_axes=(0,))(stack)
+    return {"k": ks, "v": vs}
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill_step(params: Params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    """Inference prefill: forward logits for the full prompt."""
+    return forward(params, cfg, batch["tokens"],
+                   audio_embeds=batch.get("audio_embeds"),
+                   patch_embeds=batch.get("patch_embeds"))
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def _decode_dense_segment(x, stack, kc, vc, cfg, pos):
+    """Scan decode over a stacked dense segment.  kc/vc: (L,B,S,KV,hd)."""
+    positions = jnp.reshape(pos, (1, 1))
+
+    def body(h, xs):
+        lp, k_l, v_l = xs
+        xin = _norm_apply(h, lp["ln1"], cfg)
+        q, k, v = _project_qkv(xin, lp["attn"], cfg, positions)
+        k_l = jax.lax.dynamic_update_slice_in_dim(k_l, k.astype(k_l.dtype),
+                                                  pos, axis=1)
+        v_l = jax.lax.dynamic_update_slice_in_dim(v_l, v.astype(v_l.dtype),
+                                                  pos, axis=1)
+        attn = decode_attention(q, KVCache(k_l, v_l), pos + 1)
+        h = h + attn.reshape(*h.shape[:2], -1) @ lp["attn"]["wo"]
+        hin = _norm_apply(h, lp["ln2"], cfg)
+        if cfg.is_moe:
+            from repro.models.moe import moe_ffn, moe_ffn_ep
+            b, s1, d = hin.shape
+            y = None
+            if cfg.moe_impl == "ep":
+                out = moe_ffn_ep(hin, lp["moe"],
+                                 num_experts=cfg.num_experts,
+                                 k=cfg.experts_per_token,
+                                 capacity_factor=cfg.capacity_factor)
+                if out is not None:
+                    y = out[0].reshape(b * s1, d)
+            if y is None:
+                y, _ = moe_ffn(hin.reshape(b * s1, d), lp["moe"],
+                               num_experts=cfg.num_experts,
+                               k=cfg.experts_per_token, impl=cfg.moe_impl,
+                               capacity_factor=cfg.capacity_factor)
+            h = h + y.reshape(b, s1, d)
+        else:
+            h = h + _mlp(hin, lp["mlp"], cfg)
+        return h, (k_l, v_l)
+
+    x, (kc, vc) = jax.lax.scan(body, x, (stack, kc, vc))
+    return x, kc, vc
+
+
+def _decode_cross_segment(x, stack, kc, vc, cross_k, cross_v, cfg, pos):
+    positions = jnp.reshape(pos, (1, 1))
+
+    def body(h, xs):
+        lp, k_l, v_l, ck, cv = xs
+        xin = _norm_apply(h, lp["ln1"], cfg)
+        q, k, v = _project_qkv(xin, lp["attn"], cfg, positions)
+        k_l = jax.lax.dynamic_update_slice_in_dim(k_l, k.astype(k_l.dtype), pos, 1)
+        v_l = jax.lax.dynamic_update_slice_in_dim(v_l, v.astype(v_l.dtype), pos, 1)
+        attn = decode_attention(q, KVCache(k_l, v_l), pos + 1)
+        h = h + attn.reshape(*h.shape[:2], -1) @ lp["attn"]["wo"]
+        # cross attention over the (fixed) encoder context
+        hin = _norm_apply(h, lp["ln3"], cfg)
+        b = h.shape[0]
+        hd, hh = cfg.resolved_head_dim, cfg.num_heads
+        qx = (hin @ lp["cross"]["wq"]).reshape(b, 1, hh, hd)
+        attn_x = decode_attention(qx, KVCache(ck, cv), ck.shape[1])
+        h = h + attn_x.reshape(b, 1, -1) @ lp["cross"]["wo"]
+        h = h + _mlp(_norm_apply(h, lp["ln2"], cfg), lp["mlp"], cfg)
+        return h, (k_l, v_l)
+
+    x, (kc, vc) = jax.lax.scan(body, x, (stack, kc, vc, cross_k, cross_v))
+    return x, kc, vc
+
+
+def _decode_mamba_segment(x, stack, st, cfg):
+    def body(h, xs):
+        lp, ssd_s, conv_s = xs
+        xin = _norm_apply(h, lp["ln"], cfg)
+        y, new_state = ssm.mamba2_block(
+            xin, lp, cfg, ssm.Mamba2State(ssm.SSDState(ssd_s), conv_s),
+            decode=True)
+        return h + y, (new_state.ssd.s, new_state.conv)
+
+    x, (ssd_s, conv_s) = jax.lax.scan(body, x, (stack, st["ssd"], st["conv"]))
+    return x, {"ssd": ssd_s, "conv": conv_s}
+
+
+def _decode_mlstm_segment(x, stack, st, cfg):
+    from repro.models.transformer import _mlstm_block
+
+    def body(h, xs):
+        lp, s_l = xs
+        out, new_st = _mlstm_block(h, lp, cfg, ssm.SSDState(s_l), decode=True)
+        return out, new_st.s
+
+    x, s_new = jax.lax.scan(body, x, (stack, st["ssd"]))
+    return x, {"ssd": s_new}
+
+
+def serve_step(params: Params, cfg: ModelConfig, cache, batch
+               ) -> Tuple[jnp.ndarray, Any]:
+    """One decode step: new token at ``batch['pos']``; returns (logits, cache)."""
+    token, pos = batch["token"], batch["pos"]
+    x = jnp.take(params["embed"], token, axis=0)            # (B, 1, D)
+    new_cache = {"segments": [], **{k: v for k, v in cache.items()
+                                    if k not in ("segments",)}}
+    if cfg.family == "encdec":
+        x = x + jnp.take(params["dec_pos"], jnp.reshape(pos, (1, 1)), axis=0)[0]
+        seg = cache["segments"][0]
+        x, kc, vc = _decode_cross_segment(
+            x, params["segments"][0], seg["k"], seg["v"],
+            cache["cross"]["k"], cache["cross"]["v"], cfg, pos)
+        new_cache["segments"].append({"k": kc, "v": vc})
+    else:
+        for i, ((kind, _n), seg_p) in enumerate(zip(segment_plan(cfg),
+                                                    params["segments"])):
+            seg_c = cache["segments"][i]
+            if kind == "dense":
+                x, kc, vc = _decode_dense_segment(
+                    x, seg_p, seg_c["k"], seg_c["v"], cfg, pos)
+                new_cache["segments"].append({"k": kc, "v": vc})
+            elif kind == "mamba":
+                x, st = _decode_mamba_segment(x, seg_p, seg_c, cfg)
+                new_cache["segments"].append(st)
+            elif kind == "mlstm":
+                x, st = _decode_mlstm_segment(x, seg_p, seg_c, cfg)
+                new_cache["segments"].append(st)
+            elif kind == "slstm":
+                from repro.models.transformer import _slstm_block
+                layer = jax.tree.map(lambda t: t[0], seg_p)
+                st = ssm.SLSTMState(seg_c["c"], seg_c["n"], seg_c["m"], seg_c["h"])
+                x, new_st = _slstm_block(x, layer, cfg, st)
+                new_cache["segments"].append(
+                    {"c": new_st.c, "n": new_st.n, "m": new_st.m, "h": new_st.h})
+            elif kind == "shared_attn":
+                p = params["shared_attn"]
+                positions = jnp.reshape(pos, (1, 1))
+                xin = _norm_apply(x, p["ln1"], cfg)
+                q, k, v = _project_qkv(xin, p["attn"], cfg, positions)
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    seg_c["k"][0], k.astype(seg_c["k"].dtype), pos, 1)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    seg_c["v"][0], v.astype(seg_c["v"].dtype), pos, 1)
+                attn = decode_attention(q, KVCache(kc, vc), pos + 1)
+                x = x + attn.reshape(*x.shape[:2], -1) @ p["attn"]["wo"]
+                x = x + _mlp(_norm_apply(x, p["ln2"], cfg), p["mlp"], cfg)
+                new_cache["segments"].append({"k": kc[None], "v": vc[None]})
+            else:
+                raise ValueError(kind)
+    x = _norm_apply(x, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_cache

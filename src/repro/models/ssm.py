@@ -1,0 +1,201 @@
+"""State-space / recurrent blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+One chunked "state-space duality" core (``ssd_chunked``) serves both the
+Mamba2 blocks of zamba2 and the mLSTM blocks of xLSTM (mLSTM is linear
+attention with a per-step scalar decay — the same recurrence
+``S_t = exp(a_t) S_{t-1} + w_t * (B_t  x_t^T)``).  The scan carries the
+(H, S, P) state across chunks, so memory is O(chunk^2) not O(L^2):
+these are the sub-quadratic architectures that run the ``long_500k`` cell.
+
+Numerical conventions documented in DESIGN.md:
+  * mLSTM input gate uses a soft-capped exponential (exp of a clipped
+    pre-activation) instead of the paper's sequential max-stabilizer — the
+    chunk-parallel form requires a chunk-local stabilizer; validated
+    against a sequential reference in tests.
+  * sLSTM is implemented exactly (sequential scan, per-head recurrence,
+    exponential gating with max-stabilizer).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_chunked", "ssd_decode_step", "SSDState",
+           "mamba2_block", "mamba2_decode", "Mamba2State",
+           "slstm_scan", "SLSTMState"]
+
+
+class SSDState(NamedTuple):
+    s: jnp.ndarray          # (B, H, S, P) running state
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, a, w, bmat, cmat, *, chunk: int = 128,
+                initial: SSDState | None = None):
+    """y_t = C_t . S_t with S_t = exp(a_t) S_{t-1} + w_t B_t x_t^T.
+
+    x: (B, L, H, P) values;  a: (B, L, H) log-decay (<= 0);
+    w: (B, L, H) input weights; bmat/cmat: (B, L, S) (G=1 broadcast over H).
+    Returns (y (B, L, H, P), final SSDState).
+    """
+    b, l, h, p = x.shape
+    s = bmat.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    lp = l + pad
+    nc = lp // chunk
+
+    def split(t, extra=()):
+        return jnp.moveaxis(t.reshape((b, nc, chunk) + t.shape[2:]), 1, 0)
+
+    xs, as_, ws = split(x), split(a), split(w)
+    bs, cs = split(bmat), split(cmat)
+    s0 = initial.s if initial is not None else jnp.zeros((b, h, s, p), jnp.float32)
+
+    def body(state, inp):
+        xc, ac, wc, bc, cc = inp                     # (B, Q, ...) one chunk
+        ac32 = ac.astype(jnp.float32)
+        cum = jnp.cumsum(ac32, axis=1)               # (B, Q, H) inclusive
+        total = cum[:, -1]                           # (B, H)
+        # --- intra-chunk (causal) ---
+        qi = jnp.arange(chunk)
+        mask = qi[:, None] >= qi[None, :]
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (B, Qi, Qj, H)
+        dec = jnp.where(mask[None, :, :, None], dec, 0.0)
+        cb = jnp.einsum("bis,bjs->bij", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))                   # (B, Qi, Qj)
+        m = cb[:, :, :, None] * dec * wc.astype(jnp.float32)[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m, xc.astype(jnp.float32))
+        # --- inter-chunk: contribution of the carried state ---
+        decay_in = jnp.exp(cum)                                    # (B, Q, H)
+        y_inter = jnp.einsum("bis,bhsp->bihp", cc.astype(jnp.float32), state) \
+            * decay_in[..., None]
+        # --- state update ---
+        decay_out = jnp.exp(total[:, None, :] - cum)               # (B, Q, H)
+        contrib = jnp.einsum("bqh,bqs,bqhp->bhsp",
+                             (wc.astype(jnp.float32) * decay_out),
+                             bc.astype(jnp.float32), xc.astype(jnp.float32))
+        state = state * jnp.exp(total)[:, :, None, None] + contrib
+        return state, (y_intra + y_inter).astype(x.dtype)
+
+    final, ys = jax.lax.scan(body, s0, (xs, as_, ws, bs, cs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, lp, h, p)[:, :l]
+    return y, SSDState(final)
+
+
+def ssd_decode_step(x, a, w, bmat, cmat, state: SSDState):
+    """One-token recurrence.  x: (B,1,H,P), a/w: (B,1,H), b/c: (B,1,S)."""
+    s = state.s
+    decay = jnp.exp(a.astype(jnp.float32))[:, 0, :, None, None]    # (B,H,1,1)
+    contrib = jnp.einsum("bh,bs,bhp->bhsp", w.astype(jnp.float32)[:, 0],
+                         bmat.astype(jnp.float32)[:, 0],
+                         x.astype(jnp.float32)[:, 0])
+    s = s * decay + contrib
+    y = jnp.einsum("bs,bhsp->bhp", cmat.astype(jnp.float32)[:, 0], s)
+    return y[:, None].astype(x.dtype), SSDState(s)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+class Mamba2State(NamedTuple):
+    ssd: SSDState            # (B, H, S, P)
+    conv: jnp.ndarray        # (B, K-1, C) causal-conv history
+
+
+def _causal_conv(x, w, history=None):
+    """Depthwise causal conv.  x: (B, L, C), w: (K, C)."""
+    k = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+    new_hist = xp[:, -(k - 1):] if k > 1 else history
+    return out, new_hist
+
+
+def mamba2_block(x, params, cfg, state: Mamba2State | None = None,
+                 decode: bool = False):
+    """x: (B, L, D) -> (B, L, D).  params:
+    in_proj (D, 2*Di + 2*S + H), conv_w (K, Di + 2*S), A_log (H,), D (H,),
+    dt_bias (H,), norm (Di,), out_proj (Di, D).
+    """
+    b, l, d = x.shape
+    di, s_sz, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = di // nh
+    zxbcdt = x @ params["in_proj"]
+    z, xz, bc, dt_raw = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * s_sz], axis=-1)
+    conv_in = jnp.concatenate([xz, bc], axis=-1)
+    conv_out, new_hist = _causal_conv(conv_in, params["conv_w"],
+                                      state.conv if state is not None else None)
+    conv_out = jax.nn.silu(conv_out)
+    xz, bmat, cmat = jnp.split(conv_out, [di, di + s_sz], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))     # (B,L,H)
+    a_neg = -jnp.exp(params["A_log"].astype(jnp.float32))           # (H,)
+    xh = xz.reshape(b, l, nh, p)
+    if decode:
+        y, new_ssd = ssd_decode_step(xh, dt * a_neg, dt, bmat, cmat, state.ssd)
+    else:
+        init = state.ssd if state is not None else None
+        y, new_ssd = ssd_chunked(xh, dt * a_neg, dt, bmat, cmat,
+                                 chunk=cfg.ssm_chunk, initial=init)
+    y = y + xh * params["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, l, di) * jax.nn.silu(z)
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(y, params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"], Mamba2State(new_ssd, new_hist)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (exact, sequential)
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray           # (B, H, hd)
+    n: jnp.ndarray
+    m: jnp.ndarray
+    h: jnp.ndarray
+
+
+def slstm_scan(x_gates, r_weights, state: SLSTMState | None = None):
+    """Exact sLSTM over time.
+
+    x_gates: (B, L, H, 4, hd) input pre-activations (order i, f, z, o);
+    r_weights: (H, hd, 4, hd) per-head recurrent block matrices.
+    Returns (h_seq (B, L, H, hd), final state).
+    """
+    b, l, h, _, hd = x_gates.shape
+    if state is None:
+        zeros = jnp.zeros((b, h, hd), jnp.float32)
+        state = SLSTMState(zeros, zeros + 1e-6, zeros - 1e9, zeros)
+
+    def step(st, g_in):
+        rec = jnp.einsum("bhd,hdgf->bhgf", st.h, r_weights.astype(jnp.float32))
+        g = g_in.astype(jnp.float32) + rec
+        it, ft, zt, ot = g[:, :, 0], g[:, :, 1], g[:, :, 2], g[:, :, 3]
+        m_new = jnp.maximum(ft + st.m, it)
+        i = jnp.exp(it - m_new)
+        f = jnp.exp(ft + st.m - m_new)
+        c = f * st.c + i * jnp.tanh(zt)
+        n = f * st.n + i
+        hh = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+        return SLSTMState(c, n, m_new, hh), hh
+
+    xs = jnp.moveaxis(x_gates, 1, 0)                 # (L, B, H, 4, hd)
+    final, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(x_gates.dtype), final

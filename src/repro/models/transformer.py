@@ -1,0 +1,464 @@
+"""Model assembly: parameter construction + forward passes for every family.
+
+A model is a pytree of arrays plus pure functions.  Layer stacks are
+homogeneous *segments*: each segment is either a ``lax.scan`` over stacked
+layer params (O(1) HLO size in depth — essential for compiling 94-layer
+models on a 512-device mesh) or a single special block (sLSTM, zamba2's
+shared attention).  Heterogeneous architectures are a Python list of
+segments.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.attention import (KVCache, attention_chunked, cache_update,
+                                    decode_attention)
+from repro.models.config import ModelConfig
+from repro.models.layers import (cross_entropy, init_dense, layernorm,
+                                 mlp_gelu, mlp_swiglu, rmsnorm, rope,
+                                 shard_act)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _attn_params(key, cfg: ModelConfig, d_model=None):
+    d = d_model or cfg.d_model
+    hd, h, kv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": init_dense(ks[0], (d, h * hd), dtype=dt),
+        "wk": init_dense(ks[1], (d, kv * hd), dtype=dt),
+        "wv": init_dense(ks[2], (d, kv * hd), dtype=dt),
+        "wo": init_dense(ks[3], (h * hd, d), dtype=dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _mlp_params(key, cfg: ModelConfig, d_model=None, d_ff=None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.act == "silu":
+        return {"wi_gate": init_dense(ks[0], (d, f), dtype=dt),
+                "wi_up": init_dense(ks[1], (d, f), dtype=dt),
+                "wo": init_dense(ks[2], (f, d), dtype=dt)}
+    return {"wi": init_dense(ks[0], (d, f), dtype=dt),
+            "bi": jnp.zeros((f,), dt),
+            "wo": init_dense(ks[1], (f, d), dtype=dt),
+            "bo": jnp.zeros((d,), dt)}
+
+
+def _norm_params(cfg: ModelConfig, d=None):
+    d = d or cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), dt), "bias": jnp.zeros((d,), dt)}
+    return {"scale": jnp.ones((d,), dt)}
+
+
+def _moe_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    return {"router": init_dense(ks[0], (d, e), dtype=jnp.float32),
+            "wi_gate": init_dense(ks[1], (e, d, f), scale=d ** -0.5, dtype=dt),
+            "wi_up": init_dense(ks[2], (e, d, f), scale=d ** -0.5, dtype=dt),
+            "wo": init_dense(ks[3], (e, f, d), scale=f ** -0.5, dtype=dt)}
+
+
+def _dense_layer_params(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = {"attn": _attn_params(k1, cfg), "ln1": _norm_params(cfg),
+         "ln2": _norm_params(cfg)}
+    if cfg.is_moe:
+        p["moe"] = _moe_params(k2, cfg)
+    else:
+        p["mlp"] = _mlp_params(k2, cfg)
+    return p
+
+
+def _mamba_layer_params(key, cfg: ModelConfig):
+    di, s, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "in_proj": init_dense(k1, (cfg.d_model, 2 * di + 2 * s + nh), dtype=dt),
+        "conv_w": init_dense(k2, (cfg.ssm_conv, di + 2 * s), scale=0.5, dtype=dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dt),
+        "out_proj": init_dense(k1, (di, cfg.d_model), dtype=dt),
+        "ln": _norm_params(cfg),
+    }
+
+
+def _mlstm_layer_params(key, cfg: ModelConfig):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wq": init_dense(ks[0], (d, h * hd), dtype=dt),
+        "wk": init_dense(ks[1], (d, h * hd), dtype=dt),
+        "wv": init_dense(ks[2], (d, h * hd), dtype=dt),
+        "w_gates": init_dense(ks[3], (d, 2 * h), dtype=dt),
+        "w_ogate": init_dense(ks[4], (d, h * hd), dtype=dt),
+        "wo": init_dense(ks[5], (h * hd, d), dtype=dt),
+        "ln": _norm_params(cfg),
+    }
+
+
+def _slstm_layer_params(key, cfg: ModelConfig):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "w_in": init_dense(ks[0], (d, h * 4 * hd), dtype=dt),
+        "r": init_dense(ks[1], (h, hd, 4, hd), scale=hd ** -0.5, dtype=dt),
+        "wo": init_dense(ks[2], (h * hd, d), dtype=dt),
+        "ln": _norm_params(cfg),
+    }
+
+
+def _cross_layer_params(key, cfg: ModelConfig):
+    p = _dense_layer_params(key, cfg)
+    p["cross"] = _attn_params(jax.random.fold_in(key, 7), cfg)
+    p["ln3"] = _norm_params(cfg)
+    return p
+
+
+def _stack(key, n: int, fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def segment_plan(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    """(kind, n_layers) segments of the decoder stack."""
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        return [("dense", cfg.num_layers)]
+    if cfg.family == "ssm":                      # xLSTM: sLSTM every k-th
+        plan, i = [], 0
+        k = cfg.slstm_every or (cfg.num_layers + 1)
+        while i < cfg.num_layers:
+            n_m = min(k - 1, cfg.num_layers - i)
+            if n_m:
+                plan.append(("mlstm", n_m))
+                i += n_m
+            if i < cfg.num_layers:
+                plan.append(("slstm", 1))
+                i += 1
+        return plan
+    if cfg.family == "hybrid":                   # zamba2: shared attn every k
+        plan, i = [], 0
+        k = cfg.shared_attn_every or (cfg.num_layers + 1)
+        while i < cfg.num_layers:
+            n_m = min(k, cfg.num_layers - i)
+            plan.append(("mamba", n_m))
+            i += n_m
+            if i < cfg.num_layers:
+                plan.append(("shared_attn", 1))
+        return plan
+    raise ValueError(cfg.family)
+
+
+_LAYER_BUILDERS = {
+    "dense": _dense_layer_params,
+    "mamba": _mamba_layer_params,
+    "mlstm": _mlstm_layer_params,
+    "slstm": _slstm_layer_params,
+}
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 16)
+    params: Params = {
+        "embed": init_dense(keys[0], (cfg.vocab_padded, cfg.d_model),
+                            scale=0.02, dtype=dt),
+        "final_norm": _norm_params(cfg),
+        "segments": [],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(keys[1], (cfg.d_model, cfg.vocab_padded),
+                                       dtype=dt)
+    # NOTE: segment kinds are derived from ``segment_plan(cfg)`` — params hold
+    # only arrays so the pytree stays grad/tree_map friendly.
+    for si, (kind, n) in enumerate(segment_plan(cfg)):
+        k = jax.random.fold_in(keys[2], si)
+        if kind == "shared_attn":
+            params["segments"].append({})  # weights shared at params["shared_attn"]
+        else:
+            build = _LAYER_BUILDERS[kind]
+            params["segments"].append(_stack(k, n, lambda kk: build(kk, cfg)))
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        params["shared_attn"] = _cross_shared_attn_params(keys[3], cfg)
+    if cfg.family == "encdec":
+        params["encoder"] = {
+            "pos": init_dense(keys[4], (cfg.encoder_seq, cfg.d_model),
+                              scale=0.02, dtype=dt),
+            "stack": _stack(keys[5], cfg.encoder_layers,
+                            lambda kk: _dense_layer_params(kk, cfg)),
+            "final_norm": _norm_params(cfg),
+        }
+        # decoder layers get cross-attention
+        params["segments"] = [_stack(keys[6], cfg.num_layers,
+                                     lambda kk: _cross_layer_params(kk, cfg))]
+        params["dec_pos"] = init_dense(keys[7], (32768, cfg.d_model),
+                                       scale=0.02, dtype=dt)
+    return params
+
+
+def _cross_shared_attn_params(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"attn": _attn_params(k1, cfg), "mlp": _mlp_params(k2, cfg),
+            "ln1": _norm_params(cfg), "ln2": _norm_params(cfg)}
+
+
+# ---------------------------------------------------------------------------
+# Blocks (forward)
+# ---------------------------------------------------------------------------
+
+def _norm_apply(x, p, cfg):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def _project_qkv(x, p, cfg, positions):
+    b, s, _ = x.shape
+    hd, h, kv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope:
+        q = rope(q, positions, theta=cfg.rope_theta, partial=cfg.partial_rotary)
+        k = rope(k, positions, theta=cfg.rope_theta, partial=cfg.partial_rotary)
+    return q, k, v
+
+
+def _self_attn(x, p, cfg, positions, causal=True):
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    q = shard_act(q, cfg, "heads")
+    k = shard_act(k, cfg, "heads")
+    v = shard_act(v, cfg, "heads")
+    out = attention_chunked(q, k, v, causal=causal,
+                            kv_chunk=min(cfg.attn_chunk, max(128, s)))
+    out = shard_act(out, cfg, "heads")
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def _mlp(x, p, cfg):
+    if cfg.act == "silu":
+        h = jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])
+        return shard_act(h, cfg, "ffn") @ p["wo"]
+    h = jax.nn.gelu(x @ p["wi"] + p["bi"], approximate=True)
+    return shard_act(h, cfg, "ffn") @ p["wo"] + p["bo"]
+
+
+def _dense_block(x, p, cfg, positions, causal=True):
+    x = shard_act(x, cfg, "residual")
+    x = x + _self_attn(_norm_apply(x, p["ln1"], cfg), p["attn"], cfg,
+                       positions, causal)
+    x = shard_act(x, cfg, "residual")
+    h = _norm_apply(x, p["ln2"], cfg)
+    if cfg.is_moe:
+        from repro.models.moe import moe_ffn, moe_ffn_ep
+        b, s, d = h.shape
+        y = None
+        if cfg.moe_impl == "ep":
+            out = moe_ffn_ep(h, p["moe"], num_experts=cfg.num_experts,
+                             k=cfg.experts_per_token,
+                             capacity_factor=cfg.capacity_factor)
+            if out is not None:
+                y = out[0].reshape(b * s, d)
+        if y is None:
+            y, _aux = moe_ffn(h.reshape(b * s, d), p["moe"],
+                              num_experts=cfg.num_experts,
+                              k=cfg.experts_per_token, impl=cfg.moe_impl,
+                              capacity_factor=cfg.capacity_factor)
+        x = x + y.reshape(b, s, d)
+    else:
+        x = x + _mlp(h, p["mlp"], cfg)
+    return shard_act(x, cfg, "residual")
+
+
+def _cross_block(x, p, cfg, positions, enc_out):
+    x = x + _self_attn(_norm_apply(x, p["ln1"], cfg), p["attn"], cfg,
+                       positions, causal=True)
+    h = _norm_apply(x, p["ln3"], cfg)
+    b, s, _ = x.shape
+    hd, hh, kv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = (h @ p["cross"]["wq"]).reshape(b, s, hh, hd)
+    kk = (enc_out @ p["cross"]["wk"]).reshape(b, -1, kv, hd)
+    vv = (enc_out @ p["cross"]["wv"]).reshape(b, -1, kv, hd)
+    out = attention_chunked(q, kk, vv, causal=False, kv_chunk=cfg.attn_chunk)
+    x = x + out.reshape(b, s, -1) @ p["cross"]["wo"]
+    x = x + _mlp(_norm_apply(x, p["ln2"], cfg), p["mlp"], cfg)
+    return x
+
+
+def _mlstm_block(x, p, cfg, state: ssm.SSDState | None = None,
+                 decode: bool = False):
+    """mLSTM: linear attention with exp gates via the SSD core.
+
+    The value vector is augmented with a constant 1-channel carrying the
+    normalizer n_t; output h = (S q) / max(|n q|, 1).
+    """
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    xin = _norm_apply(x, p["ln"], cfg)
+    q = (xin @ p["wq"]).reshape(b, s, h, hd)
+    k = (xin @ p["wk"]).reshape(b, s, h, hd) * (hd ** -0.5)
+    v = (xin @ p["wv"]).reshape(b, s, h, hd)
+    gates = (xin @ p["w_gates"]).reshape(b, s, 2, h).astype(jnp.float32)
+    i_gate = jnp.exp(jnp.clip(gates[:, :, 0], -10.0, 4.0))
+    log_f = jax.nn.log_sigmoid(gates[:, :, 1])
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    # ssd with per-head B=k, C=q requires S-dim == hd; here G=H so loop heads
+    # via vmapped single-head ssd (B_t = k_t, C_t = q_t).
+    def per_head(xh, ah, wh, bh, ch, st):
+        return ssm.ssd_decode_step(xh, ah, wh, bh, ch, st) if decode else \
+            ssm.ssd_chunked(xh, ah, wh, bh, ch, chunk=cfg.ssm_chunk, initial=st)
+
+    # fold heads into batch: (B*H, S, 1, P+1)
+    def fold(t, chan):
+        return jnp.moveaxis(t, 2, 1).reshape(b * h, s, *chan)
+    x_f = fold(v_aug, (1, hd + 1))
+    a_f = fold(log_f[..., None], (1,))
+    w_f = fold(i_gate[..., None], (1,))
+    b_f = fold(k, (hd,))
+    c_f = fold(q, (hd,))
+    st = state if state is not None else ssm.SSDState(
+        jnp.zeros((b * h, 1, hd, hd + 1), jnp.float32))
+    y, new_st = per_head(x_f, a_f, w_f, b_f, c_f, st)
+    y = y.reshape(b, h, s, hd + 1)
+    num, den = y[..., :hd], y[..., hd]
+    out = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    out = jnp.moveaxis(out, 1, 2).reshape(b, s, h * hd).astype(x.dtype)
+    o_gate = jax.nn.sigmoid(xin @ p["w_ogate"])
+    return x + (out * o_gate) @ p["wo"], new_st
+
+
+def _slstm_block(x, p, cfg, state=None):
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    xin = _norm_apply(x, p["ln"], cfg)
+    gates = (xin @ p["w_in"]).reshape(b, s, h, 4, hd)
+    hseq, new_state = ssm.slstm_scan(gates, p["r"], state)
+    return x + hseq.reshape(b, s, h * hd) @ p["wo"], new_state
+
+
+def _mamba_block(x, p, cfg, state=None, decode=False):
+    xin = _norm_apply(x, p["ln"], cfg)
+    y, new_state = ssm.mamba2_block(xin, p, cfg, state, decode)
+    return x + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _scan_segment(x, stack, cfg, positions, block_fn):
+    def body(h, layer_params):
+        out = block_fn(h, layer_params, cfg, positions)
+        return out, None
+    if cfg.remat and cfg.remat_policy != "none":
+        policy = None
+        if cfg.remat_policy == "dots":
+            policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+    x, _ = jax.lax.scan(body, x, stack)
+    return x
+
+
+def _run_encoder(params, cfg, audio_embeds):
+    x = audio_embeds + params["encoder"]["pos"][None]
+    positions = jnp.arange(x.shape[1])[None]
+    x = _scan_segment(x, params["encoder"]["stack"], cfg, positions,
+                      functools.partial(_dense_block, causal=False))
+    return _norm_apply(x, params["encoder"]["final_norm"], cfg)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            audio_embeds=None, patch_embeds=None) -> jnp.ndarray:
+    """tokens (B, S) -> logits (B, S, Vp).  Stub frontends feed
+    ``audio_embeds`` (encdec) or ``patch_embeds`` (vlm)."""
+    b, s_text = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard_act(x, cfg, "residual")
+    n_prefix = 0
+    if cfg.family == "vlm":
+        assert patch_embeds is not None
+        n_prefix = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None]
+    if cfg.family == "encdec":
+        x = x + params["dec_pos"][:s_text][None]
+        enc_out = _run_encoder(params, cfg, audio_embeds)
+        block = functools.partial(_cross_block, enc_out=enc_out)
+        x = _scan_segment(x, params["segments"][0], cfg, positions, block)
+    else:
+        for (kind, _n), seg in zip(segment_plan(cfg), params["segments"]):
+            if kind == "dense":
+                x = _scan_segment(x, seg, cfg, positions, _dense_block)
+            elif kind == "mamba":
+                def mb(h, lp, c, pos):
+                    out, _ = _mamba_block(h, lp, c)
+                    return out
+                x = _scan_segment(x, seg, cfg, positions, mb)
+            elif kind == "mlstm":
+                def ml(h, lp, c, pos):
+                    out, _ = _mlstm_block(h, lp, c)
+                    return out
+                x = _scan_segment(x, seg, cfg, positions, ml)
+            elif kind == "slstm":
+                layer = jax.tree.map(lambda t: t[0], seg)
+                x, _ = _slstm_block(x, layer, cfg)
+            elif kind == "shared_attn":
+                p = params["shared_attn"]
+                x = x + _self_attn(_norm_apply(x, p["ln1"], cfg), p["attn"],
+                                   cfg, positions, causal=True)
+                x = x + _mlp(_norm_apply(x, p["ln2"], cfg), p["mlp"], cfg)
+            else:
+                raise ValueError(kind)
+    x = _norm_apply(x, params["final_norm"], cfg)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return shard_act(x @ head, cfg, "ffn")
+
+
+def loss_fn(params, cfg, batch) -> jnp.ndarray:
+    logits = forward(params, cfg, batch["tokens"],
+                     audio_embeds=batch.get("audio_embeds"),
+                     patch_embeds=batch.get("patch_embeds"))
+    return cross_entropy(logits, batch["labels"], cfg.vocab_size)

@@ -1,0 +1,110 @@
+"""Gradient compression for the DP all-reduce.
+
+Three codecs, composable with error feedback:
+
+* ``hier`` — the paper's transform as a codec: gradients are reshaped to
+  pole bundles, 1-D-hierarchized (multi-resolution surplus basis), and
+  small surpluses are dropped.  Smooth gradient directions compress well
+  because the hierarchical surplus decays with level for smooth signals
+  (the same property that makes sparse grids work).  Exactly invertible at
+  truncation 0 — validated in tests.
+* ``int8`` — per-tensor symmetric quantization.
+* ``topk`` — magnitude top-k with error feedback (Stich et al. style).
+
+All codecs are linear-friendly: encode -> all-reduce -> decode commutes
+with summation (hier is linear; int8 sums in int32; topk sums sparse
+supports), so they drop into the gradient path before ``psum``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ref import dehierarchize_1d_ref, hierarchize_1d_ref
+
+__all__ = ["hier_encode", "hier_decode", "int8_encode", "int8_decode",
+           "topk_mask", "ErrorFeedback", "compress_with_feedback"]
+
+
+def _pole_shape(n: int, level: int) -> Tuple[int, int]:
+    pole = (1 << level) - 1
+    cols = -(-n // pole)
+    return pole, cols
+
+
+def hier_encode(g: jnp.ndarray, level: int = 8) -> jnp.ndarray:
+    """Flatten -> (2**level - 1, cols) pole bundle -> hierarchize axis 0."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    pole, cols = _pole_shape(flat.size, level)
+    pad = pole * cols - flat.size
+    buf = jnp.pad(flat, (0, pad)).reshape(cols, pole).T
+    return hierarchize_1d_ref(buf, axis=0)
+
+
+def hier_decode(alpha: jnp.ndarray, shape, dtype) -> jnp.ndarray:
+    buf = dehierarchize_1d_ref(alpha, axis=0)
+    n = int(np.prod(shape))
+    return buf.T.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def int8_encode(g: jnp.ndarray):
+    scale = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decode(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def topk_mask(x: jnp.ndarray, frac: float) -> jnp.ndarray:
+    """Magnitude top-``frac`` mask (1.0/0.0), computed per tensor."""
+    flat = jnp.abs(x.reshape(-1).astype(jnp.float32))
+    k = max(1, int(frac * flat.size))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x.astype(jnp.float32)) >= thresh).astype(jnp.float32)
+
+
+class ErrorFeedback(NamedTuple):
+    residual: Any
+
+
+def init_error_feedback(params) -> ErrorFeedback:
+    return ErrorFeedback(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress_with_feedback(grads, ef: ErrorFeedback, *, codec: str = "hier",
+                           level: int = 8, frac: float = 0.1
+                           ) -> Tuple[Any, ErrorFeedback]:
+    """Per-tensor: add residual, encode+truncate, keep what was dropped.
+
+    Returns (decoded approximate grads — what the all-reduce would carry —
+    and the new error-feedback state).  In the distributed step the encoded
+    representation is what crosses the wire; here encode/decode round-trips
+    locally so the numerics of the update are identical.
+    """
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        if codec == "hier":
+            alpha = hier_encode(g32, level)
+            mask = topk_mask(alpha, frac)
+            approx = hier_decode(alpha * mask, g32.shape, jnp.float32)
+        elif codec == "topk":
+            approx = g32 * topk_mask(g32, frac)
+        elif codec == "int8":
+            q, s = int8_encode(g32)
+            approx = int8_decode(q, s, jnp.float32)
+        else:
+            raise ValueError(codec)
+        return approx.astype(g.dtype), g32 - approx
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            ErrorFeedback(treedef.unflatten([o[1] for o in out])))

@@ -1,0 +1,63 @@
+"""Elastic scaling: remesh on device-count change.
+
+On TPU pods, a failed host shrinks the usable slice; the recovery path is
+(1) checkpoint is already mesh-independent (see ``repro.checkpoint``),
+(2) ``plan_mesh`` picks the best (data, model) factorization for the new
+chip count under the constraint that TP stays within a pod's ICI domain,
+(3) the launcher re-lowers the step for the new mesh and restores.
+
+``plan_mesh`` is pure policy (unit-testable without devices).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+__all__ = ["MeshPlan", "plan_mesh"]
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    pods: int
+    data: int
+    model: int
+
+    @property
+    def chips(self) -> int:
+        return self.pods * self.data * self.model
+
+    def axes(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.pods > 1 else ("data", "model")
+
+    def shape(self) -> Tuple[int, ...]:
+        return (self.pods, self.data, self.model) if self.pods > 1 \
+            else (self.data, self.model)
+
+
+def plan_mesh(num_chips: int, *, chips_per_pod: int = 256,
+              preferred_model: int = 16,
+              min_model: int = 1) -> Optional[MeshPlan]:
+    """Largest usable mesh for ``num_chips`` with TP <= intra-pod size.
+
+    Policy: keep model parallelism at ``preferred_model`` when divisible
+    (TP wants the all-reduce-heavy axis on intra-pod ICI), shrink it
+    otherwise; whole pods first, remainder chips are dropped (a 511-chip
+    slice runs as 1 pod + the biggest power-of-two fraction of the next).
+    """
+    if num_chips <= 0:
+        return None
+    pods = max(1, num_chips // chips_per_pod)
+    if num_chips >= chips_per_pod:
+        per_pod = chips_per_pod
+    else:
+        # single partial pod: biggest power of two that fits
+        per_pod = 1
+        while per_pod * 2 <= num_chips:
+            per_pod *= 2
+        pods = 1
+    model = preferred_model
+    while model > min_model and per_pod % model:
+        model //= 2
+    data = per_pod // model
+    return MeshPlan(pods=pods, data=data, model=model)

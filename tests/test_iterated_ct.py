@@ -1,0 +1,87 @@
+"""Integration: PDE solver + iterated combination technique (paper Fig. 2)."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.interpolation import sample_function
+from repro.core.iterated import IteratedCombination, run_iterated_heat
+from repro.core.levels import CombinationScheme
+from repro.core.pde import heat_exact_factor, heat_init, heat_run, stable_dt
+
+
+def _exact(pts, dim, nu, t):
+    u0 = np.prod(np.sin(np.pi * np.asarray(pts)), axis=1)
+    return heat_exact_factor(dim, nu, t) * u0
+
+
+def test_heat_solver_single_grid_convergence():
+    """Full-grid explicit stepper matches the separable exact solution."""
+    nu, levels = 0.05, (5, 5)
+    u = heat_init(levels)
+    dt = stable_dt(levels, nu)
+    steps = 64
+    out = heat_run(u, steps, nu=nu, dt=dt)
+    t = steps * dt
+    exact = heat_exact_factor(2, nu, t) * np.asarray(heat_init(levels))
+    np.testing.assert_allclose(np.asarray(out), exact, rtol=0, atol=2e-3)
+
+
+@pytest.mark.parametrize("hier_method", ["ref", "fused"])
+def test_iterated_ct_tracks_exact_solution(hier_method):
+    it, t_total = run_iterated_heat(2, 4, rounds=2, t_steps=4,
+                                    hier_method=hier_method)
+    pts = np.random.default_rng(0).random((64, 2)) * 0.8 + 0.1
+    approx = np.asarray(it.evaluate(jnp.asarray(pts)))
+    err = np.max(np.abs(approx - _exact(pts, 2, 0.05, t_total)))
+    assert err < 0.05, err
+
+
+def test_iterated_ct_3d():
+    it, t_total = run_iterated_heat(3, 3, rounds=1, t_steps=4)
+    pts = np.random.default_rng(1).random((32, 3)) * 0.8 + 0.1
+    approx = np.asarray(it.evaluate(jnp.asarray(pts)))
+    err = np.max(np.abs(approx - _exact(pts, 3, 0.05, t_total)))
+    assert err < 0.08, err
+
+
+def test_communication_phase_improves_coarse_grids():
+    """After one communication phase, every combination grid carries the
+    sparse-grid solution (not only its own anisotropic view): the max error
+    of the WORST grid must shrink toward the combined solution's error."""
+    nu = 0.05
+    scheme = CombinationScheme(2, 5)
+    dt = min(stable_dt(ell, nu) for ell, _ in scheme.grids)
+    it = IteratedCombination(scheme,
+                             lambda ell, u, steps: heat_run(u, steps, nu=nu,
+                                                            dt=dt),
+                             hier_method="ref")
+    it.init(heat_init)
+    it.compute_phase(8)
+    t = 8 * dt
+
+    def worst_err(grids):
+        worst = 0.0
+        for ell, u in grids.items():
+            pts = np.stack(np.meshgrid(
+                *[np.arange(1, 2 ** l) / 2 ** l for l in ell],
+                indexing="ij"), -1).reshape(-1, len(ell))
+            worst = max(worst, float(np.max(np.abs(
+                np.asarray(u).reshape(-1) - _exact(pts, 2, nu, t)))))
+        return worst
+
+    before = worst_err(it.grids)
+    it.communication_phase()
+    after = worst_err(it.grids)
+    assert after <= before * 1.05  # comm never hurts; usually helps coarse
+
+
+def test_stable_dt_is_stable():
+    levels = (4, 4)
+    nu = 0.05
+    u = heat_init(levels)
+    out = heat_run(u, 200, nu=nu, dt=stable_dt(levels, nu))
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(u)))

@@ -1,0 +1,189 @@
+"""Pallas kernel sweeps: shapes x dtypes against the pure-jnp oracle.
+
+All kernels run in interpret=True (CPU container; TPU is the target)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.hierarchize import (apply_axis_matmul_pallas,
+                                       dehierarchize_nd_fused,
+                                       hier_axis0_pallas,
+                                       hier_fused_tail_pallas,
+                                       hier_pole_pallas, hierarchize_nd_fused)
+from repro.kernels.ops import dehierarchize, hierarchize
+
+DTYPES = [np.float32, np.float64]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-5, atol=2e-5) if dtype == np.float32 else \
+        dict(rtol=1e-11, atol=1e-12)
+
+
+def _bundle(level, cols, dtype, seed=0):
+    n = (1 << level) - 1
+    return np.random.default_rng(seed).standard_normal(
+        (n, cols)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pole kernel (paper-faithful over-vectorization)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("level", [2, 3, 5, 8, 11])
+@pytest.mark.parametrize("cols", [1, 3, 128, 200])
+def test_pole_kernel_sweep(level, cols, dtype):
+    x = _bundle(level, cols, dtype, seed=level * 100 + cols)
+    want = ref.hierarchize_1d_bruteforce(x, axis=0).astype(dtype)
+    got = np.asarray(hier_pole_pallas(jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+@pytest.mark.parametrize("reduced_op", [True, False])
+def test_pole_kernel_reduced_op(reduced_op):
+    x = _bundle(6, 64, np.float64, seed=1)
+    want = ref.hierarchize_1d_bruteforce(x, axis=0)
+    got = np.asarray(hier_pole_pallas(jnp.asarray(x), reduced_op=reduced_op,
+                                      interpret=True))
+    np.testing.assert_allclose(got, want, **_tol(np.float64))
+
+
+@pytest.mark.parametrize("lane_tile", [128, 256])
+def test_pole_kernel_lane_tiles(lane_tile):
+    x = _bundle(5, 300, np.float64, seed=2)
+    want = ref.hierarchize_1d_bruteforce(x, axis=0)
+    got = np.asarray(hier_pole_pallas(jnp.asarray(x), lane_tile=lane_tile,
+                                      interpret=True))
+    np.testing.assert_allclose(got, want, **_tol(np.float64))
+
+
+def test_pole_kernel_level1_identity():
+    x = _bundle(1, 8, np.float64)
+    got = np.asarray(hier_pole_pallas(jnp.asarray(x), interpret=True))
+    np.testing.assert_array_equal(got, x)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("level", [2, 4, 7, 10])
+@pytest.mark.parametrize("cols", [1, 64, 200])
+def test_dehier_pole_kernel_sweep(level, cols, dtype):
+    from repro.kernels.hierarchize import dehier_pole_pallas
+    x = _bundle(level, cols, dtype, seed=level * 13 + cols)
+    alpha = ref.hierarchize_1d_ref(jnp.asarray(x.astype(np.float64)), axis=0)
+    back = np.asarray(dehier_pole_pallas(alpha.astype(dtype),
+                                         interpret=True))
+    np.testing.assert_allclose(back, x, **_tol(dtype))
+
+
+def test_pole_roundtrip_pallas_only():
+    from repro.kernels.hierarchize import dehier_pole_pallas
+    x = _bundle(8, 96, np.float64, seed=42)
+    alpha = hier_pole_pallas(jnp.asarray(x), interpret=True)
+    back = np.asarray(dehier_pole_pallas(alpha, interpret=True))
+    np.testing.assert_allclose(back, x, rtol=1e-11, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# MXU matmul kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("level", [2, 4, 7, 10])
+@pytest.mark.parametrize("cols", [1, 64, 513])
+def test_matmul_kernel_sweep(level, cols, dtype):
+    x = _bundle(level, cols, dtype, seed=level * 7 + cols)
+    want = ref.hierarchize_1d_bruteforce(x, axis=0).astype(dtype)
+    got = np.asarray(apply_axis_matmul_pallas(jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+@pytest.mark.parametrize("level", [2, 4, 7])
+def test_matmul_kernel_inverse(level):
+    x = _bundle(level, 32, np.float64, seed=3)
+    alpha = apply_axis_matmul_pallas(jnp.asarray(x), interpret=True)
+    back = np.asarray(apply_axis_matmul_pallas(alpha, inverse=True,
+                                               interpret=True))
+    np.testing.assert_allclose(back, x, rtol=1e-10, atol=1e-12)
+
+
+def test_matmul_bf16_accumulates_f32():
+    x = _bundle(6, 128, np.float32, seed=4)
+    got = np.asarray(apply_axis_matmul_pallas(
+        jnp.asarray(x, jnp.bfloat16), interpret=True).astype(jnp.float32))
+    want = ref.hierarchize_1d_bruteforce(x.astype(np.float64), axis=0)
+    assert np.max(np.abs(got - want)) < 0.15  # bf16 input quantization only
+
+
+# ---------------------------------------------------------------------------
+# Fused kernels (beyond-paper: several axes per HBM round trip)
+# ---------------------------------------------------------------------------
+
+SHAPES_ND = [(3,), (7, 7), (15, 3), (3, 7, 15), (7, 3, 3, 7)]
+
+
+@pytest.mark.parametrize("shape", SHAPES_ND)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_nd_sweep(shape, dtype):
+    x = np.random.default_rng(hash(shape) % 2 ** 31).standard_normal(
+        shape).astype(dtype)
+    want = np.asarray(ref.hierarchize_nd_ref(
+        jnp.asarray(x.astype(np.float64)))).astype(dtype)
+    got = np.asarray(hierarchize_nd_fused(jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES_ND)
+def test_fused_nd_roundtrip(shape):
+    x = np.random.default_rng(5).standard_normal(shape)
+    alpha = hierarchize_nd_fused(jnp.asarray(x), interpret=True)
+    back = np.asarray(dehierarchize_nd_fused(alpha, interpret=True))
+    np.testing.assert_allclose(back, x, rtol=1e-9, atol=1e-11)
+
+
+def test_fused_tail_only_transforms_tail():
+    x = np.random.default_rng(6).standard_normal((7, 15))
+    got = np.asarray(hier_fused_tail_pallas(jnp.asarray(x), interpret=True))
+    want = np.asarray(ref.hierarchize_1d_ref(jnp.asarray(x), axis=1))
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-12)
+
+
+def test_axis0_only_transforms_axis0():
+    x = np.random.default_rng(7).standard_normal((15, 7))
+    got = np.asarray(hier_axis0_pallas(jnp.asarray(x), interpret=True))
+    want = np.asarray(ref.hierarchize_1d_ref(jnp.asarray(x), axis=0))
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-12)
+
+
+def test_fused_row_tile_budget():
+    """Tiny VMEM budget forces multi-step grids; result must not change."""
+    x = np.random.default_rng(8).standard_normal((31, 15, 7))
+    a = np.asarray(hier_fused_tail_pallas(jnp.asarray(x), interpret=True,
+                                          vmem_budget_bytes=16 * 1024))
+    b = np.asarray(hier_fused_tail_pallas(jnp.asarray(x), interpret=True))
+    np.testing.assert_allclose(a, b, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["func", "ref", "gather", "pole",
+                                    "matmul", "fused", "auto"])
+def test_dispatch_methods_agree(method):
+    x = np.random.default_rng(9).standard_normal((15, 7))
+    want = ref.hierarchize_1d_bruteforce(
+        ref.hierarchize_1d_bruteforce(x, axis=0), axis=1)
+    got = np.asarray(hierarchize(jnp.asarray(x), method, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+
+
+@pytest.mark.parametrize("method", ["func", "ref", "pole", "matmul",
+                                    "fused", "auto"])
+def test_dispatch_dehier_agree(method):
+    x = np.random.default_rng(10).standard_normal((15, 7))
+    alpha = hierarchize(jnp.asarray(x), "ref")
+    got = np.asarray(dehierarchize(alpha, method, interpret=True))
+    np.testing.assert_allclose(got, x, rtol=1e-9, atol=1e-11)

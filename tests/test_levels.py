@@ -1,0 +1,126 @@
+"""Level-vector algebra, combination coefficients, flop counts."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import levels as L
+
+
+def test_points_per_dim():
+    assert [L.points_per_dim(l) for l in (1, 2, 3, 5)] == [1, 3, 7, 31]
+    with pytest.raises(ValueError):
+        L.points_per_dim(0)
+
+
+def test_grid_shape_and_bytes():
+    assert L.grid_shape((2, 3)) == (3, 7)
+    assert L.num_points((2, 3)) == 21
+    assert L.grid_bytes((2, 3)) == 21 * 8
+
+
+@given(st.integers(1, 4), st.integers(1, 7))
+def test_partition_of_unity(dim, level):
+    """Every sparse-grid subspace is covered with total coefficient 1 —
+    the inclusion-exclusion identity behind the combination technique."""
+    scheme = L.CombinationScheme(dim, level)
+    assert scheme.validate_partition_of_unity()
+
+
+@given(st.integers(1, 4), st.integers(1, 6))
+def test_combination_coefficients_sum(dim, level):
+    """Coefficients sum to 1 (the constant function is reproduced)."""
+    assert sum(c for _, c in L.combination_grids(dim, level)) == 1
+
+
+@given(st.integers(2, 4), st.integers(2, 6))
+def test_grid_count_matches_formula(dim, level):
+    """#grids on diagonal q: C(level-1+q_offset...)-style binomials; verify
+    against direct enumeration of |ell|_1 = s, ell >= 1."""
+    for q in range(min(dim, level)):
+        s = level + dim - 1 - q
+        got = len(list(L.level_vectors_with_sum(dim, s)))
+        assert got == math.comb(s - 1, dim - 1)
+
+
+def test_subspace_slices_partition_grid():
+    """The subspaces W_m, m <= ell partition the nodes of grid ell."""
+    ell = (3, 4)
+    seen = np.zeros(L.grid_shape(ell), dtype=int)
+    for m in L.subspaces_of_grid(ell):
+        seen[L.subspace_slices(m, ell)] += 1
+    assert (seen == 1).all()
+
+
+def test_subspace_num_points():
+    assert L.subspace_num_points((1, 1)) == 1
+    assert L.subspace_num_points((3, 2)) == 4 * 2
+
+
+# ---------------------------------------------------------------------------
+# Flop counts: instrument Alg. 1 directly and compare
+# ---------------------------------------------------------------------------
+
+def _count_predecessor_edges_1d(level: int) -> int:
+    """Walk Alg. 1's inner loops for one pole and count predecessor edges."""
+    n = (1 << level) - 1
+    edges = 0
+    for p in range(1, n + 1):
+        t = (p & -p).bit_length() - 1
+        s = 1 << t
+        lam = level - t
+        if lam == 1:
+            continue  # the root has no update
+        if p - s > 0:
+            edges += 1
+        if p + s < (1 << level):
+            edges += 1
+    return edges
+
+
+@given(st.integers(1, 12))
+def test_predecessor_edges_formula(level):
+    assert L.predecessor_edges_1d(level) == _count_predecessor_edges_1d(level)
+
+
+@given(st.lists(st.integers(1, 6), min_size=1, max_size=4))
+def test_flops_exact_vs_eq1(levels):
+    """Instrumented Alg. 1 count == flops_exact == 2 x Eq. (1) + 4*l_i terms.
+
+    (The verbatim Eq. (1) uses 2^{l}-2l-2 edge terms; the exact count is
+    2^{l+1}-2l-2.  The discrepancy is documented in DESIGN.md Sect. 1.)
+    """
+    levels = tuple(levels)
+    exact = L.flops_exact(levels)
+    # 1 add + 1 mul per edge
+    manual = 2 * sum(_count_predecessor_edges_1d(li) *
+                     L._prod_other(levels, i) for i, li in enumerate(levels))
+    assert exact == manual
+    eq1 = L.flops_eq1(levels)
+    assert eq1 % 2 == 0
+    # Eq.1 <= exact, equality in the (degenerate) level-1 factors
+    assert eq1 <= exact
+
+
+@given(st.lists(st.integers(2, 8), min_size=1, max_size=3))
+def test_muls_reduced_less_than_adds(levels):
+    levels = tuple(levels)
+    adds = L.adds_exact(levels)
+    muls = L.muls_reduced(levels)
+    assert muls <= adds
+
+
+def test_hierarchization_bytes():
+    assert L.hierarchization_bytes((3, 3)) == 2 * 2 * 49 * 8
+    assert L.hierarchization_bytes((3, 3), passes=2) == 2 * 2 * 49 * 8
+    assert L.hierarchization_bytes((3, 3), passes=1) == 2 * 49 * 8
+
+
+def test_scheme_point_counts():
+    s = L.CombinationScheme(2, 3)
+    # 2-D level 3: grids |l|=4 (3 grids, +1) and |l|=3 (2 grids, -1)
+    assert len(s.grids) == 5
+    assert s.sparse_points() == sum(
+        L.subspace_num_points(m) for m in s.subspaces)

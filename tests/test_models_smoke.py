@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests (assignment requirement) + decode parity.
+
+Every assigned arch instantiates its REDUCED same-family config and runs
+one forward/train step on CPU asserting output shapes + no NaNs; the
+decode path is validated against prefill logits token-by-token (the
+strongest cache-correctness check).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models import model as M
+from repro.models.config import ShapeConfig, model_flops
+from repro.models.transformer import forward, init_params
+from repro.optim.schedule import constant
+
+TRAIN_SHAPE = ShapeConfig("smoke_train", 16, 2, "train")
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_shapes_and_finite(arch, key):
+    cfg = get_smoke_config(arch)
+    params, opt = init_train_state(key, cfg)
+    batch = M.make_batch(cfg, TRAIN_SHAPE, key)
+    step = jax.jit(make_train_step(cfg, constant(1e-3)))
+    new_p, new_o, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(new_o.step) == 1
+    # params moved but stayed finite
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), params, new_p)
+    assert max(jax.tree.leaves(moved)) > 0.0
+    for leaf in jax.tree.leaves(new_p):
+        assert np.isfinite(np.asarray(leaf, dtype=np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_logits_shape(arch, key):
+    cfg = get_smoke_config(arch)
+    params = init_params(key, cfg)
+    batch = M.make_batch(cfg, TRAIN_SHAPE, key)
+    logits = forward(params, cfg, batch["tokens"],
+                     audio_embeds=batch.get("audio_embeds"),
+                     patch_embeds=batch.get("patch_embeds"))
+    assert logits.shape == (2, 16, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+
+
+def _decode_all(cfg, params, tokens, cache):
+    """Greedy replay of ``tokens`` through serve_step; returns (T, V) logits."""
+    b, t = tokens.shape
+    step = jax.jit(lambda p, c, bt: M.serve_step(p, cfg, c, bt))
+    outs = []
+    for pos in range(t):
+        logits, cache = step(params, cache,
+                             {"token": tokens[:, pos:pos + 1],
+                              "pos": jnp.asarray(pos, jnp.int32)})
+        outs.append(logits[:, 0])
+    return jnp.stack(outs, axis=1), cache
+
+
+PARITY_ARCHS = [a for a in ARCH_IDS if a != "llava_next_34b"]
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_decode_matches_prefill(arch, key):
+    """Token-by-token decode logits == full prefill logits (cache parity)."""
+    cfg = get_smoke_config(arch)
+    params = init_params(key, cfg)
+    t = 8
+    tokens = jax.random.randint(key, (2, t), 0, cfg.vocab_size, jnp.int32)
+    cache = M.init_decode_cache(cfg, 2, t)
+    kwargs = {}
+    if cfg.family == "encdec":
+        audio = (jax.random.normal(key, (2, cfg.encoder_seq, cfg.d_model))
+                 * 0.02).astype(jnp.float32)
+        cache["cross"] = M.encode_for_decode(params, cfg, audio)
+        kwargs["audio_embeds"] = audio
+    want = forward(params, cfg, tokens, **kwargs)
+    got, _ = _decode_all(cfg, params, tokens, cache)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want, dtype=np.float32),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_vlm_decode_runs(key):
+    cfg = get_smoke_config("llava_next_34b")
+    params = init_params(key, cfg)
+    cache = M.init_decode_cache(cfg, 2, 8)
+    logits, cache2 = M.serve_step(params, cfg, cache,
+                                  {"token": jnp.zeros((2, 1), jnp.int32),
+                                   "pos": jnp.asarray(0, jnp.int32)})
+    assert logits.shape == (2, 1, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+# ---------------------------------------------------------------------------
+# Full (published) configs: structure only, no allocation
+# ---------------------------------------------------------------------------
+
+_EXPECTED_PARAMS = {  # published ballparks (±25% — analytic count)
+    "qwen3_moe_235b_a22b": 235e9,
+    "olmoe_1b_7b": 6.9e9,
+    "chatglm3_6b": 6.2e9,
+    "glm4_9b": 9.4e9,
+    "smollm_360m": 0.36e9,
+    "codeqwen15_7b": 7.3e9,
+    "xlstm_1_3b": 1.3e9,
+    "zamba2_1_2b": 1.2e9,
+    "llava_next_34b": 34e9,
+}
+
+
+@pytest.mark.parametrize("arch", sorted(_EXPECTED_PARAMS))
+def test_full_config_param_count(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    want = _EXPECTED_PARAMS[arch]
+    assert 0.7 * want < n < 1.45 * want, f"{arch}: {n / 1e9:.2f}B vs {want / 1e9:.2f}B"
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("qwen3_moe_235b_a22b")
+    act = cfg.active_param_count()
+    assert act < 0.2 * cfg.param_count()
+    assert 15e9 < act < 30e9  # ~22B active
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_abstract_init(arch):
+    """eval_shape of the FULL config: structure is buildable w/o allocation."""
+    cfg = get_config(arch)
+    sds = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    total = sum(np.prod(l.shape) for l in jax.tree.leaves(sds))
+    assert total > 0.9 * cfg.param_count() * 0.5  # same order of magnitude
+
+
+def test_model_flops_convention():
+    cfg = get_config("smollm_360m")
+    tr = model_flops(cfg, ShapeConfig("t", 4096, 256, "train"))
+    pf = model_flops(cfg, ShapeConfig("p", 4096, 256, "prefill"))
+    assert tr == 3 * pf

@@ -1,0 +1,153 @@
+"""SSD core / Mamba2 / sLSTM: chunked forms vs sequential references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm
+from repro.models.config import ModelConfig
+
+
+def _ssd_sequential(x, a, w, bmat, cmat):
+    """Step-by-step reference of the SSD recurrence (f64)."""
+    b, l, h, p = x.shape
+    s = bmat.shape[-1]
+    st = np.zeros((b, h, s, p))
+    ys = np.zeros((b, l, h, p))
+    x, a, w = np.asarray(x, np.float64), np.asarray(a, np.float64), \
+        np.asarray(w, np.float64)
+    bmat, cmat = np.asarray(bmat, np.float64), np.asarray(cmat, np.float64)
+    for t in range(l):
+        decay = np.exp(a[:, t])[:, :, None, None]
+        contrib = np.einsum("bh,bs,bhp->bhsp", w[:, t], bmat[:, t], x[:, t])
+        st = st * decay + contrib
+        ys[:, t] = np.einsum("bs,bhsp->bhp", cmat[:, t], st)
+    return ys, st
+
+
+def _ssd_inputs(rng, b=2, l=24, h=3, p=4, s=5):
+    x = jnp.asarray(rng.standard_normal((b, l, h, p)))
+    a = jnp.asarray(-np.abs(rng.standard_normal((b, l, h))) * 0.3)
+    w = jnp.asarray(np.abs(rng.standard_normal((b, l, h))))
+    bmat = jnp.asarray(rng.standard_normal((b, l, s)))
+    cmat = jnp.asarray(rng.standard_normal((b, l, s)))
+    return x, a, w, bmat, cmat
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 24, 32])
+def test_ssd_chunked_matches_sequential(rng, chunk):
+    x, a, w, bmat, cmat = _ssd_inputs(rng)
+    want_y, want_s = _ssd_sequential(x, a, w, bmat, cmat)
+    got_y, got_st = ssm.ssd_chunked(x, a, w, bmat, cmat, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got_y), want_y, rtol=3e-5,
+                               atol=3e-6)
+    np.testing.assert_allclose(np.asarray(got_st.s), want_s, rtol=3e-5,
+                               atol=3e-6)
+
+
+def test_ssd_chunked_carries_initial_state(rng):
+    x, a, w, bmat, cmat = _ssd_inputs(rng, l=16)
+    # run halves with carried state == run full
+    y_full, st_full = ssm.ssd_chunked(x, a, w, bmat, cmat, chunk=4)
+    y1, st1 = ssm.ssd_chunked(x[:, :8], a[:, :8], w[:, :8], bmat[:, :8],
+                              cmat[:, :8], chunk=4)
+    y2, st2 = ssm.ssd_chunked(x[:, 8:], a[:, 8:], w[:, 8:], bmat[:, 8:],
+                              cmat[:, 8:], chunk=4, initial=st1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=3e-5, atol=3e-6)
+    np.testing.assert_allclose(np.asarray(st2.s), np.asarray(st_full.s),
+                               rtol=3e-5, atol=3e-6)
+
+
+def test_ssd_decode_step_matches_chunked(rng):
+    x, a, w, bmat, cmat = _ssd_inputs(rng, l=6)
+    y_full, _ = ssm.ssd_chunked(x, a, w, bmat, cmat, chunk=8)
+    st = ssm.SSDState(jnp.zeros((2, 3, 5, 4)))
+    for t in range(6):
+        y_t, st = ssm.ssd_decode_step(x[:, t:t + 1], a[:, t:t + 1],
+                                      w[:, t:t + 1], bmat[:, t:t + 1],
+                                      cmat[:, t:t + 1], st)
+        np.testing.assert_allclose(np.asarray(y_t)[:, 0],
+                                   np.asarray(y_full)[:, t],
+                                   rtol=3e-5, atol=3e-6)
+
+
+def _mamba_cfg():
+    return ModelConfig(name="t", family="hybrid", num_layers=1, d_model=32,
+                       num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=64,
+                       head_dim=8, ssm_state=8, ssm_expand=2, ssm_chunk=8,
+                       dtype="float32")
+
+
+def test_mamba2_decode_matches_prefill(rng):
+    from repro.models.transformer import _mamba_layer_params
+    cfg = _mamba_cfg()
+    p = _mamba_layer_params(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.standard_normal((2, 10, cfg.d_model)), jnp.float32)
+    y_full, _ = ssm.mamba2_block(x, p, cfg)
+    di, s, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    st = ssm.Mamba2State(
+        ssm.SSDState(jnp.zeros((2, nh, s, di // nh), jnp.float32)),
+        jnp.zeros((2, cfg.ssm_conv - 1, di + 2 * s), jnp.float32))
+    for t in range(10):
+        y_t, st = ssm.mamba2_block(x[:, t:t + 1], p, cfg, st, decode=True)
+        np.testing.assert_allclose(np.asarray(y_t)[:, 0],
+                                   np.asarray(y_full)[:, t],
+                                   rtol=2e-4, atol=2e-4)
+
+
+def _slstm_sequential(x_gates, r):
+    """Plain python reference of the exact sLSTM recurrence."""
+    b, l, h, _, hd = x_gates.shape
+    c = np.zeros((b, h, hd))
+    n = np.zeros((b, h, hd)) + 1e-6
+    m = np.zeros((b, h, hd)) - 1e9
+    hh = np.zeros((b, h, hd))
+    xg = np.asarray(x_gates, np.float64)
+    r = np.asarray(r, np.float64)
+    outs = np.zeros((b, l, h, hd))
+    for t in range(l):
+        rec = np.einsum("bhd,hdgf->bhgf", hh, r)
+        g = xg[:, t] + rec
+        it, ft, zt, ot = g[:, :, 0], g[:, :, 1], g[:, :, 2], g[:, :, 3]
+        m_new = np.maximum(ft + m, it)
+        i = np.exp(it - m_new)
+        f = np.exp(ft + m - m_new)
+        c = f * c + i * np.tanh(zt)
+        n = f * n + i
+        hh = 1 / (1 + np.exp(-ot)) * c / np.maximum(n, 1e-6)
+        m = m_new
+        outs[:, t] = hh
+    return outs
+
+
+def test_slstm_matches_sequential(rng):
+    b, l, h, hd = 2, 12, 2, 4
+    xg = jnp.asarray(rng.standard_normal((b, l, h, 4, hd)) * 0.5)
+    r = jnp.asarray(rng.standard_normal((h, hd, 4, hd)) * 0.2)
+    want = _slstm_sequential(xg, r)
+    got, _ = ssm.slstm_scan(xg, r)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=3e-5, atol=3e-6)
+
+
+def test_slstm_stateful_continuation(rng):
+    b, l, h, hd = 1, 8, 2, 4
+    xg = jnp.asarray(rng.standard_normal((b, l, h, 4, hd)) * 0.5)
+    r = jnp.asarray(rng.standard_normal((h, hd, 4, hd)) * 0.2)
+    full, _ = ssm.slstm_scan(xg, r)
+    h1, st = ssm.slstm_scan(xg[:, :4], r)
+    h2, _ = ssm.slstm_scan(xg[:, 4:], r, st)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(full), rtol=3e-5, atol=3e-6)
+
+
+def test_ssd_gradients_finite(rng):
+    x, a, w, bmat, cmat = _ssd_inputs(rng, l=8)
+
+    def loss(x):
+        y, _ = ssm.ssd_chunked(x, a, w, bmat, cmat, chunk=4)
+        return jnp.sum(y ** 2)
+
+    g = jax.grad(loss)(x)
+    assert np.isfinite(np.asarray(g)).all()
