@@ -1,0 +1,81 @@
+"""Dict-loop vs batched-executor CT communication phase.
+
+The repo's first multi-grid throughput number: for each scheme, time
+
+  * ``dict``    — the oracle path: one ``hierarchize(..., "ref")`` dispatch
+    per component grid + ``combine_full``'s per-grid embed loop, the whole
+    thing wrapped in ONE jit (so the comparison is dispatch structure, not
+    python overhead);
+  * ``batched`` — ``repro.core.executor.ct_transform``: bucket-batched
+    hierarchization + static-index-plan scatter-add, also one jit.
+
+Both paths produce the sparse-grid surplus on the common fine grid; the
+benchmark asserts they agree to 1e-12 before timing.
+
+  PYTHONPATH=src python benchmarks/executor_batched.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from common import time_call  # noqa: E402
+
+from repro.core import combination as comb  # noqa: E402
+from repro.core.executor import build_plan, ct_transform  # noqa: E402
+from repro.core.levels import CombinationScheme, grid_shape  # noqa: E402
+from repro.kernels.ops import hierarchize  # noqa: E402
+
+# (dim, sparse-grid level): d=10 stays at level 2 — the common fine grid
+# at (d=10, n=3) is 7^10 = 282M points, beyond any embedded representation
+SCHEMES = [(2, 5), (2, 7), (4, 4), (4, 5), (10, 2)]
+
+
+def dict_path(scheme):
+    def run(nodal_grids):
+        hier = {ell: hierarchize(u, "ref") for ell, u in nodal_grids.items()}
+        full, _ = comb.combine_full(hier, scheme)
+        return full
+    return jax.jit(run)
+
+
+def batched_path(scheme):
+    return jax.jit(functools.partial(ct_transform, scheme=scheme))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--reps", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    print(f"{'scheme':>10} {'grids':>6} {'buckets':>8} {'points':>10} "
+          f"{'dict_ms':>9} {'batched_ms':>11} {'speedup':>8}")
+    for dim, level in SCHEMES:
+        scheme = CombinationScheme(dim, level)
+        plan = build_plan(scheme)
+        rng = np.random.default_rng(dim * 100 + level)
+        grids = {ell: jnp.asarray(rng.standard_normal(grid_shape(ell)))
+                 for ell, _ in scheme.grids}
+
+        f_dict = dict_path(scheme)
+        f_batched = batched_path(scheme)
+        err = float(jnp.max(jnp.abs(f_dict(grids) - f_batched(grids))))
+        assert err < 1e-12, (dim, level, err)
+
+        t_dict = time_call(f_dict, grids, reps=args.reps)
+        t_batched = time_call(f_batched, grids, reps=args.reps)
+        print(f"{f'd={dim} n={level}':>10} {plan.num_grids:>6} "
+              f"{len(plan.buckets):>8} {scheme.total_points():>10} "
+              f"{t_dict * 1e3:>9.2f} {t_batched * 1e3:>11.2f} "
+              f"{t_dict / t_batched:>7.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Version-compat shims for the jax sharding API (supported: 0.4.35 - 0.7).
+
+The repo is written against the modern surface (``jax.shard_map``,
+``jax.sharding.AxisType`` / ``set_mesh`` / ``get_abstract_mesh``); the
+pinned runtime is jax 0.4.37, where those names live elsewhere or do not
+exist.  Every sharding-API touchpoint goes through this module so the
+version split lives in exactly one place:
+
+  * ``AxisType``            — real enum on >= 0.5, a stub otherwise (the
+                              0.4.x GSPMD partitioner is Auto-only, so the
+                              stub carries no behaviour).
+  * ``make_mesh``           — drops the ``axis_types`` kwarg when the
+                              installed ``jax.make_mesh`` predates it.
+  * ``shard_map``           — maps ``check_vma``/``axis_names`` onto the
+                              0.4.x ``check_rep``/``auto`` spelling.
+  * ``set_mesh``            — context manager; falls back to the classic
+                              ``with mesh:`` thread-resource context.
+  * ``get_abstract_mesh``   — falls back to the thread-resource physical
+                              mesh (what ``with mesh:`` installs).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import enum
+import inspect
+from typing import Optional
+
+import jax
+
+__all__ = ["AxisType", "make_mesh", "shard_map", "set_mesh",
+           "get_abstract_mesh", "cost_analysis"]
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on every supported jax
+    (0.4.x returns a one-element list of per-program dicts)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
+# ---------------------------------------------------------------------------
+# AxisType
+# ---------------------------------------------------------------------------
+
+try:
+    from jax.sharding import AxisType  # jax >= 0.5
+except ImportError:
+    class AxisType(enum.Enum):
+        """Stub of jax.sharding.AxisType for jax 0.4.x (Auto-only GSPMD)."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+_MAKE_MESH_HAS_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """jax.make_mesh that tolerates ``axis_types`` on every supported jax."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and _MAKE_MESH_HAS_AXIS_TYPES:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):                       # jax >= 0.6
+    _shard_map_impl = jax.shard_map
+    _NEW_SHARD_MAP = True
+else:                                               # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _NEW_SHARD_MAP = False
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              axis_names: Optional[set] = None):
+    """Modern shard_map signature on any supported jax.
+
+    ``axis_names`` selects the MANUAL mesh axes (partial shard_map); on
+    0.4.x this is spelled as ``auto = all_axes - axis_names`` and
+    ``check_vma`` is the old ``check_rep``.
+    """
+    if _NEW_SHARD_MAP:
+        kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs,
+                  "check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return _shard_map_impl(f, **kwargs)
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(set(mesh.axis_names) - set(axis_names))
+    # 0.4.x replication checking does not compose with partial-auto axes
+    check_rep = check_vma and not auto
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=check_rep,
+                           auto=auto)
+
+
+# ---------------------------------------------------------------------------
+# Mesh context: set_mesh / get_abstract_mesh
+# ---------------------------------------------------------------------------
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    On jax >= 0.6 this is ``jax.sharding.set_mesh`` (abstract-mesh aware);
+    on 0.4.x the classic ``with mesh:`` thread-resource context is the
+    equivalent (and what ``get_abstract_mesh`` below reads back).
+    """
+    modern = getattr(jax.sharding, "set_mesh", None)
+    if modern is not None:
+        return modern(mesh)
+    return _physical_mesh_context(mesh)
+
+
+@contextlib.contextmanager
+def _physical_mesh_context(mesh):
+    with mesh:
+        yield mesh
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or None when no mesh context is active.
+
+    Checks the modern abstract-mesh context first, then falls through to
+    the classic thread-resource mesh: on jax versions where
+    ``get_abstract_mesh`` exists but ``set_mesh`` does not, our
+    ``set_mesh`` shim installs the mesh via ``with mesh:``, which only the
+    fall-through sees."""
+    modern = getattr(jax.sharding, "get_abstract_mesh", None)
+    if modern is not None:
+        mesh = modern()
+        if mesh is not None and getattr(mesh, "shape", None):
+            return mesh
+    try:
+        from jax._src import mesh as mesh_lib
+        phys = mesh_lib.thread_resources.env.physical_mesh
+    except (ImportError, AttributeError):
+        return None
+    if phys is None or phys.empty:
+        return None
+    return phys

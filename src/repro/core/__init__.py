@@ -5,10 +5,12 @@ Layer map (DESIGN.md Sect. 3):
   levels        — level-vector algebra, combination coefficients, flop counts
   hierarchize   — layout strategies + (de)hierarchization entry points
   combination   — gather/scatter communication phase (subspace + embedded)
+  executor      — PRODUCTION comm phase: bucket-batched hierarchization +
+                  static index plan, one jitted ct_transform
   interpolation — nodal / hierarchical-basis evaluation (validation anchor)
   pde           — the black-box solvers of the compute phase
   iterated      — the iterated combination technique driver
-  distributed   — shard_map comm phase + grid-group placement
+  distributed   — shard_map comm phase + grid-group placement + psum gather
 """
 
 from repro.core.hierarchize import dehierarchize, hierarchize  # noqa: F401

@@ -17,6 +17,13 @@ Two realizations:
   * embedded (common fine grid)    — each grid scattered into a level-L
     buffer so gather is ONE dense sum (psum in the distributed version,
     ``repro.core.distributed``).
+
+Both realizations here are Python dict loops — one dispatch per grid (per
+subspace, even) — and serve as the readable oracle.  The PRODUCTION path
+is ``repro.core.executor.ct_transform``: the same embedded gather as
+``combine_full`` but bucket-batched and expressed as a precomputed static
+index plan, end-to-end jittable.  ``tests/test_executor.py`` pins the two
+paths together at 1e-12.
 """
 
 from __future__ import annotations
@@ -25,8 +32,9 @@ from typing import Dict, Mapping, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from repro.core.levels import (CombinationScheme, LevelVector, grid_shape,
-                               subspace_slices, subspaces_of_grid)
+from repro.core.levels import (CombinationScheme, LevelVector, fine_levels,
+                               grid_shape, subspace_slices,
+                               subspaces_of_grid)
 
 __all__ = [
     "gather_subspaces", "scatter_subspaces",
@@ -103,8 +111,7 @@ def combine_full(hier_grids: Mapping[LevelVector, jnp.ndarray],
     interpolant expressed on the fine grid.
     """
     if full_levels is None:
-        d = scheme.dim
-        full_levels = tuple(max(ell[i] for ell, _ in scheme.grids) for i in range(d))
+        full_levels = fine_levels(scheme)
     acc = None
     for ell, c in scheme.grids:
         emb = c * embed_to_full(hier_grids[ell], ell, full_levels)

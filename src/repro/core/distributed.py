@@ -27,12 +27,14 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core.levels import CombinationScheme, LevelVector, num_points
+from repro.compat import shard_map
+from repro.core.levels import (CombinationScheme, LevelVector, fine_levels,
+                               num_points)
 from repro.kernels.hierarchize import _padded_operator  # shared constant builder
 from repro.kernels.ops import hierarchize as hier_local
 
 __all__ = ["plan_grid_groups", "hierarchize_sharded", "gather_full_psum",
-           "comm_phase_sharded"]
+           "comm_phase_sharded", "ct_transform_psum"]
 
 
 def plan_grid_groups(scheme: CombinationScheme, num_groups: int
@@ -93,8 +95,8 @@ def hierarchize_sharded(x_padded: jnp.ndarray, level0: int, mesh: Mesh,
         return x_loc
 
     spec = P(axis_name, *([None] * (x_padded.ndim - 1)))
-    fn = jax.shard_map(partial(local_fn, hmat), mesh=mesh,
-                       in_specs=(spec,), out_specs=spec, check_vma=False)
+    fn = shard_map(partial(local_fn, hmat), mesh=mesh,
+                   in_specs=(spec,), out_specs=spec, check_vma=False)
     return fn(x_padded)
 
 
@@ -115,9 +117,9 @@ def gather_full_psum(embedded: jnp.ndarray, coeff: jnp.ndarray, mesh: Mesh,
         return jax.lax.psum(contrib, axis_name)
 
     in_specs = (P(axis_name, *([None] * (embedded.ndim - 1))), P(axis_name))
-    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                       out_specs=P(*([None] * (embedded.ndim - 1))),
-                       check_vma=False)
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=P(*([None] * (embedded.ndim - 1))),
+                   check_vma=False)
     return fn(embedded, coeff)
 
 
@@ -131,9 +133,7 @@ def comm_phase_sharded(hier_grids, scheme: CombinationScheme, mesh: Mesh,
     """
     from repro.core.combination import embed_to_full, extract_from_full
     if full_levels is None:
-        d = scheme.dim
-        full_levels = tuple(max(ell[i] for ell, _ in scheme.grids)
-                            for i in range(d))
+        full_levels = fine_levels(scheme)
     ells = [ell for ell, _ in scheme.grids]
     coeffs = jnp.asarray([float(c) for _, c in scheme.grids])
     emb = jnp.stack([embed_to_full(hier_grids[ell], ell, full_levels)
@@ -146,3 +146,27 @@ def comm_phase_sharded(hier_grids, scheme: CombinationScheme, mesh: Mesh,
         coeffs = jnp.pad(coeffs, (0, pad))
     combined = gather_full_psum(emb, coeffs, mesh, axis_name)
     return {ell: extract_from_full(combined, ell, full_levels) for ell in ells}
+
+
+def ct_transform_psum(nodal_grids, scheme: CombinationScheme, mesh: Mesh,
+                      axis_name: str,
+                      full_levels: Sequence[int] | None = None) -> jnp.ndarray:
+    """Distributed batched gather: the executor's bucket-batched
+    hierarchization + static index plan produce the per-grid embedded
+    surpluses, then ONE weighted psum over grid groups combines them —
+    the multi-node realization of ``repro.core.executor.ct_transform``.
+
+    Returns the replicated sparse-grid surplus on the common fine grid.
+    """
+    from repro.core.executor import ct_embedded
+    embedded, coeffs, _ = ct_embedded(nodal_grids, scheme,
+                                      full_levels=full_levels)
+    g = embedded.shape[0]
+    nshards = mesh.shape[axis_name]
+    pad = (-g) % nshards
+    if pad:
+        embedded = jnp.pad(embedded,
+                           [(0, pad)] + [(0, 0)] * (embedded.ndim - 1))
+        coeffs = jnp.pad(coeffs, (0, pad))
+    return gather_full_psum(embedded, coeffs.astype(embedded.dtype),
+                            mesh, axis_name)

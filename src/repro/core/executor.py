@@ -1,0 +1,246 @@
+"""Batched combination-technique executor.
+
+The dict-based communication phase (``repro.core.combination``) walks a
+Python dict of component grids and dispatches one hierarchization and one
+embed per grid — for a d=10 scheme that is hundreds of dispatches per
+combination step, none of which fuse.  This module replaces that with a
+fixed, precomputed execution plan so the whole CT transform is ONE jitted
+function:
+
+  1. **Bucketing** — component grids are grouped by canonical shape:
+     hierarchization is a tensor-product operator, so any grid can be
+     transposed to descending-level axis order without changing the
+     transform; all axis-permutations of one level multiset therefore
+     share a bucket (e.g. d=10, |ell|=12 has 55 grids but 2 buckets).
+     With this exact-canonical keying every member matches the bucket
+     target, so no intra-bucket padding occurs in practice; the
+     machinery for members BELOW the target (zero-padding to the common
+     ``2**l - 1`` extent, padded ``H (+) I`` operators, dump-slot index
+     routing) is in place and kernel-tested for the planned cost-driven
+     bucket merging (ROADMAP "Bucket merging").
+
+  2. **Batched hierarchization** — each bucket runs the fused Pallas
+     kernels ONCE with the member index as the leading Pallas grid
+     dimension (``repro.kernels.hierarchize.hierarchize_batched``):
+     kernel launches scale with the number of buckets, not grids.
+
+  3. **Static index plan** — the per-subspace gather/scatter dict is
+     replaced by a per-bucket ``(G, P)`` int32 index map into the
+     flattened common fine grid, precomputed from the scheme (embed
+     offsets ``(j+1) * 2**(L-l) - 1`` and row strides, pad positions
+     pointing at a dump slot).  The gather step is then one jitted
+     coefficient-weighted ``scatter-add`` per bucket; the scatter step is
+     the same map read in reverse (``take``).
+
+``ct_transform`` / ``ct_scatter`` are end-to-end jittable (scheme static),
+reused by the distributed psum path (``repro.core.distributed.
+ct_transform_psum``) and the surrogate-serving driver
+(``repro.launch.serve.CTSurrogate``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.levels import (CombinationScheme, LevelVector,
+                               canonical_levels, fine_levels, grid_shape)
+from repro.kernels.hierarchize import (dehierarchize_batched,
+                                       hierarchize_batched)
+
+__all__ = ["ExecutorPlan", "Bucket", "build_plan", "ct_transform",
+           "ct_scatter", "ct_embedded"]
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """One batch of component grids sharing a canonical (padded) shape."""
+
+    ells: Tuple[LevelVector, ...]        # original level vectors
+    perms: Tuple[Tuple[int, ...], ...]   # canon axis k <- original axis perm[k]
+    levels: Tuple[LevelVector, ...]      # canonicalized member level vectors
+    target: LevelVector                  # componentwise max over members
+    coeffs: np.ndarray                   # (G,) combination coefficients
+    index: np.ndarray                    # (G, P) int32 flat fine indices
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return grid_shape(self.target)
+
+
+@dataclass(frozen=True)
+class ExecutorPlan:
+    """Precomputed static execution plan for one scheme's comm phase."""
+
+    dim: int
+    full_levels: LevelVector
+    fine_shape: Tuple[int, ...]
+    buckets: Tuple[Bucket, ...]
+
+    @property
+    def fine_size(self) -> int:
+        return int(np.prod(self.fine_shape))
+
+    @property
+    def num_grids(self) -> int:
+        return sum(len(b.ells) for b in self.buckets)
+
+
+def _member_index_map(ell: LevelVector, perm: Tuple[int, ...],
+                      target: LevelVector, full_levels: LevelVector,
+                      fine_strides: np.ndarray, dump: int) -> np.ndarray:
+    """Flat fine-grid index for every position of the padded canonical
+    member array; pad positions map to the dump slot past the buffer.
+
+    Node j (0-based) of a level-l axis embeds at fine index
+    ``(j + 1) * 2**(L - l) - 1`` — the strided write of ``embed_to_full``,
+    expressed as a gather/scatter index map instead of a slice.
+    """
+    d = len(target)
+    shape = grid_shape(target)
+    idx = np.zeros(shape, np.int64)
+    bad = np.zeros(shape, bool)
+    for k in range(d):
+        a = perm[k]                       # original axis this canon axis is
+        l, big = ell[a], full_levels[a]
+        n = (1 << l) - 1
+        j = np.arange(shape[k])
+        v = np.where(j < n, (j + 1) * (1 << (big - l)) - 1, 0)
+        bc = [1] * d
+        bc[k] = shape[k]
+        idx += (v * fine_strides[a]).reshape(bc)
+        bad |= (j >= n).reshape(bc)
+    return np.where(bad, dump, idx).astype(np.int32).ravel()
+
+
+@lru_cache(maxsize=64)
+def build_plan(scheme: CombinationScheme,
+               full_levels: Optional[LevelVector] = None) -> ExecutorPlan:
+    """Bucket the scheme's grids and precompute the embed index plan."""
+    if full_levels is None:
+        full_levels = fine_levels(scheme)
+    full_levels = tuple(full_levels)
+    fine_shape = grid_shape(full_levels)
+    fine_size = int(np.prod(fine_shape))
+    fine_strides = np.ones(len(fine_shape), np.int64)
+    for a in range(len(fine_shape) - 2, -1, -1):
+        fine_strides[a] = fine_strides[a + 1] * fine_shape[a + 1]
+
+    groups: Dict[LevelVector, list] = {}
+    for ell, c in scheme.grids:
+        canon, perm = canonical_levels(ell)
+        groups.setdefault(canon, []).append((ell, perm, canon, c))
+
+    buckets = []
+    for key in sorted(groups, reverse=True):
+        members = groups[key]
+        target = tuple(max(lv[k] for _, _, lv, _ in members)
+                       for k in range(len(key)))
+        index = np.stack([
+            _member_index_map(ell, perm, target, full_levels, fine_strides,
+                              dump=fine_size)
+            for ell, perm, _, _ in members])
+        buckets.append(Bucket(
+            ells=tuple(m[0] for m in members),
+            perms=tuple(m[1] for m in members),
+            levels=tuple(m[2] for m in members),
+            target=target,
+            coeffs=np.asarray([float(m[3]) for m in members]),
+            index=index))
+    return ExecutorPlan(dim=scheme.dim, full_levels=full_levels,
+                        fine_shape=fine_shape, buckets=tuple(buckets))
+
+
+def _assemble_bucket(nodal_grids: Mapping[LevelVector, jnp.ndarray],
+                     bucket: Bucket) -> jnp.ndarray:
+    """Stack a bucket's grids: transpose to canonical order, zero-pad to
+    the bucket target shape (pad values never reach the fine buffer — the
+    index plan routes them to the dump slot)."""
+    shape = bucket.shape
+    parts = []
+    for ell, perm in zip(bucket.ells, bucket.perms):
+        g = jnp.transpose(jnp.asarray(nodal_grids[ell]), perm)
+        pad = [(0, t - s) for t, s in zip(shape, g.shape)]
+        parts.append(jnp.pad(g, pad))
+    return jnp.stack(parts)
+
+
+def ct_transform(nodal_grids: Mapping[LevelVector, jnp.ndarray],
+                 scheme: CombinationScheme, *,
+                 full_levels: Optional[Sequence[int]] = None,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Gather phase, batched: nodal component grids -> sparse-grid surplus
+    on the common fine grid.  Equals hierarchize-per-grid + ``combine_full``
+    to machine precision, in one jittable computation.
+    """
+    plan = (build_plan(scheme, tuple(full_levels)) if full_levels
+            else build_plan(scheme))  # bare call: one lru_cache key
+    dtype = jnp.result_type(*(jnp.asarray(v).dtype
+                              for v in nodal_grids.values()))
+    full = jnp.zeros(plan.fine_size + 1, dtype)   # +1: pad dump slot
+    for bucket in plan.buckets:
+        x = _assemble_bucket(nodal_grids, bucket)
+        alpha = hierarchize_batched(x, bucket.levels, interpret=interpret)
+        contrib = jnp.asarray(bucket.coeffs, dtype)[:, None] * \
+            alpha.reshape(len(bucket.ells), -1)
+        full = full.at[jnp.asarray(bucket.index)].add(contrib)
+    return full[:-1].reshape(plan.fine_shape)
+
+
+def ct_scatter(full: jnp.ndarray, scheme: CombinationScheme, *,
+               full_levels: Optional[Sequence[int]] = None,
+               interpret: Optional[bool] = None
+               ) -> Dict[LevelVector, jnp.ndarray]:
+    """Scatter phase, batched: sparse-grid surplus -> nodal values of the
+    combined solution on every component grid (truncating projection +
+    batched dehierarchization; inverse-direction read of the index plan).
+    """
+    plan = (build_plan(scheme, tuple(full_levels)) if full_levels
+            else build_plan(scheme))  # bare call: one lru_cache key
+    flat = jnp.concatenate([full.ravel(),
+                            jnp.zeros((1,), full.dtype)])  # dump slot reads 0
+    out: Dict[LevelVector, jnp.ndarray] = {}
+    for bucket in plan.buckets:
+        g = len(bucket.ells)
+        alpha = flat[jnp.asarray(bucket.index)].reshape((g,) + bucket.shape)
+        nodal = dehierarchize_batched(alpha, bucket.levels,
+                                      interpret=interpret)
+        for i, (ell, perm) in enumerate(zip(bucket.ells, bucket.perms)):
+            sl = tuple(slice(0, s) for s in grid_shape(bucket.levels[i]))
+            inv = np.argsort(np.asarray(perm))
+            out[ell] = jnp.transpose(nodal[i][sl], tuple(inv))
+    return out
+
+
+def ct_embedded(nodal_grids: Mapping[LevelVector, jnp.ndarray],
+                scheme: CombinationScheme, *,
+                full_levels: Optional[Sequence[int]] = None,
+                interpret: Optional[bool] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, Tuple[LevelVector, ...]]:
+    """Per-grid UNWEIGHTED embedded surpluses, batched: the distributed
+    gather input (``core.distributed.ct_transform_psum`` psums
+    ``coeffs @ embedded`` over grid groups).
+
+    Returns ``(embedded (G, *fine_shape), coeffs (G,), grid order)``.
+    """
+    plan = (build_plan(scheme, tuple(full_levels)) if full_levels
+            else build_plan(scheme))  # bare call: one lru_cache key
+    dtype = jnp.result_type(*(jnp.asarray(v).dtype
+                              for v in nodal_grids.values()))
+    chunks, coeffs, order = [], [], []
+    for bucket in plan.buckets:
+        g = len(bucket.ells)
+        x = _assemble_bucket(nodal_grids, bucket)
+        alpha = hierarchize_batched(x, bucket.levels, interpret=interpret)
+        buf = jnp.zeros((g, plan.fine_size + 1), dtype)
+        buf = buf.at[jnp.arange(g)[:, None],
+                     jnp.asarray(bucket.index)].set(alpha.reshape(g, -1))
+        chunks.append(buf[:, :-1].reshape((g,) + plan.fine_shape))
+        coeffs.append(bucket.coeffs)
+        order.extend(bucket.ells)
+    return (jnp.concatenate(chunks), jnp.asarray(np.concatenate(coeffs)),
+            tuple(order))

@@ -16,7 +16,7 @@ from __future__ import annotations
 import itertools
 import math
 from dataclasses import dataclass
-from functools import reduce
+from functools import cached_property, reduce
 from typing import Iterator, Sequence, Tuple
 
 LevelVector = Tuple[int, ...]
@@ -97,6 +97,26 @@ def subspace_num_points(m: Sequence[int]) -> int:
     return reduce(lambda a, b: a * b, (1 << (mi - 1) for mi in m), 1)
 
 
+def canonical_levels(levels: Sequence[int]) -> Tuple[LevelVector, Tuple[int, ...]]:
+    """Descending-sorted level vector and the permutation realizing it.
+
+    Returns ``(canon, perm)`` with ``canon[k] == levels[perm[k]]``.
+    Hierarchization is a tensor-product operator, so transposing a grid to
+    canonical axis order commutes with the transform — this is what lets
+    the batched executor bucket all axis-permutations of one level multiset
+    into a single kernel launch.
+    """
+    perm = tuple(sorted(range(len(levels)), key=lambda i: -levels[i]))
+    return tuple(levels[i] for i in perm), perm
+
+
+def fine_levels(scheme: "CombinationScheme") -> LevelVector:
+    """Per-axis maximum level over the scheme — the common fine grid every
+    communication-phase realization embeds into."""
+    return tuple(max(ell[i] for ell, _ in scheme.grids)
+                 for i in range(scheme.dim))
+
+
 def subspace_slices(m: Sequence[int], levels: Sequence[int]) -> Tuple[slice, ...]:
     """Strided slices extracting subspace W_m from the nodal-layout array of a
     combination grid with level vector ``levels``.
@@ -175,11 +195,11 @@ class CombinationScheme:
     dim: int
     level: int
 
-    @property
+    @cached_property
     def grids(self) -> Tuple[Tuple[LevelVector, int], ...]:
         return tuple(combination_grids(self.dim, self.level))
 
-    @property
+    @cached_property
     def subspaces(self) -> Tuple[LevelVector, ...]:
         return tuple(sparse_grid_subspaces(self.dim, self.level))
 

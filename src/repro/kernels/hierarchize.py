@@ -44,6 +44,11 @@ __all__ = [
     "hier_axis0_pallas",
     "hierarchize_nd_fused",
     "dehierarchize_nd_fused",
+    "hier_tail_batched_pallas",
+    "hier_axis0_batched_pallas",
+    "hierarchize_batched",
+    "hierarchize_batched_jnp",
+    "dehierarchize_batched",
 ]
 
 _LANE = 128
@@ -300,6 +305,204 @@ def hier_axis0_pallas(x: jnp.ndarray, *, inverse: bool = False,
     out = apply_axis_matmul_pallas(flat, inverse=inverse, lane_tile=lane_tile,
                                    interpret=interpret)
     return out.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Batched kernels: one bucket of same-shape grids per launch (CT executor)
+# ---------------------------------------------------------------------------
+#
+# The combination technique dispatches one hierarchization per component
+# grid; the executor (repro.core.executor) buckets grids that share a
+# canonical shape and launches ONE Pallas call per bucket with the grid
+# index as the leading Pallas grid dimension.  Per-member operator stacks
+# (G, npad, npad) let members sit at a level BELOW the bucket target: the
+# operator is then H_l (+) I, identity on the zero-padding, so padded
+# members transform exactly as their unpadded selves.
+
+def _op_stack(member_levels: Sequence[int], npad: int, dtype,
+              inverse: bool) -> np.ndarray:
+    """(G, npad, npad) per-member 1-D operators, identity on padding."""
+    return np.stack([_padded_operator(l, dtype, inverse=inverse, npad=npad)
+                     for l in member_levels])
+
+
+def _op_dtype(dtype):
+    return jnp.float32 if dtype == jnp.bfloat16 else dtype
+
+
+def _batched_tail_kernel(x_ref, *refs):
+    """Per-member operators applied to axes 2..d of a (1, R, N2..Nd) block.
+
+    Identical VMEM-resident fusion to ``_fused_tail_kernel``, plus the
+    leading bucket-member axis selected by the Pallas grid."""
+    ops, o_ref = refs[:-1], refs[-1]
+    x = x_ref[...][0]
+    for axis_off, h_ref in enumerate(ops):
+        axis = 1 + axis_off
+        h = h_ref[...][0]
+        x = jnp.moveaxis(jnp.tensordot(h, x, axes=[[1], [axis]]), 0, axis)
+    o_ref[...] = x[None]
+
+
+def hier_tail_batched_pallas(x: jnp.ndarray,
+                             member_levels: Sequence[Sequence[int]], *,
+                             inverse: bool = False,
+                             row_tile: int | None = None,
+                             vmem_budget_bytes: int = 4 * 1024 * 1024,
+                             interpret: bool | None = None) -> jnp.ndarray:
+    """(De)hierarchize grid axes 1..d-1 of a (G, N1, ..., Nd) bucket.
+
+    ``member_levels[g]`` is member g's level vector in bucket axis order;
+    entries below the bucket target level get the padded operator."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if x.ndim < 3:
+        raise ValueError("need (G, N1, N2, ...); use the axis-0 kernel for 1-D")
+    g = x.shape[0]
+    shape = x.shape[1:]
+    pads = [_round_up(s, _SUBLANE if i < len(shape) - 1 else _LANE)
+            for i, s in enumerate(shape)]
+    tail_elems = int(np.prod(pads[1:]))
+    itemsize = jnp.dtype(x.dtype).itemsize
+    if row_tile is None:
+        row_tile = max(1, vmem_budget_bytes // max(1, tail_elems * itemsize * 2))
+        row_tile = min(max(_SUBLANE, _round_up(row_tile, _SUBLANE)), pads[0])
+    rpad = _round_up(pads[0], row_tile)
+    xp = jnp.pad(x, [(0, 0), (0, rpad - shape[0])] +
+                 [(0, p - s) for p, s in zip(pads[1:], shape[1:])])
+    odt = _op_dtype(x.dtype)
+    ops_mats = [jnp.asarray(_op_stack([ml[1 + k] for ml in member_levels],
+                                      p, np.float64, inverse), odt)
+                for k, p in enumerate(pads[1:])]
+    nd = len(shape)
+
+    def x_index(gi, i):
+        return (gi, i) + (0,) * (nd - 1)
+
+    in_specs = [pl.BlockSpec((1, row_tile) + tuple(pads[1:]), x_index)]
+    for m in ops_mats:
+        in_specs.append(pl.BlockSpec((1,) + m.shape[1:],
+                                     lambda gi, i: (gi, 0, 0)))
+    out = pl.pallas_call(
+        _batched_tail_kernel,
+        grid=(g, rpad // row_tile),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, row_tile) + tuple(pads[1:]), x_index),
+        out_shape=jax.ShapeDtypeStruct((g, rpad) + tuple(pads[1:]), x.dtype),
+        interpret=interpret,
+    )(xp, *ops_mats)
+    return out[(slice(None),) + tuple(slice(0, s) for s in shape)]
+
+
+def _batched_matmul_kernel(h_ref, x_ref, o_ref):
+    o_ref[...] = jnp.dot(h_ref[...][0], x_ref[...][0],
+                         preferred_element_type=o_ref.dtype)[None]
+
+
+def hier_axis0_batched_pallas(x: jnp.ndarray, levels0: Sequence[int], *,
+                              inverse: bool = False, lane_tile: int = 512,
+                              interpret: bool | None = None) -> jnp.ndarray:
+    """(De)hierarchize grid axis 0 of a (G, N, B) bucket via MXU matmuls.
+
+    ``levels0[g]`` is member g's level along the transformed axis."""
+    if interpret is None:
+        interpret = _interpret_default()
+    g, n, b = x.shape
+    npad = _round_up(n, _SUBLANE)
+    lane_tile = min(lane_tile, _round_up(b, _LANE))
+    bpad = _round_up(b, lane_tile)
+    hmat = jnp.asarray(_op_stack(levels0, npad, np.float64, inverse),
+                       _op_dtype(x.dtype))
+    xp = jnp.pad(x, ((0, 0), (0, npad - n), (0, bpad - b)))
+    out = pl.pallas_call(
+        _batched_matmul_kernel,
+        grid=(g, bpad // lane_tile),
+        in_specs=[
+            pl.BlockSpec((1, npad, npad), lambda gi, i: (gi, 0, 0)),
+            pl.BlockSpec((1, npad, lane_tile), lambda gi, i: (gi, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, npad, lane_tile), lambda gi, i: (gi, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((g, npad, bpad), x.dtype),
+        interpret=interpret,
+    )(hmat, xp)
+    return out[:, :n, :b]
+
+
+def hierarchize_batched_jnp(x: jnp.ndarray,
+                            member_levels: Sequence[Sequence[int]], *,
+                            inverse: bool = False) -> jnp.ndarray:
+    """Batched (de)hierarchization as per-axis stacked-operator einsums.
+
+    No tile padding at all — the path of choice for high-d grids with
+    tiny axis extents (a 3^10 grid would pad to 8^9 x 128 under the TPU
+    sublane/lane tiling, a ~36000x blowup) and the interpret-mode oracle
+    for the Pallas kernels."""
+    member_levels = [tuple(ml) for ml in member_levels]
+    d = x.ndim - 1
+    odt = _op_dtype(x.dtype)
+    for k in range(d):
+        h = jnp.asarray(_op_stack([ml[k] for ml in member_levels],
+                                  x.shape[k + 1], np.float64, inverse), odt)
+        xm = jnp.moveaxis(x, k + 1, 1)
+        tail = xm.shape[2:]
+        xm = jnp.einsum("gij,gjt->git", h,
+                        xm.reshape(xm.shape[0], xm.shape[1], -1))
+        x = jnp.moveaxis(xm.reshape(xm.shape[:2] + tail), 1, k + 1)
+    return x
+
+
+def _pad_blowup(shape: Sequence[int]) -> float:
+    """Padded-tile volume over true volume for the batched Pallas path."""
+    pads = [_round_up(s, _SUBLANE if i < len(shape) - 1 else _LANE)
+            for i, s in enumerate(shape)]
+    return float(np.prod(pads)) / max(1.0, float(np.prod(shape)))
+
+
+_PALLAS_MAX_BLOWUP = 8.0
+
+
+def hierarchize_batched(x: jnp.ndarray,
+                        member_levels: Sequence[Sequence[int]], *,
+                        inverse: bool = False,
+                        interpret: bool | None = None,
+                        method: str = "auto") -> jnp.ndarray:
+    """Full d-dim (de)hierarchization of a (G, *bucket_shape) bucket.
+
+    ``method="pallas"``: same 2-HBM-round-trip structure as
+    ``hierarchize_nd_fused`` — tail axes fused while tiling axis 1, then
+    axis 1 while tiling the lanes — but ONE kernel launch pair per bucket
+    instead of per grid.  ``"jnp"``: stacked-operator einsums (no tile
+    padding).  ``"auto"`` picks pallas unless sublane/lane padding would
+    inflate the block volume by more than ~8x (high-d tiny-extent grids)."""
+    member_levels = [tuple(ml) for ml in member_levels]
+    if method == "auto":
+        method = ("jnp" if _pad_blowup(x.shape[1:]) > _PALLAS_MAX_BLOWUP
+                  or max(x.shape[1:]) > 2047 else "pallas")
+    if method == "jnp":
+        return hierarchize_batched_jnp(x, member_levels, inverse=inverse)
+    if method != "pallas":
+        raise ValueError(f"unknown method {method!r}")
+    if x.ndim == 2:
+        out = hier_axis0_batched_pallas(x[..., None],
+                                        [ml[0] for ml in member_levels],
+                                        inverse=inverse, interpret=interpret)
+        return out[..., 0]
+    y = hier_tail_batched_pallas(x, member_levels, inverse=inverse,
+                                 interpret=interpret)
+    g = y.shape[0]
+    shape = y.shape[1:]
+    flat = y.reshape(g, shape[0], -1)
+    flat = hier_axis0_batched_pallas(flat, [ml[0] for ml in member_levels],
+                                     inverse=inverse, interpret=interpret)
+    return flat.reshape((g,) + shape)
+
+
+def dehierarchize_batched(a: jnp.ndarray,
+                          member_levels: Sequence[Sequence[int]], *,
+                          interpret: bool | None = None,
+                          method: str = "auto") -> jnp.ndarray:
+    return hierarchize_batched(a, member_levels, inverse=True,
+                               interpret=interpret, method=method)
 
 
 def hierarchize_nd_fused(x: jnp.ndarray, *, interpret: bool | None = None) -> jnp.ndarray:

@@ -34,6 +34,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.compat import AxisType, make_mesh, set_mesh
 from repro.configs import ARCH_IDS, SHAPE_BY_NAME, get_config, shape_cells
 from repro.launch import sharding as rules
 from repro.launch.analysis import collective_bytes, roofline_from_artifacts
@@ -131,9 +133,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         dims = tuple(int(x) for x in mesh_shape.split("x"))
         names = ("data", "model") if len(dims) == 2 else \
             ("pod", "data", "model")
-        mesh = jax.make_mesh(dims, names,
-                             axis_types=(jax.sharding.AxisType.Auto,)
-                             * len(dims))
+        mesh = make_mesh(dims, names,
+                         axis_types=(AxisType.Auto,) * len(dims))
     else:
         mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     cfg = cfg.replace(batch_axes=batch_axes(mesh),
@@ -148,13 +149,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
     t0 = time.time()
     try:
         fn, args = build_cell(cfg, shape, mesh, grad_accum=grad_accum)
-        with jax.sharding.set_mesh(mesh):   # abstract-mesh context: needed
+        with set_mesh(mesh):                # abstract-mesh context: needed
             lowered = fn.lower(*args)       # by shard_act / moe_ffn_ep
             t_lower = time.time()
             compiled = lowered.compile()
             t_compile = time.time()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = compat.cost_analysis(compiled)
         hlo = compiled.as_text()
         # scan-aware accounting (repro.launch.hlo_cost): XLA's cost_analysis
         # counts while bodies ONCE; our programs scan over layers/chunks, so

@@ -8,7 +8,8 @@ device query).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import AxisType, make_mesh
 
 __all__ = ["make_production_mesh", "batch_axes", "CHIPS_PER_POD"]
 
@@ -18,15 +19,15 @@ CHIPS_PER_POD = 256
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_smoke_mesh():
     """Whatever devices exist (1 on the CPU container), same axis names."""
     n = jax.device_count()
-    return jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((1, n), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
 
 
 def batch_axes(mesh) -> tuple:

@@ -1,4 +1,6 @@
-"""Serving driver: batched prefill + decode against a KV/state cache.
+"""Serving driver: batched prefill + decode against a KV/state cache,
+plus sparse-grid surrogate serving (``CTSurrogate``) on the batched
+executor.
 
 The production deployment lowers ``prefill_step``/``serve_step`` on the
 pod mesh (proven by the dry-run's prefill_32k/decode_32k/long_500k cells);
@@ -20,7 +22,7 @@ from repro.configs import get_config, get_smoke_config
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
-__all__ = ["ServeConfig", "generate"]
+__all__ = ["ServeConfig", "generate", "CTSurrogate"]
 
 
 @dataclass(frozen=True)
@@ -78,6 +80,53 @@ def generate(sc: ServeConfig, prompts: np.ndarray,
                                    "pos": jnp.asarray(t + i, jnp.int32)})
     return {"tokens": np.asarray(jnp.concatenate(out, axis=1)),
             "logprobs": np.asarray(jnp.stack(logprobs, axis=1))}
+
+
+class CTSurrogate:
+    """Sparse-grid surrogate server: solve once, answer point queries fast.
+
+    The CT workload's serving shape: a solver produces nodal values on
+    every component grid; queries arrive as batches of points in [0,1]^d.
+    The transform runs ONCE at ingest (``repro.core.executor.ct_transform``
+    via ``make_ct_step`` — one jitted call, no per-grid dispatch), queries
+    hit only the cached surplus buffer through the jitted evaluation step,
+    so steady-state latency is a single interpolation kernel.
+    """
+
+    _shared_eval = None   # one jitted eval across all surrogate instances
+
+    def __init__(self, scheme, nodal_grids,
+                 interpret: Optional[bool] = None):
+        from repro.launch.steps import make_ct_step
+        from repro.core.interpolation import interpolate_hierarchical
+        self.scheme = scheme
+        self._ingest = make_ct_step(scheme, interpret=interpret)
+        self._surplus = self._ingest(nodal_grids)
+        if CTSurrogate._shared_eval is None:
+            CTSurrogate._shared_eval = jax.jit(interpolate_hierarchical)
+        self._eval = CTSurrogate._shared_eval
+
+    @property
+    def surplus(self) -> jnp.ndarray:
+        """Sparse-grid surplus on the common fine grid (the served state)."""
+        return self._surplus
+
+    def update(self, nodal_grids) -> None:
+        """Re-ingest new solver output (same scheme: no retrace)."""
+        self._surplus = self._ingest(nodal_grids)
+
+    def query(self, points: np.ndarray) -> np.ndarray:
+        """points: (Q, d) in [0,1]^d -> combined-interpolant values (Q,).
+
+        Q is padded up to a power of two before hitting the jitted eval so
+        varying batch sizes compile once per bucket, not once per Q."""
+        points = np.asarray(points)
+        q = points.shape[0]
+        qpad = max(16, 1 << (q - 1).bit_length())
+        padded = np.zeros((qpad, points.shape[1]), points.dtype)
+        padded[:q] = points
+        out = self._eval(self._surplus, jnp.asarray(padded))
+        return np.asarray(out)[:q]
 
 
 def main(argv=None):

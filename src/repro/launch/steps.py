@@ -1,4 +1,6 @@
-"""Step functions bound for jit: train_step / prefill_step / serve_step.
+"""Step functions bound for jit: train_step / prefill_step / serve_step,
+plus the combination-technique steps (``make_ct_step`` /
+``make_ct_eval_step``) backed by the batched executor.
 
 Kept separate from the driver so the dry-run, the trainer and the tests
 lower exactly the same computations.
@@ -19,7 +21,7 @@ from repro.optim.adamw import AdamWState, adamw_init, adamw_update, \
     clip_by_global_norm
 
 __all__ = ["make_train_step", "make_prefill_step", "make_serve_step",
-           "init_train_state"]
+           "init_train_state", "make_ct_step", "make_ct_eval_step"]
 
 
 def init_train_state(key, cfg: ModelConfig):
@@ -74,4 +76,36 @@ def make_prefill_step(cfg: ModelConfig) -> Callable:
 def make_serve_step(cfg: ModelConfig) -> Callable:
     def step(params, cache, batch):
         return M.serve_step(params, cfg, cache, batch)
+    return step
+
+
+def make_ct_step(scheme, *, interpret: bool | None = None) -> Callable:
+    """ONE jitted function for the whole CT communication phase:
+    ``{ell: nodal}`` -> sparse-grid surplus on the common fine grid.
+
+    The scheme is bound at closure time, so the executor's bucket plan and
+    index maps are trace-time constants: re-calling with new grid VALUES
+    never retraces (one jit cache entry per scheme shape signature).
+    """
+    from repro.core.executor import ct_transform
+
+    @jax.jit
+    def step(nodal_grids):
+        return ct_transform(nodal_grids, scheme, interpret=interpret)
+
+    return step
+
+
+def make_ct_eval_step(scheme, *, interpret: bool | None = None) -> Callable:
+    """Jitted CT surrogate evaluation: ``({ell: nodal}, points (Q, d))`` ->
+    combined-interpolant values (Q,) — transform + hierarchical-basis
+    evaluation fused into one computation (the serving hot path)."""
+    from repro.core.executor import ct_transform
+    from repro.core.interpolation import interpolate_hierarchical
+
+    @jax.jit
+    def step(nodal_grids, points):
+        full = ct_transform(nodal_grids, scheme, interpret=interpret)
+        return interpolate_hierarchical(full, points)
+
     return step

@@ -9,8 +9,9 @@ Three execution strategies (``config.moe_impl``):
   path only.
 * ``grouped`` — fixed-capacity (E, C, D) buffers + dense batched GEMMs;
   static shapes, still global dispatch.
-* ``ep``      — PRODUCTION path: expert-parallel dispatch under a partial
-  ``shard_map`` over the ``model`` mesh axis.  Each shard owns E/TP
+* ``ep``      — PRODUCTION path: expert-parallel dispatch under a
+  full-manual ``shard_map`` (experts over the ``model`` mesh axis, batch
+  rows over the remaining axes).  Each shard owns E/TP
   experts, selects its tokens with a LOCAL argsort (capacity-bounded),
   runs local ragged GEMMs and combines with one psum — the same
   activation all-reduce a dense TP layer pays.  Tokens beyond
@@ -23,6 +24,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import get_abstract_mesh, shard_map
 
 __all__ = ["moe_ffn", "moe_ffn_ep", "router_topk"]
 
@@ -60,12 +63,13 @@ def moe_ffn_ep(x, params, *, num_experts: int, k: int,
     The batch dim stays the DATA-sharded axis end to end — every sort /
     scatter is per-row, so nothing gathers the global token set (the
     failure mode of the ``ragged`` path under GSPMD).  Experts shard over
-    ``axis_name`` inside a partial shard_map; the only cross-shard
-    communication is one activation psum, exactly like a dense TP layer.
+    ``axis_name``, batch rows over the remaining mesh axes, inside one
+    full-manual shard_map; the only cross-shard communication is one
+    activation psum, exactly like a dense TP layer.
 
     Returns None when no usable mesh context exists (caller falls back).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not getattr(mesh, "shape", None) or \
             axis_name not in mesh.shape:
         return None
@@ -73,6 +77,15 @@ def moe_ffn_ep(x, params, *, num_experts: int, k: int,
     if tp <= 1 or num_experts % tp:
         return None
     b, s, d = x.shape
+    # batch rows distribute over the non-expert mesh axes (full-manual
+    # shard_map: partial-auto lowers axis_index to a PartitionId op the
+    # 0.4.x SPMD partitioner rejects); bail out to ragged when they don't
+    data_axes = tuple(a for a in mesh.axis_names if a != axis_name)
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    if b % n_data:
+        return None
     e_local = num_experts // tp
     # per-expert capacity per row; >=8 keeps decode (S=1) drop-free
     c_e = max(8, -(-int(capacity_factor * s * k / num_experts) // 8) * 8)
@@ -95,6 +108,7 @@ def moe_ffn_ep(x, params, *, num_experts: int, k: int,
         wi_gate = wi_gate.astype(jnp.float32)
         wi_up = wi_up.astype(jnp.float32)
         wo = wo.astype(jnp.float32)
+        bl = xl.shape[0]              # local batch rows (b / n_data)
         m = jax.lax.axis_index(axis_name)
         lo = m * e_local
         mine = (idxf >= lo) & (idxf < lo + e_local)          # (B, S*k)
@@ -117,25 +131,27 @@ def moe_ffn_ep(x, params, *, num_experts: int, k: int,
         slot = jnp.where(keep, sel_e * c_e + pos, e_local * c_e)
         xs = jnp.take_along_axis(xl, toks[..., None], axis=1)  # (B, cap, D)
         xs = xs * keep[..., None].astype(xl.dtype)
-        buf = jnp.zeros((b, e_local * c_e + 1, d), xl.dtype)
-        buf = buf.at[jnp.arange(b)[:, None], slot].add(xs)
-        xe = buf[:, :-1].reshape(b, e_local, c_e, d)
+        buf = jnp.zeros((bl, e_local * c_e + 1, d), xl.dtype)
+        buf = buf.at[jnp.arange(bl)[:, None], slot].add(xs)
+        xe = buf[:, :-1].reshape(bl, e_local, c_e, d)
         h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, wi_gate)) * \
             jnp.einsum("becd,edf->becf", xe, wi_up)
         ye = jnp.einsum("becf,efd->becd", h, wo)
-        ys = ye.reshape(b, e_local * c_e, d)[
-            jnp.arange(b)[:, None], jnp.minimum(slot, e_local * c_e - 1)]
+        ys = ye.reshape(bl, e_local * c_e, d)[
+            jnp.arange(bl)[:, None], jnp.minimum(slot, e_local * c_e - 1)]
         ys = ys * (gates * keep.astype(xl.dtype))[..., None]
-        out = jnp.zeros_like(xl).at[jnp.arange(b)[:, None], toks].add(ys)
+        out = jnp.zeros_like(xl).at[jnp.arange(bl)[:, None], toks].add(ys)
         return jax.lax.psum(out, axis_name)
 
-    fn = jax.shard_map(
+    bspec = data_axes if data_axes else None
+    fn = shard_map(
         local, mesh=mesh,
-        in_specs=(P(), P(), P(), P(),
+        in_specs=(P(bspec, None, None), P(bspec, None), P(bspec, None),
+                  P(bspec, None),
                   P(axis_name, None, None), P(axis_name, None, None),
                   P(axis_name, None, None)),
-        out_specs=P(),
-        axis_names={axis_name})
+        out_specs=P(bspec, None, None),
+        check_vma=False)
     y = fn(x, w_r, idx_r, tok_r,
            params["wi_gate"], params["wi_up"], params["wo"])
     return y.astype(out_dtype), aux

@@ -4,6 +4,9 @@ x64 is enabled globally: the paper's experiments are double precision and
 the hierarchization oracles are validated at 1e-12 tolerances.  Model code
 pins its own dtypes (bf16/f32) explicitly, so it is unaffected.
 
+Property tests use the seeded case generator in ``tests/proptest.py``
+(``hypothesis`` is not installable in the hermetic CI container).
+
 NOTE: XLA_FLAGS / host-device-count is deliberately NOT set here — tests
 run on the 1 real CPU device; multi-device behaviour is tested in
 subprocesses (test_distributed.py) and by the dry-run.
@@ -15,10 +18,6 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 import pytest
-from hypothesis import settings
-
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
 
 
 @pytest.fixture

@@ -1,0 +1,60 @@
+"""Tiny seeded property-test case generator (hypothesis replacement).
+
+``hypothesis`` is not installable in the hermetic CI container, so the
+property tests draw their cases from a seeded ``numpy`` Generator instead:
+deterministic, dependency-free, and each case is visible as its own
+``pytest.mark.parametrize`` id (no shrinking, but failures reproduce by
+construction).
+
+Usage::
+
+    from proptest import cases, integers, floats, int_lists
+
+    @pytest.mark.parametrize(
+        "level,seed", cases(lambda r: (integers(r, 1, 9), seeds(r)), n=25))
+    def test_roundtrip(level, seed): ...
+
+``strategy_fn`` receives a ``numpy.random.Generator`` and returns one case:
+a tuple of arguments for multi-name parametrize, or the bare value for
+single-name parametrize (pytest treats each list element as the whole
+value when only one name is given, so no wrapping happens here).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+__all__ = ["cases", "integers", "floats", "int_lists", "seeds"]
+
+_SEED_MAX = 2 ** 31 - 1
+
+
+def cases(strategy_fn: Callable[[np.random.Generator], object],
+          n: int = 25, seed: int = 0) -> List[object]:
+    """Draw ``n`` deterministic cases for ``pytest.mark.parametrize``."""
+    rng = np.random.default_rng(seed)
+    return [strategy_fn(rng) for _ in range(n)]
+
+
+def integers(rng: np.random.Generator, lo: int, hi: int) -> int:
+    """Uniform int in [lo, hi] (inclusive, like hypothesis st.integers)."""
+    return int(rng.integers(lo, hi + 1))
+
+
+def floats(rng: np.random.Generator, lo: float, hi: float) -> float:
+    """Uniform float in [lo, hi]."""
+    return float(rng.uniform(lo, hi))
+
+
+def int_lists(rng: np.random.Generator, lo: int, hi: int,
+              min_size: int, max_size: int) -> Tuple[int, ...]:
+    """Tuple of uniform ints, length in [min_size, max_size]."""
+    size = integers(rng, min_size, max_size)
+    return tuple(integers(rng, lo, hi) for _ in range(size))
+
+
+def seeds(rng: np.random.Generator) -> int:
+    """A fresh RNG seed (the usual stand-in for st.integers(0, 2**31-1))."""
+    return integers(rng, 0, _SEED_MAX)

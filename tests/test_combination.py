@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import cases, integers, seeds
 
 from repro.core import combination as comb
 from repro.core.interpolation import (interpolate_hierarchical,
@@ -29,6 +29,7 @@ def test_gather_covers_all_subspaces():
     assert set(combined) == set(scheme.subspaces)
 
 
+@pytest.mark.slow
 def test_gather_scatter_consistent_grids_identity():
     """If all grids sample the SAME underlying function, the communication
     phase is a no-op: gather reproduces each grid's own surpluses."""
@@ -68,8 +69,10 @@ def test_embed_extract_roundtrip():
     assert int(jnp.sum(emb != 0.0)) <= a.size
 
 
-@settings(max_examples=10)
-@given(st.integers(2, 3), st.integers(2, 4), st.integers(0, 2 ** 31 - 1))
+@pytest.mark.parametrize("dim,level,seed", cases(
+    lambda r: (integers(r, 2, 3), integers(r, 2, 3), seeds(r)), n=8) + [
+        pytest.param(2, 4, 101, marks=pytest.mark.slow),
+        pytest.param(3, 4, 102, marks=pytest.mark.slow)])
 def test_combination_reproduces_combined_interpolant(dim, level, seed):
     """The hierarchical communication phase reproduces the direct weighted
     sum of multilinear interpolants at arbitrary points (the paper's 'no
@@ -101,8 +104,7 @@ def test_ct_exact_for_sparse_space_function():
                                rtol=1e-9, atol=1e-10)
 
 
-@settings(max_examples=10)
-@given(st.integers(0, 2 ** 31 - 1))
+@pytest.mark.parametrize("seed", cases(seeds, n=10))
 def test_interpolation_anchor(seed):
     """interpolate_hierarchical(hierarchize(u)) == interpolate_nodal(u)."""
     rng = np.random.default_rng(seed)

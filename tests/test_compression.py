@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import cases, integers, seeds
 
 from repro.optim.compression import (ErrorFeedback, compress_with_feedback,
                                      hier_decode, hier_encode,
@@ -12,8 +12,8 @@ from repro.optim.compression import (ErrorFeedback, compress_with_feedback,
                                      int8_encode, topk_mask)
 
 
-@settings(max_examples=15)
-@given(st.integers(0, 2 ** 31 - 1), st.integers(3, 8))
+@pytest.mark.parametrize("seed,level", cases(
+    lambda r: (seeds(r), integers(r, 3, 8)), n=15))
 def test_hier_codec_exactly_invertible(seed, level):
     """At truncation 0 the hierarchization codec is exact (linear bijection)."""
     g = np.random.default_rng(seed).standard_normal((37, 11)).astype(np.float32)

@@ -4,7 +4,7 @@ plus the algebraic properties (linearity, invertibility, BFS layouts)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from proptest import cases, floats, integers, seeds
 
 from repro.core.hierarchize import (from_bfs, hierarchize_1d_bfs, to_bfs)
 from repro.kernels import ref
@@ -78,11 +78,12 @@ def test_axis_argument():
 
 
 # ---------------------------------------------------------------------------
-# Properties (hypothesis)
+# Properties (seeded cases, see tests/proptest.py)
 # ---------------------------------------------------------------------------
 
-@given(st.integers(1, 8), st.integers(0, 2 ** 31 - 1), st.integers(0, 2 ** 31 - 1),
-       st.floats(-5, 5), st.floats(-5, 5))
+@pytest.mark.parametrize("level,seed_a,seed_b,ca,cb", cases(
+    lambda r: (integers(r, 1, 8), seeds(r), seeds(r),
+               floats(r, -5, 5), floats(r, -5, 5))))
 def test_linearity(level, seed_a, seed_b, ca, cb):
     """hier(ca*x + cb*y) == ca*hier(x) + cb*hier(y) — the property making the
     codec and the psum communication phase valid."""
@@ -95,7 +96,8 @@ def test_linearity(level, seed_a, seed_b, ca, cb):
     np.testing.assert_allclose(lhs, rhs, rtol=1e-9, atol=1e-9)
 
 
-@given(st.integers(1, 9), st.integers(0, 2 ** 31 - 1))
+@pytest.mark.parametrize("level,seed", cases(
+    lambda r: (integers(r, 1, 9), seeds(r))))
 def test_roundtrip_property(level, seed):
     n = (1 << level) - 1
     x = np.random.default_rng(seed).standard_normal(n)
@@ -104,7 +106,7 @@ def test_roundtrip_property(level, seed):
     np.testing.assert_allclose(back, x, rtol=1e-10, atol=1e-12)
 
 
-@given(st.integers(2, 9))
+@pytest.mark.parametrize("level", range(2, 10))
 def test_hierarchical_surplus_of_hats_is_identity(level):
     """Hierarchizing a single hat basis function gives the unit surplus —
     the defining property of the hierarchical basis."""

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.core.interpolation import sample_function
 from repro.core.iterated import IteratedCombination, run_iterated_heat
 from repro.core.levels import CombinationScheme

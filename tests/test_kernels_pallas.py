@@ -33,7 +33,8 @@ def _bundle(level, cols, dtype, seed=0):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("dtype", DTYPES)
-@pytest.mark.parametrize("level", [2, 3, 5, 8, 11])
+@pytest.mark.parametrize("level", [2, 3, 5, 8,
+                                   pytest.param(11, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("cols", [1, 3, 128, 200])
 def test_pole_kernel_sweep(level, cols, dtype):
     x = _bundle(level, cols, dtype, seed=level * 100 + cols)
@@ -67,7 +68,8 @@ def test_pole_kernel_level1_identity():
 
 
 @pytest.mark.parametrize("dtype", DTYPES)
-@pytest.mark.parametrize("level", [2, 4, 7, 10])
+@pytest.mark.parametrize("level", [2, 4, 7,
+                                   pytest.param(10, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("cols", [1, 64, 200])
 def test_dehier_pole_kernel_sweep(level, cols, dtype):
     from repro.kernels.hierarchize import dehier_pole_pallas
@@ -91,7 +93,8 @@ def test_pole_roundtrip_pallas_only():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("dtype", DTYPES)
-@pytest.mark.parametrize("level", [2, 4, 7, 10])
+@pytest.mark.parametrize("level", [2, 4, 7,
+                                   pytest.param(10, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("cols", [1, 64, 513])
 def test_matmul_kernel_sweep(level, cols, dtype):
     x = _bundle(level, cols, dtype, seed=level * 7 + cols)

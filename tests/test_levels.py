@@ -1,10 +1,11 @@
 """Level-vector algebra, combination coefficients, flop counts."""
 
+import itertools
 import math
 
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from proptest import cases, int_lists
 
 from repro.core import levels as L
 
@@ -21,7 +22,8 @@ def test_grid_shape_and_bytes():
     assert L.grid_bytes((2, 3)) == 21 * 8
 
 
-@given(st.integers(1, 4), st.integers(1, 7))
+@pytest.mark.parametrize("dim,level",
+                         list(itertools.product(range(1, 5), range(1, 8))))
 def test_partition_of_unity(dim, level):
     """Every sparse-grid subspace is covered with total coefficient 1 —
     the inclusion-exclusion identity behind the combination technique."""
@@ -29,13 +31,15 @@ def test_partition_of_unity(dim, level):
     assert scheme.validate_partition_of_unity()
 
 
-@given(st.integers(1, 4), st.integers(1, 6))
+@pytest.mark.parametrize("dim,level",
+                         list(itertools.product(range(1, 5), range(1, 7))))
 def test_combination_coefficients_sum(dim, level):
     """Coefficients sum to 1 (the constant function is reproduced)."""
     assert sum(c for _, c in L.combination_grids(dim, level)) == 1
 
 
-@given(st.integers(2, 4), st.integers(2, 6))
+@pytest.mark.parametrize("dim,level",
+                         list(itertools.product(range(2, 5), range(2, 7))))
 def test_grid_count_matches_formula(dim, level):
     """#grids on diagonal q: C(level-1+q_offset...)-style binomials; verify
     against direct enumeration of |ell|_1 = s, ell >= 1."""
@@ -80,12 +84,13 @@ def _count_predecessor_edges_1d(level: int) -> int:
     return edges
 
 
-@given(st.integers(1, 12))
+@pytest.mark.parametrize("level", range(1, 13))
 def test_predecessor_edges_formula(level):
     assert L.predecessor_edges_1d(level) == _count_predecessor_edges_1d(level)
 
 
-@given(st.lists(st.integers(1, 6), min_size=1, max_size=4))
+@pytest.mark.parametrize("levels", cases(
+    lambda r: int_lists(r, 1, 6, min_size=1, max_size=4)))
 def test_flops_exact_vs_eq1(levels):
     """Instrumented Alg. 1 count == flops_exact == 2 x Eq. (1) + 4*l_i terms.
 
@@ -104,7 +109,8 @@ def test_flops_exact_vs_eq1(levels):
     assert eq1 <= exact
 
 
-@given(st.lists(st.integers(2, 8), min_size=1, max_size=3))
+@pytest.mark.parametrize("levels", cases(
+    lambda r: int_lists(r, 2, 8, min_size=1, max_size=3)))
 def test_muls_reduced_less_than_adds(levels):
     levels = tuple(levels)
     adds = L.adds_exact(levels)

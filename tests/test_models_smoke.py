@@ -11,6 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.launch.steps import init_train_state, make_train_step
 from repro.models import model as M

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.launch.serve import ServeConfig, generate
 from repro.launch.train import TrainConfig, TrainResult, train
 from repro.runtime.fault_tolerance import HealthConfig
