@@ -12,6 +12,10 @@ The repo's first multi-grid throughput number: for each scheme, time
 Both paths produce the sparse-grid surplus on the common fine grid; the
 benchmark asserts they agree to 1e-12 before timing.
 
+Emits machine-readable ``BENCH_executor_batched.json`` next to the table
+(``--json-out`` overrides, empty string disables) so the perf trajectory
+is tracked across PRs.
+
   PYTHONPATH=src python benchmarks/executor_batched.py
 """
 
@@ -19,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import functools
+import json
 
 import jax
 import jax.numpy as jnp
@@ -53,8 +58,11 @@ def batched_path(scheme):
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--json-out", default="BENCH_executor_batched.json",
+                    help="machine-readable results path ('' disables)")
     args = ap.parse_args(argv)
 
+    rows = []
     print(f"{'scheme':>10} {'grids':>6} {'buckets':>8} {'points':>10} "
           f"{'dict_ms':>9} {'batched_ms':>11} {'speedup':>8}")
     for dim, level in SCHEMES:
@@ -75,6 +83,18 @@ def main(argv=None):
               f"{len(plan.buckets):>8} {scheme.total_points():>10} "
               f"{t_dict * 1e3:>9.2f} {t_batched * 1e3:>11.2f} "
               f"{t_dict / t_batched:>7.2f}x")
+        rows.append({"dim": dim, "level": level, "grids": plan.num_grids,
+                     "buckets": len(plan.buckets),
+                     "points": scheme.total_points(),
+                     "max_abs_err": err, "dict_s": t_dict,
+                     "batched_s": t_batched,
+                     "speedup": t_dict / t_batched})
+    if args.json_out:
+        payload = {"bench": "executor_batched", "reps": args.reps,
+                   "backend": jax.default_backend(), "rows": rows}
+        with open(args.json_out, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"wrote {args.json_out}")
 
 
 if __name__ == "__main__":

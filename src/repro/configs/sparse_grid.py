@@ -12,7 +12,9 @@ from typing import Tuple
 from repro.core.levels import (CombinationScheme, grid_bytes, grid_shape,
                                num_points)
 
-__all__ = ["CTConfig", "CT_CONFIGS", "get_ct_config"]
+__all__ = ["CTConfig", "CT_CONFIGS", "get_ct_config",
+           "CTAdaptiveConfig", "CT_ADAPTIVE_CONFIGS",
+           "get_ct_adaptive_config"]
 
 
 @dataclass(frozen=True)
@@ -51,3 +53,40 @@ CT_CONFIGS = {
 
 def get_ct_config(name: str) -> CTConfig:
     return CT_CONFIGS[name]
+
+
+@dataclass(frozen=True)
+class CTAdaptiveConfig:
+    """Dimension-adaptive refinement workload (``repro.core.adaptive``).
+
+    ``baseline_level`` names the regular scheme the adaptive run must beat:
+    the acceptance bar is the SAME max-norm interpolation error with >= 3x
+    fewer combination-grid points on the anisotropic reference target
+    (``make_anisotropic_target(dim, decay)``).
+    """
+
+    name: str
+    dim: int
+    decay: float = 4.0             # per-axis importance falls off decay**-i
+    baseline_level: int = 4        # regular scheme to match on error
+    max_points: int = 20_000       # adaptive solver budget (grid points)
+    max_level: int = 8             # per-axis refinement cap
+    eval_points: int = 2000        # error-probe batch
+    eval_seed: int = 42
+
+
+CT_ADAPTIVE_CONFIGS = {
+    # the ISSUE's d=6 anisotropic acceptance case (4**-i importance decay)
+    "aniso_6d": CTAdaptiveConfig("aniso_6d", dim=6),
+    # quick smoke variant for CI: same target, lower baseline
+    "aniso_6d_smoke": CTAdaptiveConfig("aniso_6d_smoke", dim=6,
+                                       baseline_level=3, max_points=3000,
+                                       max_level=6, eval_points=500),
+    # strong anisotropy in low dim: frontier stays 2-D-ish
+    "aniso_3d": CTAdaptiveConfig("aniso_3d", dim=3, decay=8.0,
+                                 baseline_level=6, max_points=10_000),
+}
+
+
+def get_ct_adaptive_config(name: str) -> CTAdaptiveConfig:
+    return CT_ADAPTIVE_CONFIGS[name]

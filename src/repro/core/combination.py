@@ -24,6 +24,11 @@ is ``repro.core.executor.ct_transform``: the same embedded gather as
 ``combine_full`` but bucket-batched and expressed as a precomputed static
 index plan, end-to-end jittable.  ``tests/test_executor.py`` pins the two
 paths together at 1e-12.
+
+Every function is duck-typed over the scheme (``.dim`` + ``.grids``): the
+classical ``CombinationScheme`` and the downward-closed ``GeneralScheme``
+(adaptive / fault-reduced index sets) both work, so this module doubles as
+the oracle for ``tests/test_adaptive.py``'s generalized-scheme round trips.
 """
 
 from __future__ import annotations
@@ -32,7 +37,7 @@ from typing import Dict, Mapping, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from repro.core.levels import (CombinationScheme, LevelVector, fine_levels,
+from repro.core.levels import (LevelVector, SchemeLike, fine_levels,
                                grid_shape, subspace_slices,
                                subspaces_of_grid)
 
@@ -48,7 +53,7 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 def gather_subspaces(hier_grids: Mapping[LevelVector, jnp.ndarray],
-                     scheme: CombinationScheme) -> Dict[LevelVector, jnp.ndarray]:
+                     scheme: SchemeLike) -> Dict[LevelVector, jnp.ndarray]:
     """Gather step: combined surplus per sparse-grid subspace."""
     combined: Dict[LevelVector, jnp.ndarray] = {}
     coeffs = dict(scheme.grids)
@@ -64,7 +69,7 @@ def gather_subspaces(hier_grids: Mapping[LevelVector, jnp.ndarray],
 
 
 def scatter_subspaces(combined: Mapping[LevelVector, jnp.ndarray],
-                      scheme: CombinationScheme) -> Dict[LevelVector, jnp.ndarray]:
+                      scheme: SchemeLike) -> Dict[LevelVector, jnp.ndarray]:
     """Scatter step: project the sparse-grid surplus onto every grid."""
     out: Dict[LevelVector, jnp.ndarray] = {}
     for ell, _ in scheme.grids:
@@ -101,7 +106,7 @@ def extract_from_full(full: jnp.ndarray, ell: Sequence[int],
 
 
 def combine_full(hier_grids: Mapping[LevelVector, jnp.ndarray],
-                 scheme: CombinationScheme,
+                 scheme: SchemeLike,
                  full_levels: Sequence[int] | None = None
                  ) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
     """One-buffer gather: sum of coefficient-weighted embedded surpluses.
@@ -120,7 +125,7 @@ def combine_full(hier_grids: Mapping[LevelVector, jnp.ndarray],
 
 
 def combined_interpolant_points(nodal_grids: Mapping[LevelVector, jnp.ndarray],
-                                scheme: CombinationScheme,
+                                scheme: SchemeLike,
                                 points: jnp.ndarray) -> jnp.ndarray:
     """Direct (no hierarchization) evaluation of the combination solution:
     weighted sum of multilinear interpolants.  Used as the gold standard the

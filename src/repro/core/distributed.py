@@ -28,7 +28,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.levels import (CombinationScheme, LevelVector, fine_levels,
+from repro.core.levels import (LevelVector, SchemeLike, fine_levels,
                                num_points)
 from repro.kernels.hierarchize import _padded_operator  # shared constant builder
 from repro.kernels.ops import hierarchize as hier_local
@@ -37,7 +37,7 @@ __all__ = ["plan_grid_groups", "hierarchize_sharded", "gather_full_psum",
            "comm_phase_sharded", "ct_transform_psum"]
 
 
-def plan_grid_groups(scheme: CombinationScheme, num_groups: int
+def plan_grid_groups(scheme: SchemeLike, num_groups: int
                      ) -> Tuple[Tuple[LevelVector, ...], ...]:
     """Longest-processing-time placement of combination grids onto groups.
 
@@ -123,7 +123,7 @@ def gather_full_psum(embedded: jnp.ndarray, coeff: jnp.ndarray, mesh: Mesh,
     return fn(embedded, coeff)
 
 
-def comm_phase_sharded(hier_grids, scheme: CombinationScheme, mesh: Mesh,
+def comm_phase_sharded(hier_grids, scheme: SchemeLike, mesh: Mesh,
                        axis_name: str, full_levels: Sequence[int] | None = None):
     """Full communication phase with the gather realized as a psum.
 
@@ -148,7 +148,7 @@ def comm_phase_sharded(hier_grids, scheme: CombinationScheme, mesh: Mesh,
     return {ell: extract_from_full(combined, ell, full_levels) for ell in ells}
 
 
-def ct_transform_psum(nodal_grids, scheme: CombinationScheme, mesh: Mesh,
+def ct_transform_psum(nodal_grids, scheme: SchemeLike, mesh: Mesh,
                       axis_name: str,
                       full_levels: Sequence[int] | None = None) -> jnp.ndarray:
     """Distributed batched gather: the executor's bucket-batched

@@ -35,11 +35,37 @@ function:
 ``ct_transform`` / ``ct_scatter`` are end-to-end jittable (scheme static),
 reused by the distributed psum path (``repro.core.distributed.
 ct_transform_psum``) and the surrogate-serving driver
-(``repro.launch.serve.CTSurrogate``).
+(``repro.launch.serve.CTSurrogate``).  Schemes are duck-typed: the
+classical ``CombinationScheme`` and the downward-closed ``GeneralScheme``
+(adaptive / fault-reduced index sets) both work everywhere.
+
+**Incremental-rebuild contract** (the adaptive/fault hot path):
+
+  * ``build_plan(scheme, full_levels)`` normalizes ``full_levels`` BEFORE
+    the lru_cache key is formed, so the bare call and an explicit
+    ``full_levels=fine_levels(scheme)`` share one cache entry.
+  * ``extend_plan(old_plan, new_scheme)`` rebuilds only the buckets whose
+    member list changed.  Untouched buckets are returned BY IDENTITY
+    (``new.buckets[i] is old.buckets[j]``); buckets whose members are
+    unchanged but whose coefficients moved share the old ``index`` array by
+    identity; only genuinely new members get a fresh index-map row.  The
+    result is bit-identical to a from-scratch ``build_plan(new_scheme)``
+    provided ``fine_levels(new_scheme)`` still equals the old plan's
+    ``full_levels`` — otherwise every embed index is stale and
+    ``extend_plan`` transparently falls back to a full rebuild.
+  * ``update_plan_coefficients(plan, scheme)`` is the coefficient-ONLY
+    update (grid dropped -> inclusion-exclusion coefficients recomputed,
+    every bucket and index map kept): members absent from ``scheme`` get
+    coefficient 0, so their (stale, but finite) data cancels out of the
+    gather.  The fault-tolerance hook
+    (``repro.runtime.fault_tolerance.recombine_after_fault``) prefers this
+    path and falls back to ``extend_plan`` when the reduced scheme
+    activates a grid the plan never contained.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from functools import lru_cache
 from typing import Dict, Mapping, Optional, Sequence, Tuple
@@ -47,13 +73,15 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.levels import (CombinationScheme, LevelVector,
-                               canonical_levels, fine_levels, grid_shape)
+from repro.core.levels import (LevelVector, SchemeLike, canonical_levels,
+                               fine_levels, grid_shape)
 from repro.kernels.hierarchize import (dehierarchize_batched,
                                        hierarchize_batched)
 
-__all__ = ["ExecutorPlan", "Bucket", "build_plan", "ct_transform",
-           "ct_scatter", "ct_embedded"]
+__all__ = ["ExecutorPlan", "Bucket", "build_plan", "extend_plan",
+           "update_plan_coefficients", "ct_transform", "ct_scatter",
+           "ct_embedded", "ct_transform_with_plan", "ct_scatter_with_plan",
+           "ct_embedded_with_plan"]
 
 
 @dataclass(frozen=True)
@@ -117,42 +145,164 @@ def _member_index_map(ell: LevelVector, perm: Tuple[int, ...],
     return np.where(bad, dump, idx).astype(np.int32).ravel()
 
 
-@lru_cache(maxsize=64)
-def build_plan(scheme: CombinationScheme,
-               full_levels: Optional[LevelVector] = None) -> ExecutorPlan:
-    """Bucket the scheme's grids and precompute the embed index plan."""
-    if full_levels is None:
-        full_levels = fine_levels(scheme)
-    full_levels = tuple(full_levels)
-    fine_shape = grid_shape(full_levels)
-    fine_size = int(np.prod(fine_shape))
-    fine_strides = np.ones(len(fine_shape), np.int64)
+def _fine_strides(fine_shape: Tuple[int, ...]) -> np.ndarray:
+    strides = np.ones(len(fine_shape), np.int64)
     for a in range(len(fine_shape) - 2, -1, -1):
-        fine_strides[a] = fine_strides[a + 1] * fine_shape[a + 1]
+        strides[a] = strides[a + 1] * fine_shape[a + 1]
+    return strides
 
+
+def _group_members(scheme: SchemeLike) -> Dict[LevelVector, list]:
+    """Group (ell, perm, canon, coeff) member records by canonical key."""
     groups: Dict[LevelVector, list] = {}
     for ell, c in scheme.grids:
         canon, perm = canonical_levels(ell)
         groups.setdefault(canon, []).append((ell, perm, canon, c))
+    return groups
+
+
+def _make_bucket(members: list, full_levels: LevelVector,
+                 fine_strides: np.ndarray, fine_size: int,
+                 old_bucket: Optional[Bucket] = None) -> Bucket:
+    """Build one bucket from its member records; index-map rows of members
+    already in ``old_bucket`` (an incremental rebuild's prior plan) are
+    reused instead of recomputed — valid only while the target shape is
+    unchanged.  Single construction site, so ``build_plan`` and
+    ``extend_plan`` cannot drift apart."""
+    target = tuple(max(lv[k] for _, _, lv, _ in members)
+                   for k in range(len(full_levels)))
+    old_rows = (dict(zip(old_bucket.ells, old_bucket.index))
+                if old_bucket is not None and old_bucket.target == target
+                else {})
+    index = np.stack([
+        old_rows[ell] if ell in old_rows else
+        _member_index_map(ell, perm, target, full_levels, fine_strides,
+                          dump=fine_size)
+        for ell, perm, _, _ in members])
+    return Bucket(
+        ells=tuple(m[0] for m in members),
+        perms=tuple(m[1] for m in members),
+        levels=tuple(m[2] for m in members),
+        target=target,
+        coeffs=np.asarray([float(m[3]) for m in members]),
+        index=index)
+
+
+def build_plan(scheme: SchemeLike,
+               full_levels: Optional[Sequence[int]] = None) -> ExecutorPlan:
+    """Bucket the scheme's grids and precompute the embed index plan.
+
+    ``full_levels`` is normalized (``None`` -> ``fine_levels(scheme)``,
+    sequences -> int tuple) BEFORE the cache key is formed, so equivalent
+    calls share one lru_cache entry.
+    """
+    if full_levels is None:
+        full_levels = fine_levels(scheme)
+    return _build_plan_cached(scheme, tuple(int(l) for l in full_levels))
+
+
+@lru_cache(maxsize=64)
+def _build_plan_cached(scheme: SchemeLike,
+                       full_levels: LevelVector) -> ExecutorPlan:
+    fine_shape = grid_shape(full_levels)
+    fine_size = int(np.prod(fine_shape))
+    fine_strides = _fine_strides(fine_shape)
+
+    groups = _group_members(scheme)
+    buckets = tuple(_make_bucket(groups[key], full_levels, fine_strides,
+                                 fine_size)
+                    for key in sorted(groups, reverse=True))
+    return ExecutorPlan(dim=scheme.dim, full_levels=full_levels,
+                        fine_shape=fine_shape, buckets=buckets)
+
+
+def extend_plan(plan: ExecutorPlan, scheme: SchemeLike,
+                full_levels: Optional[Sequence[int]] = None) -> ExecutorPlan:
+    """Incremental plan rebuild after the scheme's index set changed.
+
+    Produces exactly ``build_plan(scheme, full_levels)`` but reuses the old
+    plan wherever possible: buckets with an unchanged member list AND
+    unchanged coefficients are returned by object identity; buckets whose
+    members are unchanged but whose inclusion-exclusion coefficients moved
+    keep their ``index`` array by identity; buckets gaining (or losing)
+    members recompute index-map rows only for members the old plan never
+    held.  Falls back to a full (cached) ``build_plan`` when the fine grid
+    itself changed, since then every embed index is stale.
+    """
+    if full_levels is None:
+        full_levels = fine_levels(scheme)
+    full_levels = tuple(int(l) for l in full_levels)
+    if full_levels != plan.full_levels:
+        return build_plan(scheme, full_levels)    # full rebuild
+
+    fine_shape = plan.fine_shape
+    fine_size = plan.fine_size
+    fine_strides = _fine_strides(fine_shape)
+    old_buckets = {b.target: b for b in plan.buckets}
 
     buckets = []
+    groups = _group_members(scheme)
     for key in sorted(groups, reverse=True):
         members = groups[key]
-        target = tuple(max(lv[k] for _, _, lv, _ in members)
-                       for k in range(len(key)))
-        index = np.stack([
-            _member_index_map(ell, perm, target, full_levels, fine_strides,
-                              dump=fine_size)
-            for ell, perm, _, _ in members])
-        buckets.append(Bucket(
-            ells=tuple(m[0] for m in members),
-            perms=tuple(m[1] for m in members),
-            levels=tuple(m[2] for m in members),
-            target=target,
-            coeffs=np.asarray([float(m[3]) for m in members]),
-            index=index))
+        ells = tuple(m[0] for m in members)
+        coeffs = np.asarray([float(m[3]) for m in members])
+        ob = old_buckets.get(key)
+        if ob is not None and ob.ells == ells:
+            if np.array_equal(ob.coeffs, coeffs):
+                buckets.append(ob)                # untouched: same object
+            else:
+                buckets.append(dataclasses.replace(ob, coeffs=coeffs))
+            continue
+        buckets.append(_make_bucket(members, full_levels, fine_strides,
+                                    fine_size, old_bucket=ob))
     return ExecutorPlan(dim=scheme.dim, full_levels=full_levels,
                         fine_shape=fine_shape, buckets=tuple(buckets))
+
+
+def update_plan_coefficients(plan: ExecutorPlan,
+                             scheme: SchemeLike) -> ExecutorPlan:
+    """Coefficient-ONLY plan update: every bucket keeps its members and
+    index maps (shared by identity); coefficients are re-read from
+    ``scheme`` and members no longer in the scheme get coefficient 0.
+
+    This is the fault-tolerance hot path: a dropped grid's (stale) data may
+    stay in the nodal dict — it must merely be FINITE, since its zero
+    coefficient multiplies it out of the gather.  Raises ``ValueError``
+    when the reduced scheme activates a grid the plan does not hold (then
+    an ``extend_plan`` rebuild is required instead).
+    """
+    coeff = {ell: float(c) for ell, c in scheme.grids}
+    held = {ell for b in plan.buckets for ell in b.ells}
+    missing = sorted(set(coeff) - held)
+    if missing:
+        raise ValueError(
+            f"coefficient-only update impossible: scheme activates grid(s) "
+            f"{missing} not present in the plan; use extend_plan")
+    new_buckets = []
+    for b in plan.buckets:
+        nc = np.asarray([coeff.get(ell, 0.0) for ell in b.ells])
+        new_buckets.append(b if np.array_equal(b.coeffs, nc)
+                           else dataclasses.replace(b, coeffs=nc))
+    return dataclasses.replace(plan, buckets=tuple(new_buckets))
+
+
+def _check_nodal_grids(nodal_grids: Mapping[LevelVector, jnp.ndarray],
+                       plan: ExecutorPlan) -> None:
+    """Explicit input validation: an opaque ``KeyError`` (missing grid) or
+    dtype error (empty mapping) deep inside the jitted gather is replaced by
+    a message naming the missing level vector(s)."""
+    if not nodal_grids:
+        raise ValueError(
+            f"nodal_grids is empty: the scheme has {plan.num_grids} "
+            f"combination grids (one nodal array per level vector required)")
+    missing = [ell for b in plan.buckets for ell in b.ells
+               if ell not in nodal_grids]
+    if missing:
+        shown = ", ".join(map(str, missing[:5]))
+        more = f" (+{len(missing) - 5} more)" if len(missing) > 5 else ""
+        raise ValueError(
+            f"nodal_grids is missing {len(missing)} scheme grid(s): "
+            f"level vector(s) {shown}{more}")
 
 
 def _assemble_bucket(nodal_grids: Mapping[LevelVector, jnp.ndarray],
@@ -170,15 +320,23 @@ def _assemble_bucket(nodal_grids: Mapping[LevelVector, jnp.ndarray],
 
 
 def ct_transform(nodal_grids: Mapping[LevelVector, jnp.ndarray],
-                 scheme: CombinationScheme, *,
+                 scheme: SchemeLike, *,
                  full_levels: Optional[Sequence[int]] = None,
                  interpret: Optional[bool] = None) -> jnp.ndarray:
     """Gather phase, batched: nodal component grids -> sparse-grid surplus
     on the common fine grid.  Equals hierarchize-per-grid + ``combine_full``
     to machine precision, in one jittable computation.
     """
-    plan = (build_plan(scheme, tuple(full_levels)) if full_levels
-            else build_plan(scheme))  # bare call: one lru_cache key
+    return ct_transform_with_plan(nodal_grids, build_plan(scheme, full_levels),
+                                  interpret=interpret)
+
+
+def ct_transform_with_plan(nodal_grids: Mapping[LevelVector, jnp.ndarray],
+                           plan: ExecutorPlan, *,
+                           interpret: Optional[bool] = None) -> jnp.ndarray:
+    """``ct_transform`` against an explicit (possibly incrementally rebuilt)
+    plan — the adaptive-refinement / fault-recovery entry point."""
+    _check_nodal_grids(nodal_grids, plan)
     dtype = jnp.result_type(*(jnp.asarray(v).dtype
                               for v in nodal_grids.values()))
     full = jnp.zeros(plan.fine_size + 1, dtype)   # +1: pad dump slot
@@ -191,7 +349,7 @@ def ct_transform(nodal_grids: Mapping[LevelVector, jnp.ndarray],
     return full[:-1].reshape(plan.fine_shape)
 
 
-def ct_scatter(full: jnp.ndarray, scheme: CombinationScheme, *,
+def ct_scatter(full: jnp.ndarray, scheme: SchemeLike, *,
                full_levels: Optional[Sequence[int]] = None,
                interpret: Optional[bool] = None
                ) -> Dict[LevelVector, jnp.ndarray]:
@@ -199,8 +357,14 @@ def ct_scatter(full: jnp.ndarray, scheme: CombinationScheme, *,
     combined solution on every component grid (truncating projection +
     batched dehierarchization; inverse-direction read of the index plan).
     """
-    plan = (build_plan(scheme, tuple(full_levels)) if full_levels
-            else build_plan(scheme))  # bare call: one lru_cache key
+    return ct_scatter_with_plan(full, build_plan(scheme, full_levels),
+                                interpret=interpret)
+
+
+def ct_scatter_with_plan(full: jnp.ndarray, plan: ExecutorPlan, *,
+                         interpret: Optional[bool] = None
+                         ) -> Dict[LevelVector, jnp.ndarray]:
+    """``ct_scatter`` against an explicit plan."""
     flat = jnp.concatenate([full.ravel(),
                             jnp.zeros((1,), full.dtype)])  # dump slot reads 0
     out: Dict[LevelVector, jnp.ndarray] = {}
@@ -217,7 +381,7 @@ def ct_scatter(full: jnp.ndarray, scheme: CombinationScheme, *,
 
 
 def ct_embedded(nodal_grids: Mapping[LevelVector, jnp.ndarray],
-                scheme: CombinationScheme, *,
+                scheme: SchemeLike, *,
                 full_levels: Optional[Sequence[int]] = None,
                 interpret: Optional[bool] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray, Tuple[LevelVector, ...]]:
@@ -227,8 +391,17 @@ def ct_embedded(nodal_grids: Mapping[LevelVector, jnp.ndarray],
 
     Returns ``(embedded (G, *fine_shape), coeffs (G,), grid order)``.
     """
-    plan = (build_plan(scheme, tuple(full_levels)) if full_levels
-            else build_plan(scheme))  # bare call: one lru_cache key
+    return ct_embedded_with_plan(nodal_grids, build_plan(scheme, full_levels),
+                                 interpret=interpret)
+
+
+def ct_embedded_with_plan(nodal_grids: Mapping[LevelVector, jnp.ndarray],
+                          plan: ExecutorPlan, *,
+                          interpret: Optional[bool] = None
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                     Tuple[LevelVector, ...]]:
+    """``ct_embedded`` against an explicit plan."""
+    _check_nodal_grids(nodal_grids, plan)
     dtype = jnp.result_type(*(jnp.asarray(v).dtype
                               for v in nodal_grids.values()))
     chunks, coeffs, order = [], [], []

@@ -17,7 +17,7 @@ import itertools
 import math
 from dataclasses import dataclass
 from functools import cached_property, reduce
-from typing import Iterator, Sequence, Tuple
+from typing import (Dict, Iterable, Iterator, Sequence, Set, Tuple, Union)
 
 LevelVector = Tuple[int, ...]
 
@@ -110,11 +110,97 @@ def canonical_levels(levels: Sequence[int]) -> Tuple[LevelVector, Tuple[int, ...
     return tuple(levels[i] for i in perm), perm
 
 
-def fine_levels(scheme: "CombinationScheme") -> LevelVector:
+def fine_levels(scheme: "SchemeLike") -> LevelVector:
     """Per-axis maximum level over the scheme — the common fine grid every
-    communication-phase realization embeds into."""
+    communication-phase realization embeds into.  Accepts anything with
+    ``.dim`` and ``.grids`` (``CombinationScheme`` or ``GeneralScheme``)."""
     return tuple(max(ell[i] for ell, _ in scheme.grids)
                  for i in range(scheme.dim))
+
+
+# ---------------------------------------------------------------------------
+# Downward-closed index sets and inclusion-exclusion coefficients
+# ---------------------------------------------------------------------------
+
+def backward_neighbors(ell: LevelVector, min_level: int = 1
+                       ) -> Iterator[LevelVector]:
+    """``ell - e_i`` for every axis still above ``min_level``."""
+    for i, li in enumerate(ell):
+        if li > min_level:
+            yield ell[:i] + (li - 1,) + ell[i + 1:]
+
+
+def forward_neighbors(ell: LevelVector) -> Iterator[LevelVector]:
+    """``ell + e_i`` for every axis."""
+    for i, li in enumerate(ell):
+        yield ell[:i] + (li + 1,) + ell[i + 1:]
+
+
+def is_downward_closed(index_set: Iterable[LevelVector],
+                       min_level: int = 1) -> bool:
+    """True iff every backward neighbor of every member is a member."""
+    iset = set(index_set)
+    return all(b in iset for ell in iset
+               for b in backward_neighbors(ell, min_level))
+
+
+def downward_closure(levels: Iterable[LevelVector], min_level: int = 1
+                     ) -> Tuple[LevelVector, ...]:
+    """Smallest downward-closed set containing ``levels`` (sorted)."""
+    seen: Set[LevelVector] = set()
+    stack = [tuple(ell) for ell in levels]
+    if not stack:
+        raise ValueError("empty index set")
+    for ell in stack:
+        if any(l < min_level for l in ell):
+            raise ValueError(f"level vector {ell} below min level {min_level}")
+    while stack:
+        ell = stack.pop()
+        if ell in seen:
+            continue
+        seen.add(ell)
+        stack.extend(backward_neighbors(ell, min_level))
+    return tuple(sorted(seen))
+
+
+def is_admissible(ell: LevelVector, index_set: Set[LevelVector],
+                  min_level: int = 1) -> bool:
+    """``index_set | {ell}`` stays downward closed."""
+    return all(b in index_set for b in backward_neighbors(ell, min_level))
+
+
+def admissible_extensions(index_set: Iterable[LevelVector],
+                          min_level: int = 1) -> Tuple[LevelVector, ...]:
+    """All level vectors NOT in the set whose addition keeps it downward
+    closed — the dimension-adaptive candidate pool (sorted)."""
+    iset = set(index_set)
+    out = {n for ell in iset for n in forward_neighbors(ell)
+           if n not in iset and is_admissible(n, iset, min_level)}
+    return tuple(sorted(out))
+
+
+def inclusion_exclusion_coefficients(index_set: Iterable[LevelVector]
+                                     ) -> Dict[LevelVector, int]:
+    """Combination coefficients of an arbitrary downward-closed set
+    (Harding et al. / Griebel-Schneider-Zenger generalized):
+
+        c_ell = sum_{z in {0,1}^d : ell + z in I} (-1)^{|z|_1}
+
+    Returns only the NONZERO coefficients.  For the regular set
+    ``{ell : |ell|_1 <= n + d - 1}`` this reproduces the classical
+    ``(-1)^q C(d-1, q)`` diagonal coefficients.
+    """
+    iset = set(index_set)
+    d = len(next(iter(iset)))
+    out: Dict[LevelVector, int] = {}
+    for ell in iset:
+        c = 0
+        for z in itertools.product((0, 1), repeat=d):
+            if tuple(l + zi for l, zi in zip(ell, z)) in iset:
+                c += (-1) ** sum(z)
+        if c:
+            out[ell] = c
+    return out
 
 
 def subspace_slices(m: Sequence[int], levels: Sequence[int]) -> Tuple[slice, ...]:
@@ -185,8 +271,30 @@ def hierarchization_bytes(levels: Sequence[int], dtype_bytes: int = 8,
 
 
 # ---------------------------------------------------------------------------
-# Dataclass used by benchmarks / examples
+# Scheme dataclasses
 # ---------------------------------------------------------------------------
+
+def scheme_total_points(scheme: "SchemeLike") -> int:
+    """Total points over the scheme's (nonzero-coefficient) grids."""
+    return sum(num_points(ell) for ell, _ in scheme.grids)
+
+
+def scheme_sparse_points(scheme: "SchemeLike") -> int:
+    """Points of the sparse grid the scheme combines to."""
+    return sum(subspace_num_points(m) for m in scheme.subspaces)
+
+
+def scheme_partition_of_unity(scheme: "SchemeLike") -> bool:
+    """Inclusion-exclusion sanity: every subspace the scheme resolves is
+    covered with total coefficient exactly 1 (holds for the regular scheme
+    and for ANY downward-closed general scheme)."""
+    for m in scheme.subspaces:
+        tot = sum(c for ell, c in scheme.grids
+                  if all(mi <= li for mi, li in zip(m, ell)))
+        if tot != 1:
+            return False
+    return True
+
 
 @dataclass(frozen=True)
 class CombinationScheme:
@@ -204,17 +312,129 @@ class CombinationScheme:
         return tuple(sparse_grid_subspaces(self.dim, self.level))
 
     def total_points(self) -> int:
-        return sum(num_points(ell) for ell, _ in self.grids)
+        return scheme_total_points(self)
 
     def sparse_points(self) -> int:
-        return sum(subspace_num_points(m) for m in self.subspaces)
+        return scheme_sparse_points(self)
 
     def validate_partition_of_unity(self) -> bool:
-        """Inclusion-exclusion sanity: every subspace of the sparse grid is
-        covered with total coefficient exactly 1."""
-        for m in self.subspaces:
-            tot = sum(c for ell, c in self.grids
-                      if all(mi <= li for mi, li in zip(m, ell)))
-            if tot != 1:
-                return False
-        return True
+        return scheme_partition_of_unity(self)
+
+    def as_general(self) -> "GeneralScheme":
+        """The same scheme as a ``GeneralScheme`` over the downward-closed
+        set ``{ell : |ell|_1 <= level + dim - 1}`` — identical grids and
+        coefficients, but open to refinement / grid dropping."""
+        return GeneralScheme.regular(self.dim, self.level)
+
+
+@dataclass(frozen=True)
+class GeneralScheme:
+    """Combination scheme over an ARBITRARY downward-closed index set.
+
+    The index set ``I`` lists every hierarchical subspace the scheme
+    resolves; the combination grids are the members with nonzero
+    inclusion-exclusion coefficient
+    ``c_ell = sum_{z in {0,1}^d, ell+z in I} (-1)^{|z|}``.  The classical
+    regular scheme is the special case ``I = {ell : |ell|_1 <= n + d - 1}``
+    (``GeneralScheme.regular``); dimension-adaptive refinement
+    (``repro.core.adaptive``) grows ``I`` one admissible index at a time and
+    fault handling (``repro.runtime.fault_tolerance.recombine_after_fault``)
+    shrinks it.  Hashable, so ``build_plan``'s lru_cache and jit closures
+    treat it exactly like ``CombinationScheme``.
+    """
+
+    dim: int
+    index_set: Tuple[LevelVector, ...]
+
+    def __post_init__(self):
+        iset = tuple(sorted({tuple(int(l) for l in ell)
+                             for ell in self.index_set}))
+        if not iset:
+            raise ValueError("empty index set")
+        for ell in iset:
+            if len(ell) != self.dim:
+                raise ValueError(f"level vector {ell} is not {self.dim}-dim")
+            if any(l < 1 for l in ell):
+                raise ValueError(f"level vector {ell} below min level 1")
+        if not is_downward_closed(iset):
+            raise ValueError(
+                "index set is not downward closed; use "
+                "GeneralScheme.from_levels(..., close=True) to take the "
+                "downward closure")
+        object.__setattr__(self, "index_set", iset)
+
+    # --- constructors ---
+
+    @classmethod
+    def from_levels(cls, levels: Iterable[LevelVector], *,
+                    close: bool = False) -> "GeneralScheme":
+        levels = tuple(tuple(ell) for ell in levels)
+        if not levels:
+            raise ValueError("empty index set")
+        if close:
+            levels = downward_closure(levels)
+        return cls(dim=len(levels[0]), index_set=levels)
+
+    @classmethod
+    def regular(cls, dim: int, level: int) -> "GeneralScheme":
+        """The classical scheme of ``CombinationScheme(dim, level)`` as a
+        downward-closed set (same grids, same coefficients)."""
+        if level < 1:
+            raise ValueError("sparse grid level must be >= 1")
+        iset = tuple(level_vectors_with_sum_at_most(dim, level + dim - 1))
+        return cls(dim=dim, index_set=iset)
+
+    # --- set refinement / reduction ---
+
+    def with_levels(self, new_levels: Iterable[LevelVector]
+                    ) -> "GeneralScheme":
+        """Grow the index set (downward closure of the union)."""
+        return GeneralScheme(
+            self.dim, downward_closure(self.index_set + tuple(new_levels)))
+
+    def without_levels(self, dropped: Iterable[LevelVector]
+                       ) -> "GeneralScheme":
+        """Shrink the index set: remove ``dropped`` AND every member
+        dominating a dropped vector, so the result stays downward closed —
+        the fault-handling reduction (a failed grid takes the subspaces only
+        it resolved with it)."""
+        dropped = [tuple(ell) for ell in dropped]
+        keep = tuple(ell for ell in self.index_set
+                     if not any(all(li >= di for li, di in zip(ell, dd))
+                                for dd in dropped))
+        if not keep:
+            raise ValueError("dropping grids would empty the index set")
+        return GeneralScheme(self.dim, keep)
+
+    # --- scheme protocol (same surface as CombinationScheme) ---
+
+    @cached_property
+    def coefficients(self) -> Dict[LevelVector, int]:
+        return inclusion_exclusion_coefficients(self.index_set)
+
+    @cached_property
+    def grids(self) -> Tuple[Tuple[LevelVector, int], ...]:
+        c = self.coefficients
+        return tuple((ell, c[ell]) for ell in self.index_set if ell in c)
+
+    @cached_property
+    def subspaces(self) -> Tuple[LevelVector, ...]:
+        return self.index_set
+
+    def total_points(self) -> int:
+        return scheme_total_points(self)
+
+    def total_bytes(self, dtype_bytes: int = 8) -> int:
+        return self.total_points() * dtype_bytes
+
+    def sparse_points(self) -> int:
+        return scheme_sparse_points(self)
+
+    def validate_partition_of_unity(self) -> bool:
+        return scheme_partition_of_unity(self)
+
+
+#: Anything the executor / communication phase accepts as a scheme: the
+#: classical regular scheme or an arbitrary downward-closed general scheme
+#: (duck-typed on ``.dim`` and ``.grids``).
+SchemeLike = Union[CombinationScheme, GeneralScheme]

@@ -91,6 +91,14 @@ class CTSurrogate:
     via ``make_ct_step`` — one jitted call, no per-grid dispatch), queries
     hit only the cached surplus buffer through the jitted evaluation step,
     so steady-state latency is a single interpolation kernel.
+
+    Accepts the classical ``CombinationScheme`` or a downward-closed
+    ``GeneralScheme`` (adaptive index sets, ``repro.core.adaptive``) —
+    the executor plan is scheme-shape-keyed either way.  ``refit`` swaps
+    in a refined scheme (new jitted ingest, new plan); ``drop_grid`` is
+    the serving-side fault hook: coefficients are recomputed by
+    inclusion-exclusion while every bucket and index map of the live plan
+    is kept, so recovery costs one re-ingest, not a plan rebuild.
     """
 
     _shared_eval = None   # one jitted eval across all surrogate instances
@@ -100,6 +108,7 @@ class CTSurrogate:
         from repro.launch.steps import make_ct_step
         from repro.core.interpolation import interpolate_hierarchical
         self.scheme = scheme
+        self._interpret = interpret
         self._ingest = make_ct_step(scheme, interpret=interpret)
         self._surplus = self._ingest(nodal_grids)
         if CTSurrogate._shared_eval is None:
@@ -114,6 +123,40 @@ class CTSurrogate:
     def update(self, nodal_grids) -> None:
         """Re-ingest new solver output (same scheme: no retrace)."""
         self._surplus = self._ingest(nodal_grids)
+
+    def refit(self, scheme, nodal_grids) -> None:
+        """Swap in a (refined) scheme: rebinds the jitted ingest step and
+        re-ingests.  Queries keep hitting the shared jitted eval.  A
+        failing ingest (e.g. ``nodal_grids`` missing a grid of the new
+        scheme) raises before any state mutates."""
+        from repro.launch.steps import make_ct_step
+        ingest = make_ct_step(scheme, interpret=self._interpret)
+        surplus = ingest(nodal_grids)
+        self.scheme, self._ingest, self._surplus = scheme, ingest, surplus
+
+    def drop_grid(self, failed, nodal_grids) -> None:
+        """Serving-side fault recovery: recombine without grid(s)
+        ``failed`` (see ``repro.runtime.fault_tolerance.
+        recombine_after_fault``).  ``nodal_grids`` must hold FINITE data
+        for dropped grids (zeros suffice) — their recomputed coefficient
+        is 0, so the stale values cancel out of the gather.  When the
+        reduction activates a previously coefficient-0 grid (the classic
+        (2,2)-drop case), ``nodal_grids`` must also supply that grid's
+        data; a missing grid raises ``ValueError`` and leaves the
+        surrogate unchanged.  On success the ingest step is rebound to the
+        post-fault plan, so later ``update`` calls recombine with the
+        reduced coefficients (and keep tolerating the dead grids' stale
+        entries in the dict)."""
+        from repro.core.executor import build_plan, ct_transform_with_plan
+        from repro.runtime.fault_tolerance import recombine_after_fault
+        plan = build_plan(self.scheme)
+        scheme, plan, _ = recombine_after_fault(self.scheme, failed,
+                                                plan=plan)
+        interpret = self._interpret
+        ingest = jax.jit(lambda grids: ct_transform_with_plan(
+            grids, plan, interpret=interpret))
+        surplus = ingest(nodal_grids)   # raises before any state mutates
+        self.scheme, self._ingest, self._surplus = scheme, ingest, surplus
 
     def query(self, points: np.ndarray) -> np.ndarray:
         """points: (Q, d) in [0,1]^d -> combined-interpolant values (Q,).

@@ -83,9 +83,11 @@ def make_ct_step(scheme, *, interpret: bool | None = None) -> Callable:
     """ONE jitted function for the whole CT communication phase:
     ``{ell: nodal}`` -> sparse-grid surplus on the common fine grid.
 
-    The scheme is bound at closure time, so the executor's bucket plan and
-    index maps are trace-time constants: re-calling with new grid VALUES
-    never retraces (one jit cache entry per scheme shape signature).
+    The scheme — classical ``CombinationScheme`` or downward-closed
+    ``GeneralScheme`` (both hashable) — is bound at closure time, so the
+    executor's bucket plan and index maps are trace-time constants:
+    re-calling with new grid VALUES never retraces (one jit cache entry
+    per scheme shape signature).
     """
     from repro.core.executor import ct_transform
 

@@ -13,6 +13,13 @@ The driver loop (``launch/train.py``) delegates health policy here:
 * **Crash recovery** — ``resume_state`` reconstructs (step, params, opt)
   from the newest intact checkpoint; partial writes are invisible thanks
   to atomic renames.
+* **CT grid loss** — ``recombine_after_fault``: when a combination grid's
+  solver group dies mid-run, the fault-tolerant combination technique
+  (Harding et al.) recombines WITHOUT it — the downward-closed index set
+  shrinks, inclusion-exclusion coefficients are recomputed, and the
+  executor plan is updated in place (coefficient-only when possible,
+  incremental bucket rebuild otherwise) instead of being rebuilt from
+  scratch.
 """
 
 from __future__ import annotations
@@ -20,9 +27,10 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, Iterable, List, Optional, Tuple
 
-__all__ = ["HealthConfig", "HealthMonitor", "StepVerdict"]
+__all__ = ["HealthConfig", "HealthMonitor", "StepVerdict",
+           "recombine_after_fault"]
 
 
 @dataclass(frozen=True)
@@ -79,3 +87,45 @@ class HealthMonitor:
             self.time_ewma = step_time if self.time_ewma is None else \
                 dt_ * self.time_ewma + (1 - dt_) * step_time
         return verdict
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerant combination technique (grid loss)
+# ---------------------------------------------------------------------------
+
+def recombine_after_fault(scheme, failed: Iterable[Tuple[int, ...]],
+                          plan=None):
+    """Recombine the CT scheme without the failed grid(s).
+
+    Returns ``(new_scheme, new_plan, coefficient_only)``:
+
+    * ``new_scheme`` — a ``GeneralScheme`` over the reduced downward-closed
+      index set (the failed vectors and everything dominating them removed;
+      a ``CombinationScheme`` input is generalized first).
+    * ``new_plan``   — preferably ``update_plan_coefficients(plan, ...)``:
+      every bucket and embed index map of the live plan KEPT (shared by
+      identity), only the inclusion-exclusion coefficients re-read, with
+      the failed members weighted 0 — so the dropped grids' stale data
+      merely has to be finite.  When the reduced scheme activates a grid
+      the plan never held (a previously coefficient-0 member of the index
+      set), falls back to an incremental ``extend_plan`` rebuild on the
+      SAME fine grid and returns ``coefficient_only=False``; the caller
+      must then supply nodal data for the newly activated grids.
+    * ``coefficient_only`` — which of the two paths was taken.
+    """
+    from repro.core.executor import (build_plan, extend_plan,
+                                     update_plan_coefficients)
+    from repro.core.levels import CombinationScheme, GeneralScheme
+    if isinstance(scheme, CombinationScheme):
+        scheme = scheme.as_general()
+    if not isinstance(scheme, GeneralScheme):
+        raise TypeError(f"expected a scheme, got {type(scheme).__name__}")
+    if plan is None:
+        plan = build_plan(scheme)
+    new_scheme = scheme.without_levels(failed)
+    try:
+        return new_scheme, update_plan_coefficients(plan, new_scheme), True
+    except ValueError:
+        new_plan = extend_plan(plan, new_scheme,
+                               full_levels=plan.full_levels)
+        return new_scheme, new_plan, False

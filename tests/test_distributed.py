@@ -95,6 +95,31 @@ def test_ct_transform_psum_matches_serial():
         """)
 
 
+def test_ct_transform_psum_general_scheme():
+    """The distributed gather accepts a GeneralScheme (adaptive index set)
+    unchanged: psum path == single-process executor path."""
+    _run("""
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        import numpy as np, jax.numpy as jnp
+        from repro.compat import AxisType, make_mesh
+        from repro.core.levels import GeneralScheme, grid_shape
+        from repro.core.distributed import ct_transform_psum
+        from repro.core.executor import ct_transform
+        mesh = make_mesh((8,), ("grid",), axis_types=(AxisType.Auto,))
+        scheme = GeneralScheme.from_levels(
+            [(5, 1, 1), (3, 3, 1), (2, 2, 2), (1, 4, 1)], close=True)
+        rng = np.random.default_rng(3)
+        grids = {ell: jnp.asarray(rng.standard_normal(grid_shape(ell)))
+                 for ell, _ in scheme.grids}
+        want = ct_transform(grids, scheme)
+        got = ct_transform_psum(grids, scheme, mesh, "grid")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-12, atol=1e-12)
+        print("OK")
+        """)
+
+
 def test_dp_training_step_matches_single_device():
     """8-way DP: global loss equals the 1-device loss on the same batch."""
     _run("""
