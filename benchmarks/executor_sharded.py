@@ -1,0 +1,157 @@
+"""Slab-sharded vs grid-replicated distributed CT gather.
+
+The grid-replicated psum (``ct_transform_psum``) materializes the full
+``(G, *fine_shape)`` embedded stack before its one psum — per-device
+embedded memory is ``(G / n) * fine_size`` and does NOT shrink as devices
+are added.  The slab-sharded path (``ct_transform_sharded``) replicates
+only the COMPACT surpluses (the scheme's point count) and scatter-adds
+into a ``ceil(fine_shape[0] / n) * row_size`` slab per device — embedded
+memory scales with ``1 / n_groups``.
+
+For each (scheme, n_groups) this benchmark
+
+  * asserts the sharded gather matches single-device ``ct_transform``
+    (fp64 here; the multidevice test tier covers fp32 at 1e-6),
+  * records the PER-DEVICE embedded-buffer bytes of both realizations —
+    derived from the plan (the slab buffer is ``slab_size + 1`` elements,
+    measured off the actual scatter target shape) and, when XLA exposes
+    it, the compiled peak temp bytes (``memory_analysis``),
+  * times both paths end to end on the fake-device mesh (8 host CPU
+    devices; wall time on one physical CPU is a smoke signal, the memory
+    accounting is the point).
+
+Emits ``BENCH_executor_sharded.json`` (``--json-out`` overrides, empty
+string disables).
+
+  PYTHONPATH=src python benchmarks/executor_sharded.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        f"{_flags} --xla_force_host_platform_device_count=8".strip()
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from common import time_call  # noqa: E402
+
+from repro.compat import AxisType, make_mesh  # noqa: E402
+from repro.core.distributed import (ct_transform_psum,  # noqa: E402
+                                    ct_transform_sharded)
+from repro.core.executor import (build_plan, ct_transform,  # noqa: E402
+                                 shard_plan)
+from repro.core.levels import (CombinationScheme, grid_shape,  # noqa: E402
+                               scheme_total_points)
+
+SCHEMES = [(2, 7), (3, 5), (4, 4)]
+GROUPS = [1, 2, 4, 8]
+DTYPE = np.float64
+
+
+def _mesh(n):
+    return make_mesh((n,), ("slab",), devices=np.array(jax.devices()[:n]),
+                     axis_types=(AxisType.Auto,))
+
+
+def _peak_temp_bytes(fn, *args):
+    """Compiled peak temp allocation, when the backend reports it."""
+    try:
+        mem = jax.jit(fn).lower(*args).compile().memory_analysis()
+        return int(getattr(mem, "temp_size_in_bytes"))
+    except Exception:
+        return None
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--json-out", default="BENCH_executor_sharded.json",
+                    help="machine-readable results path ('' disables)")
+    args = ap.parse_args(argv)
+
+    itemsize = np.dtype(DTYPE).itemsize
+    rows = []
+    print(f"{'scheme':>8} {'groups':>6} {'fine_MB':>8} {'psum_dev_MB':>12} "
+          f"{'slab_dev_MB':>12} {'mem_ratio':>9} {'psum_ms':>9} "
+          f"{'slab_ms':>9}")
+    for dim, level in SCHEMES:
+        scheme = CombinationScheme(dim, level)
+        plan = build_plan(scheme)
+        g = plan.num_grids
+        rng = np.random.default_rng(dim * 100 + level)
+        grids = {ell: jnp.asarray(rng.standard_normal(grid_shape(ell)),
+                                  DTYPE)
+                 for ell, _ in scheme.grids}
+        want = np.asarray(ct_transform(grids, scheme))
+
+        for n in GROUPS:
+            mesh = _mesh(n)
+            splan = shard_plan(plan, n)
+            f_psum = jax.jit(lambda gr, m=mesh: ct_transform_psum(
+                gr, scheme, m, "slab"))
+            f_slab = jax.jit(lambda gr, m=mesh, sp=splan: ct_transform_psum(
+                gr, scheme, m, "slab", sharded_plan=sp))
+            np.testing.assert_allclose(np.asarray(f_slab(grids)), want,
+                                       rtol=1e-12, atol=1e-12)
+            np.testing.assert_allclose(np.asarray(f_psum(grids)), want,
+                                       rtol=1e-12, atol=1e-12)
+
+            # per-device EMBEDDED buffer bytes (the memory this PR shards):
+            # psum path stacks ceil(G/n) full fine buffers per device; the
+            # slab path's scatter target is slab_size + 1 elements.
+            psum_dev = -(-g // n) * plan.fine_size * itemsize
+            slab_dev = (splan.slab_size + 1) * itemsize
+            # acceptance bound from the GEOMETRY (not the measured buffer):
+            # a perfect 1/n split of the leading axis plus at most one
+            # ragged fine row of overhang plus the dump slot
+            max_elems = ((plan.fine_shape[0] + n - 1) / n * splan.row_size
+                         + 1)
+            assert slab_dev <= max_elems * itemsize + 1e-9, \
+                (slab_dev, max_elems * itemsize)
+            slack = max_elems * n / plan.fine_size - 1
+
+            t_psum = time_call(f_psum, grids, reps=args.reps)
+            t_slab = time_call(f_slab, grids, reps=args.reps)
+            peak_psum = _peak_temp_bytes(f_psum, grids)
+            peak_slab = _peak_temp_bytes(f_slab, grids)
+
+            print(f"{f'd={dim} n={level}':>8} {n:>6} "
+                  f"{plan.fine_size * itemsize / 2**20:>8.2f} "
+                  f"{psum_dev / 2**20:>12.3f} {slab_dev / 2**20:>12.3f} "
+                  f"{psum_dev / slab_dev:>8.1f}x {t_psum * 1e3:>9.2f} "
+                  f"{t_slab * 1e3:>9.2f}")
+            rows.append({
+                "dim": dim, "level": level, "grids": g,
+                "points": scheme_total_points(scheme),
+                "fine_size": plan.fine_size, "n_groups": n,
+                "slab_rows": splan.slab_rows, "slab_size": splan.slab_size,
+                "dtype_bytes": itemsize,
+                "psum_per_device_embedded_bytes": psum_dev,
+                "sharded_per_device_embedded_bytes": slab_dev,
+                "embedded_bytes_ratio": psum_dev / slab_dev,
+                "ragged_slack": slack,
+                "compiled_peak_temp_bytes_psum": peak_psum,
+                "compiled_peak_temp_bytes_sharded": peak_slab,
+                "psum_s": t_psum, "sharded_s": t_slab,
+            })
+    if args.json_out:
+        payload = {"bench": "executor_sharded", "reps": args.reps,
+                   "backend": jax.default_backend(),
+                   "devices": jax.device_count(), "rows": rows}
+        with open(args.json_out, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"wrote {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()

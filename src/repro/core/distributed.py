@@ -12,8 +12,40 @@ Parallelism layers (DESIGN.md Sect. 4):
     (local operator rows) @ (all-gathered poles) — one all-gather of the
     grid per full d-dimensional hierarchization.
   * the communication phase — in the hierarchical basis the gather step is
-    ONE weighted psum of surpluses embedded in a common fine grid
-    (``gather_full_psum``); the scatter step is a local strided read.
+    a single weighted reduction of surpluses embedded in a common fine
+    grid; the scatter step is a local strided read.  Two realizations:
+
+    - grid-replicated (``gather_full_psum`` / ``ct_transform_psum``): the
+      grid axis is sharded and every device materializes full
+      ``fine_shape`` buffers before ONE psum.  Per-device memory is
+      ``(G / n) * fine_size`` — compute scales, memory does not.
+    - slab-sharded (``gather_slab_scatter`` / ``ct_transform_sharded``):
+      the FINE GRID is partitioned into ``n_groups`` contiguous slabs
+      along its leading axis and each device scatter-adds the compact
+      (unembedded) surpluses into ONLY its own slab, followed by one
+      tiled all-gather (or no gather at all: ``gather=False`` returns the
+      slab-sharded buffer under a ``NamedSharding`` for downstream
+      sharded consumers).  Per-device embedded memory is
+      ``ceil(fine_shape[0] / n) * row_size`` — memory scales with device
+      count; only the compact surpluses (the scheme's point count) are
+      replicated.
+
+Slab partitioning invariants (``repro.core.executor.ShardedPlan``):
+
+  * slab ``s`` owns fine rows ``[s * slab_rows, (s+1) * slab_rows)`` with
+    ``slab_rows = ceil(fine_shape[0] / n_slabs)``; the last slab is
+    ragged when ``n_slabs`` does not divide ``fine_shape[0]`` (its
+    out-of-range tail receives no writes).
+  * the per-slab index map ``SlabBucket.index[s]`` holds SLAB-LOCAL flat
+    indices; every entry outside slab ``s`` (and every pad position of
+    the base map) points at the slab dump slot ``slab_size``, so each
+    global index lands in exactly one slab and the per-slot addition
+    order of the dense gather is preserved — the sharded result is
+    bit-identical, not just allclose.
+  * ``SlabBucket.row_ranges[s, g]`` records which contiguous range of
+    member ``g``'s original-leading-axis nodes embeds into slab ``s`` —
+    what a multi-controller run ships to group ``s`` instead of
+    replicating the compact surpluses.
 """
 
 from __future__ import annotations
@@ -34,7 +66,8 @@ from repro.kernels.hierarchize import _padded_operator  # shared constant builde
 from repro.kernels.ops import hierarchize as hier_local
 
 __all__ = ["plan_grid_groups", "hierarchize_sharded", "gather_full_psum",
-           "comm_phase_sharded", "ct_transform_psum"]
+           "gather_slab_scatter", "comm_phase_sharded", "ct_transform_psum",
+           "ct_transform_sharded"]
 
 
 def plan_grid_groups(scheme: SchemeLike, num_groups: int
@@ -123,18 +156,128 @@ def gather_full_psum(embedded: jnp.ndarray, coeff: jnp.ndarray, mesh: Mesh,
     return fn(embedded, coeff)
 
 
-def comm_phase_sharded(hier_grids, scheme: SchemeLike, mesh: Mesh,
-                       axis_name: str, full_levels: Sequence[int] | None = None):
-    """Full communication phase with the gather realized as a psum.
+def gather_slab_scatter(alphas, sharded_plan, mesh: Mesh, axis_name: str, *,
+                        gather: bool = True) -> jnp.ndarray:
+    """Slab-sharded gather step: per-bucket COMPACT surpluses ``alphas``
+    (``repro.core.executor.bucket_surpluses``, one ``(G_b, P_b)`` array per
+    bucket, replicated) are coefficient-weighted and scatter-added into the
+    fine grid with each device group owning one leading-axis slab — the
+    per-device embedded buffer is ``slab_size + 1`` elements instead of
+    ``G * fine_size``.
 
-    Single-controller convenience wrapper: embeds every grid, stacks,
-    psums over the grid axis, extracts per grid.  In a multi-controller
-    deployment each group computes only its own embed/extract.
+    ``gather=True`` finishes with one tiled all-gather and returns the
+    replicated combined buffer reshaped to ``fine_shape`` (drop-in for
+    ``ct_transform``).  ``gather=False`` keeps the result sharded: the
+    returned array has shape ``(n_slabs * slab_rows, *fine_shape[1:])``
+    (leading axis slab-padded, rows past ``fine_shape[0]`` zero) under
+    ``NamedSharding(mesh, P(axis_name, ...))`` for downstream sharded
+    consumers.
+    """
+    splan = sharded_plan
+    nshards = mesh.shape[axis_name]
+    if nshards != splan.n_slabs:
+        raise ValueError(
+            f"plan is sharded for {splan.n_slabs} slab(s) but mesh axis "
+            f"{axis_name!r} has {nshards} device(s); rebuild with "
+            f"shard_plan(plan, {nshards})")
+    if len(alphas) != len(splan.plan.buckets):
+        raise ValueError(
+            f"got {len(alphas)} surplus array(s) for "
+            f"{len(splan.plan.buckets)} bucket(s)")
+    nb = len(alphas)
+    dtype = jnp.result_type(*(a.dtype for a in alphas))
+    slab_size = splan.slab_size
+    idx = [jnp.asarray(sb.index) for sb in splan.slab_buckets]
+    coeffs = [jnp.asarray(b.coeffs, dtype) for b in splan.plan.buckets]
+
+    def local_fn(*args):
+        idx_loc = args[:nb]              # (1, G, P) — this device's slab
+        alpha = args[nb:2 * nb]          # (G, P) replicated compact rows
+        cs = args[2 * nb:]               # (G,) replicated coefficients
+        buf = jnp.zeros(slab_size + 1, dtype)       # +1: dump slot
+        for i, a, c in zip(idx_loc, alpha, cs):
+            buf = buf.at[i[0]].add(c[:, None] * a.astype(dtype))
+        buf = buf[:slab_size]
+        if gather:
+            return jax.lax.all_gather(buf, axis_name, tiled=True)
+        return buf[None]
+
+    rep2, rep1 = P(None, None), P(None)
+    in_specs = tuple([P(axis_name, None, None)] * nb
+                     + [rep2] * nb + [rep1] * nb)
+    out_specs = P(None) if gather else P(axis_name, None)
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    out = fn(*idx, *alphas, *coeffs)
+    if gather:
+        return out[:splan.fine_size].reshape(splan.plan.fine_shape)
+    padded = out.reshape((splan.n_slabs * splan.slab_rows,)
+                         + splan.plan.fine_shape[1:])
+    sharding = NamedSharding(
+        mesh, P(axis_name, *([None] * (len(splan.plan.fine_shape) - 1))))
+    if isinstance(padded, jax.core.Tracer):
+        return jax.lax.with_sharding_constraint(padded, sharding)
+    return jax.device_put(padded, sharding)
+
+
+def ct_transform_sharded(nodal_grids, scheme: SchemeLike, mesh: Mesh,
+                         axis_name: str, *,
+                         full_levels: Sequence[int] | None = None,
+                         sharded_plan=None, gather: bool = True,
+                         interpret: bool | None = None) -> jnp.ndarray:
+    """Memory-scaling distributed gather: bucket-batched hierarchization
+    to COMPACT surpluses, then the slab-sharded scatter-add — the
+    multi-device ``ct_transform`` whose per-device embedded memory is
+    ``fine_size / n_groups``, not ``G * fine_size``.
+
+    Pass ``sharded_plan`` (``repro.core.executor.shard_plan``) to reuse a
+    live plan (the adaptive / fault path); otherwise one is built for
+    ``mesh.shape[axis_name]`` slabs.  ``gather=False`` returns the
+    slab-sharded fine buffer (see ``gather_slab_scatter``).
+    """
+    from repro.core.executor import build_plan, bucket_surpluses, shard_plan
+    if sharded_plan is None:
+        sharded_plan = shard_plan(build_plan(scheme, full_levels),
+                                  mesh.shape[axis_name])
+    elif full_levels is not None and sharded_plan.full_levels != \
+            tuple(int(l) for l in full_levels):
+        raise ValueError(
+            f"sharded_plan embeds into {sharded_plan.full_levels}, caller "
+            f"asked for {tuple(int(l) for l in full_levels)}")
+    alphas = bucket_surpluses(nodal_grids, sharded_plan.plan,
+                              interpret=interpret)
+    return gather_slab_scatter(alphas, sharded_plan, mesh, axis_name,
+                               gather=gather)
+
+
+def comm_phase_sharded(hier_grids, scheme: SchemeLike, mesh: Mesh,
+                       axis_name: str, full_levels: Sequence[int] | None = None,
+                       sharded_plan=None):
+    """Full communication phase: gather + per-grid extract.
+
+    Single-controller convenience wrapper.  Default (``sharded_plan=None``)
+    is the grid-replicated psum: embeds every grid, stacks, psums over the
+    grid axis.  With a ``sharded_plan`` the gather runs slab-sharded
+    instead: the already-hierarchized grids are packed into compact bucket
+    rows (no ``(G, *fine_shape)`` stack is ever materialized) and
+    scatter-added slab-locally.  In a multi-controller deployment each
+    group computes only its own embed/extract.
     """
     from repro.core.combination import embed_to_full, extract_from_full
     if full_levels is None:
         full_levels = fine_levels(scheme)
     ells = [ell for ell, _ in scheme.grids]
+    if sharded_plan is not None:
+        from repro.core.executor import _assemble_bucket
+        if sharded_plan.full_levels != tuple(full_levels):
+            raise ValueError(
+                f"sharded_plan embeds into {sharded_plan.full_levels}, "
+                f"comm phase asked for {tuple(full_levels)}")
+        alphas = [_assemble_bucket(hier_grids, b).reshape(len(b.ells), -1)
+                  for b in sharded_plan.plan.buckets]
+        combined = gather_slab_scatter(alphas, sharded_plan, mesh, axis_name)
+        return {ell: extract_from_full(combined, ell, full_levels)
+                for ell in ells}
     coeffs = jnp.asarray([float(c) for _, c in scheme.grids])
     emb = jnp.stack([embed_to_full(hier_grids[ell], ell, full_levels)
                      for ell in ells])
@@ -150,14 +293,23 @@ def comm_phase_sharded(hier_grids, scheme: SchemeLike, mesh: Mesh,
 
 def ct_transform_psum(nodal_grids, scheme: SchemeLike, mesh: Mesh,
                       axis_name: str,
-                      full_levels: Sequence[int] | None = None) -> jnp.ndarray:
+                      full_levels: Sequence[int] | None = None,
+                      sharded_plan=None) -> jnp.ndarray:
     """Distributed batched gather: the executor's bucket-batched
     hierarchization + static index plan produce the per-grid embedded
     surpluses, then ONE weighted psum over grid groups combines them —
     the multi-node realization of ``repro.core.executor.ct_transform``.
 
     Returns the replicated sparse-grid surplus on the common fine grid.
+    Pass ``sharded_plan`` to run the memory-scaling slab-sharded gather
+    instead (no ``(G, *fine_shape)`` stack is materialized; see
+    ``ct_transform_sharded``) — same result, per-device embedded memory
+    ``fine_size / n_groups``.
     """
+    if sharded_plan is not None:
+        return ct_transform_sharded(nodal_grids, scheme, mesh, axis_name,
+                                    full_levels=full_levels,
+                                    sharded_plan=sharded_plan)
     from repro.core.executor import ct_embedded
     embedded, coeffs, _ = ct_embedded(nodal_grids, scheme,
                                       full_levels=full_levels)

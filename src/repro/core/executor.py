@@ -78,10 +78,11 @@ from repro.core.levels import (LevelVector, SchemeLike, canonical_levels,
 from repro.kernels.hierarchize import (dehierarchize_batched,
                                        hierarchize_batched)
 
-__all__ = ["ExecutorPlan", "Bucket", "build_plan", "extend_plan",
+__all__ = ["ExecutorPlan", "Bucket", "ShardedPlan", "SlabBucket",
+           "build_plan", "shard_plan", "extend_plan",
            "update_plan_coefficients", "ct_transform", "ct_scatter",
            "ct_embedded", "ct_transform_with_plan", "ct_scatter_with_plan",
-           "ct_embedded_with_plan"]
+           "ct_embedded_with_plan", "bucket_surpluses"]
 
 
 @dataclass(frozen=True)
@@ -116,6 +117,137 @@ class ExecutorPlan:
     @property
     def num_grids(self) -> int:
         return sum(len(b.ells) for b in self.buckets)
+
+
+@dataclass(frozen=True)
+class SlabBucket:
+    """Per-slab split of one bucket's embed index map.
+
+    The fine grid is partitioned into ``n_slabs`` contiguous slabs along
+    its LEADING axis (``slab_rows`` rows each, the last one ragged when
+    ``fine_shape[0] % n_slabs != 0``).  For slab ``s``:
+
+    * ``index[s]`` — the bucket's ``(G, P)`` index map rewritten in
+      slab-LOCAL flat coordinates: entries landing in slab ``s`` hold
+      ``global - s * slab_rows * row_size``; every other entry (including
+      the base map's pad positions) points at the slab dump slot
+      ``slab_size``.  Each global index therefore lands in exactly one
+      slab, so summing the per-slab scatter-adds reproduces the dense
+      gather bit-for-bit (addition order per slot is preserved).
+    * ``row_ranges[s, g]`` — the half-open range ``[start, stop)`` of
+      member ``g``'s nodes along the ORIGINAL leading axis whose embedded
+      rows fall in slab ``s`` (embedding is monotone per axis, so the set
+      is contiguous).  This is the metadata a multi-controller deployment
+      uses to ship only the relevant surplus rows to each group.
+    """
+
+    index: np.ndarray        # (S, G, P) int32 slab-local indices
+    row_ranges: np.ndarray   # (S, G, 2) int32 node ranges [start, stop)
+
+
+@dataclass(frozen=True)
+class ShardedPlan:
+    """Slab-sharded view of an ``ExecutorPlan``: the same buckets and
+    coefficients, plus per-slab index maps so each of ``n_slabs`` device
+    groups scatter-adds only into its own ``~fine_size / n_slabs`` slab
+    of the fine grid (``repro.core.distributed.gather_slab_scatter``).
+
+    ``plan`` is the unsharded base plan (shared by identity where
+    possible); ``extend_plan`` / ``update_plan_coefficients`` accept a
+    ``ShardedPlan`` directly and re-shard incrementally, so the adaptive
+    and fault paths work unchanged on sharded plans.
+    """
+
+    plan: ExecutorPlan
+    n_slabs: int
+    slab_rows: int                        # ceil(fine_shape[0] / n_slabs)
+    slab_buckets: Tuple[SlabBucket, ...]
+
+    @property
+    def row_size(self) -> int:
+        return int(np.prod(self.plan.fine_shape[1:], dtype=np.int64))
+
+    @property
+    def slab_size(self) -> int:
+        return self.slab_rows * self.row_size
+
+    # -- ExecutorPlan surface the fault/adaptive callers read --
+    @property
+    def dim(self) -> int:
+        return self.plan.dim
+
+    @property
+    def full_levels(self) -> LevelVector:
+        return self.plan.full_levels
+
+    @property
+    def fine_shape(self) -> Tuple[int, ...]:
+        return self.plan.fine_shape
+
+    @property
+    def fine_size(self) -> int:
+        return self.plan.fine_size
+
+    @property
+    def buckets(self) -> Tuple[Bucket, ...]:
+        return self.plan.buckets
+
+    @property
+    def num_grids(self) -> int:
+        return self.plan.num_grids
+
+
+def _shard_bucket(bucket: Bucket, full_levels: LevelVector, n_slabs: int,
+                  slab_rows: int, row_size: int) -> SlabBucket:
+    """Split one bucket's index map into per-slab local maps + row ranges."""
+    n0 = (1 << full_levels[0]) - 1
+    slab_size = slab_rows * row_size
+    g = bucket.index.astype(np.int64)             # (G, P); dump == fine_size
+    row = g // row_size                           # dump maps to row n0
+    index = np.empty((n_slabs,) + g.shape, np.int32)
+    ranges = np.zeros((n_slabs, g.shape[0], 2), np.int32)
+    for s in range(n_slabs):
+        lo, hi = s * slab_rows, min((s + 1) * slab_rows, n0)
+        in_slab = (row >= lo) & (row < hi)
+        index[s] = np.where(in_slab, g - lo * row_size, slab_size)
+    for gi, ell in enumerate(bucket.ells):
+        step = 1 << (full_levels[0] - ell[0])
+        rows = (np.arange((1 << ell[0]) - 1) + 1) * step - 1
+        for s in range(n_slabs):
+            lo, hi = s * slab_rows, min((s + 1) * slab_rows, n0)
+            hit = np.nonzero((rows >= lo) & (rows < hi))[0]
+            if hit.size:
+                ranges[s, gi] = (hit[0], hit[-1] + 1)
+    return SlabBucket(index=index, row_ranges=ranges)
+
+
+def shard_plan(plan: ExecutorPlan, n_slabs: int,
+               old: Optional["ShardedPlan"] = None) -> ShardedPlan:
+    """Slab-shard a plan for ``n_slabs`` device groups.
+
+    ``old`` (a prior sharding, e.g. before an incremental rebuild) lets
+    buckets whose base ``index`` array survived BY IDENTITY reuse their
+    slab split unchanged — the sharded analogue of ``extend_plan``'s
+    bucket reuse.
+    """
+    if isinstance(plan, ShardedPlan):
+        raise TypeError("shard_plan expects the unsharded base plan")
+    if n_slabs < 1:
+        raise ValueError(f"n_slabs must be >= 1, got {n_slabs}")
+    n0 = plan.fine_shape[0]
+    row_size = int(np.prod(plan.fine_shape[1:], dtype=np.int64))
+    slab_rows = -(-n0 // n_slabs)
+    reuse = {}
+    if old is not None and old.n_slabs == n_slabs \
+            and old.plan.full_levels == plan.full_levels:
+        reuse = {id(b.index): sb
+                 for b, sb in zip(old.plan.buckets, old.slab_buckets)}
+    slab_buckets = tuple(
+        reuse.get(id(b.index)) or _shard_bucket(b, plan.full_levels, n_slabs,
+                                                slab_rows, row_size)
+        for b in plan.buckets)
+    return ShardedPlan(plan=plan, n_slabs=n_slabs, slab_rows=slab_rows,
+                       slab_buckets=slab_buckets)
 
 
 def _member_index_map(ell: LevelVector, perm: Tuple[int, ...],
@@ -229,6 +361,9 @@ def extend_plan(plan: ExecutorPlan, scheme: SchemeLike,
     held.  Falls back to a full (cached) ``build_plan`` when the fine grid
     itself changed, since then every embed index is stale.
     """
+    if isinstance(plan, ShardedPlan):
+        return shard_plan(extend_plan(plan.plan, scheme, full_levels),
+                          plan.n_slabs, old=plan)
     if full_levels is None:
         full_levels = fine_levels(scheme)
     full_levels = tuple(int(l) for l in full_levels)
@@ -271,6 +406,11 @@ def update_plan_coefficients(plan: ExecutorPlan,
     when the reduced scheme activates a grid the plan does not hold (then
     an ``extend_plan`` rebuild is required instead).
     """
+    if isinstance(plan, ShardedPlan):
+        # every base index map is kept, so the slab splits are reused
+        # verbatim (shared by identity via shard_plan's id() lookup)
+        return shard_plan(update_plan_coefficients(plan.plan, scheme),
+                          plan.n_slabs, old=plan)
     coeff = {ell: float(c) for ell, c in scheme.grids}
     held = {ell for b in plan.buckets for ell in b.ells}
     missing = sorted(set(coeff) - held)
@@ -331,20 +471,40 @@ def ct_transform(nodal_grids: Mapping[LevelVector, jnp.ndarray],
                                   interpret=interpret)
 
 
+def bucket_surpluses(nodal_grids: Mapping[LevelVector, jnp.ndarray],
+                     plan: ExecutorPlan, *,
+                     interpret: Optional[bool] = None
+                     ) -> Tuple[jnp.ndarray, ...]:
+    """Per-bucket COMPACT hierarchical surpluses ``[(G_b, P_b), ...]`` —
+    the batched hierarchization WITHOUT the embed.  This is the payload
+    the slab-sharded gather replicates: its total size is the scheme's
+    point count, not ``G * fine_size``."""
+    if isinstance(plan, ShardedPlan):
+        plan = plan.plan
+    _check_nodal_grids(nodal_grids, plan)
+    out = []
+    for bucket in plan.buckets:
+        x = _assemble_bucket(nodal_grids, bucket)
+        alpha = hierarchize_batched(x, bucket.levels, interpret=interpret)
+        out.append(alpha.reshape(len(bucket.ells), -1))
+    return tuple(out)
+
+
 def ct_transform_with_plan(nodal_grids: Mapping[LevelVector, jnp.ndarray],
                            plan: ExecutorPlan, *,
                            interpret: Optional[bool] = None) -> jnp.ndarray:
     """``ct_transform`` against an explicit (possibly incrementally rebuilt)
-    plan — the adaptive-refinement / fault-recovery entry point."""
-    _check_nodal_grids(nodal_grids, plan)
-    dtype = jnp.result_type(*(jnp.asarray(v).dtype
-                              for v in nodal_grids.values()))
+    plan — the adaptive-refinement / fault-recovery entry point.  A
+    ``ShardedPlan`` is accepted and runs through its base plan (the
+    single-device fallback; the multi-device execution lives in
+    ``repro.core.distributed.ct_transform_sharded``)."""
+    if isinstance(plan, ShardedPlan):
+        plan = plan.plan
+    alphas = bucket_surpluses(nodal_grids, plan, interpret=interpret)
+    dtype = jnp.result_type(*(a.dtype for a in alphas))
     full = jnp.zeros(plan.fine_size + 1, dtype)   # +1: pad dump slot
-    for bucket in plan.buckets:
-        x = _assemble_bucket(nodal_grids, bucket)
-        alpha = hierarchize_batched(x, bucket.levels, interpret=interpret)
-        contrib = jnp.asarray(bucket.coeffs, dtype)[:, None] * \
-            alpha.reshape(len(bucket.ells), -1)
+    for bucket, alpha in zip(plan.buckets, alphas):
+        contrib = jnp.asarray(bucket.coeffs, dtype)[:, None] * alpha
         full = full.at[jnp.asarray(bucket.index)].add(contrib)
     return full[:-1].reshape(plan.fine_shape)
 
@@ -364,7 +524,11 @@ def ct_scatter(full: jnp.ndarray, scheme: SchemeLike, *,
 def ct_scatter_with_plan(full: jnp.ndarray, plan: ExecutorPlan, *,
                          interpret: Optional[bool] = None
                          ) -> Dict[LevelVector, jnp.ndarray]:
-    """``ct_scatter`` against an explicit plan."""
+    """``ct_scatter`` against an explicit plan (``ShardedPlan`` accepted:
+    the scatter step is a local strided read, so it runs off the base
+    plan against the gathered fine buffer)."""
+    if isinstance(plan, ShardedPlan):
+        plan = plan.plan
     flat = jnp.concatenate([full.ravel(),
                             jnp.zeros((1,), full.dtype)])  # dump slot reads 0
     out: Dict[LevelVector, jnp.ndarray] = {}
@@ -401,6 +565,8 @@ def ct_embedded_with_plan(nodal_grids: Mapping[LevelVector, jnp.ndarray],
                           ) -> Tuple[jnp.ndarray, jnp.ndarray,
                                      Tuple[LevelVector, ...]]:
     """``ct_embedded`` against an explicit plan."""
+    if isinstance(plan, ShardedPlan):
+        plan = plan.plan
     _check_nodal_grids(nodal_grids, plan)
     dtype = jnp.result_type(*(jnp.asarray(v).dtype
                               for v in nodal_grids.values()))

@@ -99,21 +99,57 @@ class CTSurrogate:
     the serving-side fault hook: coefficients are recomputed by
     inclusion-exclusion while every bucket and index map of the live plan
     is kept, so recovery costs one re-ingest, not a plan rebuild.
+
+    Opt-in multi-device ingest: pass ``mesh=`` (and ``axis_name=``, default
+    ``"slab"``) to run the gather slab-sharded over the mesh axis
+    (``repro.core.distributed.ct_transform_sharded``) — per-device embedded
+    memory is ``fine_size / n_devices`` instead of ``G * fine_size``; the
+    served surplus buffer itself stays replicated, so the query path is
+    unchanged.  ``refit`` and ``drop_grid`` re-shard the plan
+    incrementally (slab index maps of surviving buckets are reused by
+    identity).
     """
 
     _shared_eval = None   # one jitted eval across all surrogate instances
 
     def __init__(self, scheme, nodal_grids,
-                 interpret: Optional[bool] = None):
-        from repro.launch.steps import make_ct_step
+                 interpret: Optional[bool] = None,
+                 mesh=None, axis_name: str = "slab"):
         from repro.core.interpolation import interpolate_hierarchical
         self.scheme = scheme
         self._interpret = interpret
-        self._ingest = make_ct_step(scheme, interpret=interpret)
+        self._mesh, self._axis_name = mesh, axis_name
+        self._plan = self._build_plan(scheme)
+        self._ingest = self._make_ingest(self._plan)
         self._surplus = self._ingest(nodal_grids)
         if CTSurrogate._shared_eval is None:
             CTSurrogate._shared_eval = jax.jit(interpolate_hierarchical)
         self._eval = CTSurrogate._shared_eval
+
+    def _build_plan(self, scheme):
+        from repro.core.executor import build_plan, shard_plan
+        plan = build_plan(scheme)
+        if self._mesh is None:
+            return plan
+        return shard_plan(plan, self._mesh.shape[self._axis_name])
+
+    def _make_ingest(self, plan):
+        """One jitted ingest bound to an explicit plan: single-device
+        ``ct_transform_with_plan`` or the slab-sharded gather."""
+        from repro.core.executor import ct_transform_with_plan
+        interpret = self._interpret
+        if self._mesh is None:
+            return jax.jit(lambda grids: ct_transform_with_plan(
+                grids, plan, interpret=interpret))
+        from repro.core.distributed import gather_slab_scatter
+        from repro.core.executor import bucket_surpluses
+        mesh, axis_name = self._mesh, self._axis_name
+
+        def ingest(grids):
+            alphas = bucket_surpluses(grids, plan.plan, interpret=interpret)
+            return gather_slab_scatter(alphas, plan, mesh, axis_name)
+
+        return jax.jit(ingest)
 
     @property
     def surplus(self) -> jnp.ndarray:
@@ -129,10 +165,12 @@ class CTSurrogate:
         re-ingests.  Queries keep hitting the shared jitted eval.  A
         failing ingest (e.g. ``nodal_grids`` missing a grid of the new
         scheme) raises before any state mutates."""
-        from repro.launch.steps import make_ct_step
-        ingest = make_ct_step(scheme, interpret=self._interpret)
+        from repro.core.executor import extend_plan
+        plan = extend_plan(self._plan, scheme)
+        ingest = self._make_ingest(plan)
         surplus = ingest(nodal_grids)
-        self.scheme, self._ingest, self._surplus = scheme, ingest, surplus
+        self.scheme, self._plan = scheme, plan
+        self._ingest, self._surplus = ingest, surplus
 
     def drop_grid(self, failed, nodal_grids) -> None:
         """Serving-side fault recovery: recombine without grid(s)
@@ -144,19 +182,17 @@ class CTSurrogate:
         (2,2)-drop case), ``nodal_grids`` must also supply that grid's
         data; a missing grid raises ``ValueError`` and leaves the
         surrogate unchanged.  On success the ingest step is rebound to the
-        post-fault plan, so later ``update`` calls recombine with the
-        reduced coefficients (and keep tolerating the dead grids' stale
-        entries in the dict)."""
-        from repro.core.executor import build_plan, ct_transform_with_plan
+        post-fault plan — on a mesh, to the incrementally re-sharded plan
+        (untouched slab index maps reused by identity) — so later
+        ``update`` calls recombine with the reduced coefficients (and keep
+        tolerating the dead grids' stale entries in the dict)."""
         from repro.runtime.fault_tolerance import recombine_after_fault
-        plan = build_plan(self.scheme)
         scheme, plan, _ = recombine_after_fault(self.scheme, failed,
-                                                plan=plan)
-        interpret = self._interpret
-        ingest = jax.jit(lambda grids: ct_transform_with_plan(
-            grids, plan, interpret=interpret))
+                                                plan=self._plan)
+        ingest = self._make_ingest(plan)
         surplus = ingest(nodal_grids)   # raises before any state mutates
-        self.scheme, self._ingest, self._surplus = scheme, ingest, surplus
+        self.scheme, self._plan = scheme, plan
+        self._ingest, self._surplus = ingest, surplus
 
     def query(self, points: np.ndarray) -> np.ndarray:
         """points: (Q, d) in [0,1]^d -> combined-interpolant values (Q,).

@@ -112,6 +112,10 @@ def recombine_after_fault(scheme, failed: Iterable[Tuple[int, ...]],
       SAME fine grid and returns ``coefficient_only=False``; the caller
       must then supply nodal data for the newly activated grids.
     * ``coefficient_only`` — which of the two paths was taken.
+
+    ``plan`` may be a slab-sharded ``repro.core.executor.ShardedPlan``
+    (multi-device serving): both update paths re-shard incrementally,
+    reusing the slab index maps of every surviving bucket by identity.
     """
     from repro.core.executor import (build_plan, extend_plan,
                                      update_plan_coefficients)

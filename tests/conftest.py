@@ -7,10 +7,22 @@ pins its own dtypes (bf16/f32) explicitly, so it is unaffected.
 Property tests use the seeded case generator in ``tests/proptest.py``
 (``hypothesis`` is not installable in the hermetic CI container).
 
-NOTE: XLA_FLAGS / host-device-count is deliberately NOT set here — tests
-run on the 1 real CPU device; multi-device behaviour is tested in
-subprocesses (test_distributed.py) and by the dry-run.
+Multi-device tests run IN PROCESS: XLA_FLAGS is extended with 8 fake host
+devices here, before jax initializes (conftest imports precede every test
+module), replacing the old subprocess-per-test pattern that respawned
+python + jax for each case.  Tests needing the fake devices carry the
+``multidevice`` marker and are skipped automatically if the device count
+ends up below 8 (e.g. an externally forced XLA_FLAGS).
 """
+
+import os
+
+_MULTIDEVICE_COUNT = 8
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{_flags} --xla_force_host_platform_device_count="
+        f"{_MULTIDEVICE_COUNT}").strip()
 
 import jax
 
@@ -23,3 +35,14 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def pytest_collection_modifyitems(config, items):
+    if jax.device_count() >= _MULTIDEVICE_COUNT:
+        return
+    skip = pytest.mark.skip(
+        reason=f"needs {_MULTIDEVICE_COUNT} (fake) host devices; "
+               f"XLA_FLAGS was overridden externally")
+    for item in items:
+        if "multidevice" in item.keywords:
+            item.add_marker(skip)

@@ -357,6 +357,69 @@ def test_ct_surrogate_general_scheme_and_fault():
                                rtol=1e-9, atol=1e-10)
 
 
+@pytest.mark.multidevice
+def test_ct_surrogate_on_mesh_matches_single_device_and_fault():
+    """CTSurrogate with the opt-in ``mesh=`` runs the slab-sharded ingest:
+    queries, drop_grid (coefficient-only path) and post-fault updates all
+    equal the single-device surrogate bit-for-bit."""
+    from repro.compat import AxisType, make_mesh
+    from repro.launch.serve import CTSurrogate
+    mesh = make_mesh((8,), ("slab",), axis_types=(AxisType.Auto,))
+    gs = GeneralScheme.from_levels([(4, 1), (3, 2), (2, 3), (1, 4)],
+                                   close=True)
+    u = lambda a, b: jnp.sin(2 * a) * (b - b * b)
+    grids = {ell: sample_function(u, ell) for ell, _ in gs.grids}
+    srv = CTSurrogate(gs, grids, mesh=mesh)
+    ref = CTSurrogate(gs, grids)
+    pts = np.random.default_rng(8).random((32, 2))
+    np.testing.assert_array_equal(np.asarray(srv.surplus),
+                                  np.asarray(ref.surplus))
+    np.testing.assert_array_equal(srv.query(pts), ref.query(pts))
+
+    dropped = (4, 1)
+    grids_after = dict(grids)
+    grids_after[dropped] = jnp.zeros_like(grids[dropped])
+    srv.drop_grid([dropped], grids_after)
+    ref.drop_grid([dropped], grids_after)
+    assert srv.scheme == gs.without_levels([dropped]) == ref.scheme
+    np.testing.assert_array_equal(srv.query(pts), ref.query(pts))
+    # the rebound ingest keeps running sharded with reduced coefficients
+    srv.update({ell: 2.0 * g for ell, g in grids_after.items()})
+    ref.update({ell: 2.0 * g for ell, g in grids_after.items()})
+    np.testing.assert_array_equal(srv.query(pts), ref.query(pts))
+
+
+@pytest.mark.multidevice
+def test_ct_surrogate_on_mesh_fault_fallback_path():
+    """The extend_plan fallback (dropping (2,2) activates (1,1)) also works
+    on a mesh: failure leaves the surrogate unchanged, success re-shards
+    the extended plan and matches the serial recombination."""
+    from repro.compat import AxisType, make_mesh
+    from repro.launch.serve import CTSurrogate
+    mesh = make_mesh((8,), ("slab",), axis_types=(AxisType.Auto,))
+    gs = GeneralScheme.regular(2, 3)
+    u = lambda a, b: jnp.sin(2 * a) * (b - b * b)
+    grids = {ell: sample_function(u, ell) for ell, _ in gs.grids}
+    pts = np.random.default_rng(9).random((32, 2))
+
+    srv = CTSurrogate(gs, grids, mesh=mesh)
+    before = srv.query(pts)
+    with pytest.raises(ValueError, match=r"\(1, 1\)"):
+        srv.drop_grid([(2, 2)], grids)      # (1, 1) data not supplied
+    assert srv.scheme == gs                  # untouched on failure
+    np.testing.assert_array_equal(srv.query(pts), before)
+
+    full = dict(grids)
+    full[(1, 1)] = sample_function(u, (1, 1))
+    srv.drop_grid([(2, 2)], full)
+    reduced = gs.without_levels([(2, 2)])
+    assert srv.scheme == reduced
+    want = np.asarray(comb.combined_interpolant_points(
+        {ell: full[ell] for ell, _ in reduced.grids}, reduced,
+        jnp.asarray(pts)))
+    np.testing.assert_allclose(srv.query(pts), want, rtol=1e-9, atol=1e-10)
+
+
 def test_ct_surrogate_fault_fallback_path():
     """Dropping (2,2) from the regular 2-D scheme activates (1,1): with
     its data supplied the surrogate recovers through the extend_plan
