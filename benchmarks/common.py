@@ -22,7 +22,20 @@ from typing import Callable, Dict, Iterable, List
 import jax
 import numpy as np
 
-__all__ = ["time_call", "BenchRow", "emit_csv", "perf_gflops"]
+__all__ = ["time_call", "peak_temp_bytes", "BenchRow", "emit_csv",
+           "perf_gflops"]
+
+
+def peak_temp_bytes(jitted, *args):
+    """Compiled peak temp allocation of a jitted callable, when the
+    backend reports it.  NOTE ``lower().compile()`` goes through the AOT
+    path — one extra compile per probe, independent of the jit dispatch
+    cache (the price of getting ``memory_analysis`` at all)."""
+    try:
+        mem = jitted.lower(*args).compile().memory_analysis()
+        return int(getattr(mem, "temp_size_in_bytes"))
+    except Exception:
+        return None
 
 
 def time_call(fn: Callable, *args, reps: int = 5, warmup: int = 2,

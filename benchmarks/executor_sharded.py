@@ -43,7 +43,7 @@ import numpy as np
 
 jax.config.update("jax_enable_x64", True)
 
-from common import time_call  # noqa: E402
+from common import peak_temp_bytes, time_call  # noqa: E402
 
 from repro.compat import AxisType, make_mesh  # noqa: E402
 from repro.core.distributed import (ct_transform_psum,  # noqa: E402
@@ -61,15 +61,6 @@ DTYPE = np.float64
 def _mesh(n):
     return make_mesh((n,), ("slab",), devices=np.array(jax.devices()[:n]),
                      axis_types=(AxisType.Auto,))
-
-
-def _peak_temp_bytes(fn, *args):
-    """Compiled peak temp allocation, when the backend reports it."""
-    try:
-        mem = jax.jit(fn).lower(*args).compile().memory_analysis()
-        return int(getattr(mem, "temp_size_in_bytes"))
-    except Exception:
-        return None
 
 
 def main(argv=None):
@@ -122,8 +113,8 @@ def main(argv=None):
 
             t_psum = time_call(f_psum, grids, reps=args.reps)
             t_slab = time_call(f_slab, grids, reps=args.reps)
-            peak_psum = _peak_temp_bytes(f_psum, grids)
-            peak_slab = _peak_temp_bytes(f_slab, grids)
+            peak_psum = peak_temp_bytes(f_psum, grids)
+            peak_slab = peak_temp_bytes(f_slab, grids)
 
             print(f"{f'd={dim} n={level}':>8} {n:>6} "
                   f"{plan.fine_size * itemsize / 2**20:>8.2f} "

@@ -42,7 +42,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.executor import (ExecutorPlan, build_plan,
+from repro.core.executor import (ExecutorPlan, MergeConfig, build_plan,
                                  ct_transform_with_plan, extend_plan)
 from repro.core.levels import (GeneralScheme, LevelVector,
                                forward_neighbors, is_admissible, num_points,
@@ -68,6 +68,10 @@ class AdaptiveConfig:
     indicator: str = "max"          # 'max' | 'l1' | 'mean' over |surplus|
     dtype_bytes: int = 8
     interpret: Optional[bool] = None  # forwarded to the Pallas kernels
+    #: bucket-merging cost model (repro.core.executor.MergeConfig) for the
+    #: executor plan; extend_plan re-applies it on every expansion, so the
+    #: merge decision survives the whole refinement trajectory
+    merge: Optional["MergeConfig"] = None
 
 
 @dataclass(frozen=True)
@@ -116,7 +120,7 @@ class AdaptiveDriver:
         self.solver = solver
         self.scheme = initial
         self._nodal: Dict[LevelVector, jnp.ndarray] = {}
-        self.plan = build_plan(self.scheme)
+        self.plan = build_plan(self.scheme, merge=self.config.merge)
         self.history: List[RefineRecord] = []
         self.stop_reason: Optional[str] = None
         self._solve_missing()

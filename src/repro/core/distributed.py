@@ -28,7 +28,12 @@ Parallelism layers (DESIGN.md Sect. 4):
       sharded consumers).  Per-device embedded memory is
       ``ceil(fine_shape[0] / n) * row_size`` — memory scales with device
       count; only the compact surpluses (the scheme's point count) are
-      replicated.
+      replicated.  When every bucket runs the Pallas path,
+      ``gather_slab_scatter_fused`` consumes the executor's fused
+      scatter-add epilogue instead: only the TAIL-transformed stacks are
+      replicated and each device's axis-0 transform + coefficient
+      weighting + scatter-add run in one kernel against its slab-LOCAL
+      index map (the finished compact surpluses never land in HBM).
 
 Slab partitioning invariants (``repro.core.executor.ShardedPlan``):
 
@@ -63,11 +68,12 @@ from repro.compat import shard_map
 from repro.core.levels import (LevelVector, SchemeLike, fine_levels,
                                num_points)
 from repro.kernels.hierarchize import _padded_operator  # shared constant builder
+from repro.kernels.hierarchize import hier_axis0_scatter_batched_pallas
 from repro.kernels.ops import hierarchize as hier_local
 
 __all__ = ["plan_grid_groups", "hierarchize_sharded", "gather_full_psum",
-           "gather_slab_scatter", "comm_phase_sharded", "ct_transform_psum",
-           "ct_transform_sharded"]
+           "gather_slab_scatter", "gather_slab_scatter_fused",
+           "comm_phase_sharded", "ct_transform_psum", "ct_transform_sharded"]
 
 
 def plan_grid_groups(scheme: SchemeLike, num_groups: int
@@ -156,6 +162,36 @@ def gather_full_psum(embedded: jnp.ndarray, coeff: jnp.ndarray, mesh: Mesh,
     return fn(embedded, coeff)
 
 
+def _check_slab_gather_args(splan, mesh: Mesh, axis_name: str,
+                            n_inputs: int, what: str) -> None:
+    """Shared argument validation of the two slab-sharded gathers."""
+    nshards = mesh.shape[axis_name]
+    if nshards != splan.n_slabs:
+        raise ValueError(
+            f"plan is sharded for {splan.n_slabs} slab(s) but mesh axis "
+            f"{axis_name!r} has {nshards} device(s); rebuild with "
+            f"shard_plan(plan, {nshards})")
+    if n_inputs != len(splan.plan.buckets):
+        raise ValueError(
+            f"got {n_inputs} {what} array(s) for "
+            f"{len(splan.plan.buckets)} bucket(s)")
+
+
+def _finish_slab_gather(out, splan, mesh: Mesh, axis_name: str,
+                        gather: bool) -> jnp.ndarray:
+    """Shared result handling: reshape the replicated gather, or hand the
+    slab-padded buffer back under its NamedSharding."""
+    if gather:
+        return out[:splan.fine_size].reshape(splan.plan.fine_shape)
+    padded = out.reshape((splan.n_slabs * splan.slab_rows,)
+                         + splan.plan.fine_shape[1:])
+    sharding = NamedSharding(
+        mesh, P(axis_name, *([None] * (len(splan.plan.fine_shape) - 1))))
+    if isinstance(padded, jax.core.Tracer):
+        return jax.lax.with_sharding_constraint(padded, sharding)
+    return jax.device_put(padded, sharding)
+
+
 def gather_slab_scatter(alphas, sharded_plan, mesh: Mesh, axis_name: str, *,
                         gather: bool = True) -> jnp.ndarray:
     """Slab-sharded gather step: per-bucket COMPACT surpluses ``alphas``
@@ -174,16 +210,7 @@ def gather_slab_scatter(alphas, sharded_plan, mesh: Mesh, axis_name: str, *,
     consumers.
     """
     splan = sharded_plan
-    nshards = mesh.shape[axis_name]
-    if nshards != splan.n_slabs:
-        raise ValueError(
-            f"plan is sharded for {splan.n_slabs} slab(s) but mesh axis "
-            f"{axis_name!r} has {nshards} device(s); rebuild with "
-            f"shard_plan(plan, {nshards})")
-    if len(alphas) != len(splan.plan.buckets):
-        raise ValueError(
-            f"got {len(alphas)} surplus array(s) for "
-            f"{len(splan.plan.buckets)} bucket(s)")
+    _check_slab_gather_args(splan, mesh, axis_name, len(alphas), "surplus")
     nb = len(alphas)
     dtype = jnp.result_type(*(a.dtype for a in alphas))
     slab_size = splan.slab_size
@@ -209,33 +236,89 @@ def gather_slab_scatter(alphas, sharded_plan, mesh: Mesh, axis_name: str, *,
     fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs, check_vma=False)
     out = fn(*idx, *alphas, *coeffs)
-    if gather:
-        return out[:splan.fine_size].reshape(splan.plan.fine_shape)
-    padded = out.reshape((splan.n_slabs * splan.slab_rows,)
-                         + splan.plan.fine_shape[1:])
-    sharding = NamedSharding(
-        mesh, P(axis_name, *([None] * (len(splan.plan.fine_shape) - 1))))
-    if isinstance(padded, jax.core.Tracer):
-        return jax.lax.with_sharding_constraint(padded, sharding)
-    return jax.device_put(padded, sharding)
+    return _finish_slab_gather(out, splan, mesh, axis_name, gather)
+
+
+def gather_slab_scatter_fused(tails, sharded_plan, mesh: Mesh,
+                              axis_name: str, *, gather: bool = True,
+                              interpret: bool | None = None) -> jnp.ndarray:
+    """Slab-sharded gather with the FUSED scatter-add epilogue: consumes
+    per-bucket TAIL-transformed stacks (``repro.core.executor.
+    bucket_tail_surpluses``, axis 0 still nodal, replicated) and runs the
+    axis-0 transform + coefficient weighting + scatter-add in ONE kernel
+    per bucket per device, writing straight into the device's
+    ``slab_size + 1`` buffer through its slab-LOCAL index map — the same
+    epilogue as the single-device fused gather, just pointed at per-slab
+    maps; the compact surplus stack never lands in HBM here either.
+
+    Per fine slot the adds happen in member order starting from the zero
+    slab buffer (the same left fold as ``gather_slab_scatter``), so the
+    result is BIT-identical to the unfused sharded gather and to the
+    single-device ``ct_transform``.  Same ``gather`` semantics as
+    ``gather_slab_scatter``.
+    """
+    splan = sharded_plan
+    _check_slab_gather_args(splan, mesh, axis_name, len(tails),
+                            "tail-surplus")
+    nb = len(tails)
+    dtype = jnp.result_type(*(t.dtype for t in tails))
+    slab_size = splan.slab_size
+    # slab-local maps in the (G, N0, B) layout of the tail stacks
+    idx = [jnp.asarray(sb.index).reshape((splan.n_slabs,) + t.shape)
+           for sb, t in zip(splan.slab_buckets, tails)]
+    coeffs = [jnp.asarray(b.coeffs, dtype) for b in splan.plan.buckets]
+    levels0 = [tuple(lv[0] for lv in b.levels) for b in splan.plan.buckets]
+
+    def local_fn(*args):
+        idx_loc = args[:nb]              # (1, G, N0, B) — this device's slab
+        tail = args[nb:2 * nb]           # (G, N0, B) replicated tail stacks
+        cs = args[2 * nb:]               # (G,) replicated coefficients
+        buf = jnp.zeros(slab_size + 1, dtype)       # +1: dump slot
+        for i in range(nb):
+            buf = hier_axis0_scatter_batched_pallas(
+                tail[i], levels0[i], cs[i], idx_loc[i][0], buf,
+                interpret=interpret)
+        buf = buf[:slab_size]
+        if gather:
+            return jax.lax.all_gather(buf, axis_name, tiled=True)
+        return buf[None]
+
+    rep3, rep1 = P(None, None, None), P(None)
+    in_specs = tuple([P(axis_name, None, None, None)] * nb
+                     + [rep3] * nb + [rep1] * nb)
+    out_specs = P(None) if gather else P(axis_name, None)
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    out = fn(*idx, *tails, *coeffs)
+    return _finish_slab_gather(out, splan, mesh, axis_name, gather)
 
 
 def ct_transform_sharded(nodal_grids, scheme: SchemeLike, mesh: Mesh,
                          axis_name: str, *,
                          full_levels: Sequence[int] | None = None,
                          sharded_plan=None, gather: bool = True,
+                         fused: bool | None = None,
                          interpret: bool | None = None) -> jnp.ndarray:
-    """Memory-scaling distributed gather: bucket-batched hierarchization
-    to COMPACT surpluses, then the slab-sharded scatter-add — the
-    multi-device ``ct_transform`` whose per-device embedded memory is
-    ``fine_size / n_groups``, not ``G * fine_size``.
+    """Memory-scaling distributed gather: bucket-batched hierarchization,
+    then the slab-sharded scatter-add — the multi-device ``ct_transform``
+    whose per-device embedded memory is ``fine_size / n_groups``, not
+    ``G * fine_size``.
 
     Pass ``sharded_plan`` (``repro.core.executor.shard_plan``) to reuse a
     live plan (the adaptive / fault path); otherwise one is built for
     ``mesh.shape[axis_name]`` slabs.  ``gather=False`` returns the
     slab-sharded fine buffer (see ``gather_slab_scatter``).
+
+    ``fused=None`` picks the fused scatter-add epilogue automatically
+    when EVERY bucket runs the Pallas path and the per-device slab buffer
+    fits the epilogue's VMEM budget (``repro.core.executor.
+    plan_fused_ok``); then only the TAIL-transformed stacks are
+    replicated and the axis-0 transform + weighted scatter run fused on
+    each device.  Fused and unfused sharded gathers are bit-identical.
     """
-    from repro.core.executor import build_plan, bucket_surpluses, shard_plan
+    from repro.core.executor import (build_plan, bucket_surpluses,
+                                     bucket_tail_surpluses, plan_fused_ok,
+                                     shard_plan)
     if sharded_plan is None:
         sharded_plan = shard_plan(build_plan(scheme, full_levels),
                                   mesh.shape[axis_name])
@@ -244,6 +327,27 @@ def ct_transform_sharded(nodal_grids, scheme: SchemeLike, mesh: Mesh,
         raise ValueError(
             f"sharded_plan embeds into {sharded_plan.full_levels}, caller "
             f"asked for {tuple(int(l) for l in full_levels)}")
+    if fused is None:
+        dtypes = [jnp.asarray(nodal_grids[ell]).dtype
+                  for b in sharded_plan.buckets for ell in b.ells
+                  if ell in nodal_grids]
+        fused = plan_fused_ok(sharded_plan,
+                              jnp.result_type(*dtypes) if dtypes
+                              else jnp.float64)
+    elif fused:
+        # an explicit fused=True still cannot run jnp-path buckets
+        # through the tail kernel (their tile-pad blowup is the reason
+        # the auto rule excludes them) — same fallback as the
+        # single-device _fuse_bucket, just all-or-nothing
+        from repro.kernels.hierarchize import batched_method
+        fused = all(batched_method(b.shape) == "pallas"
+                    for b in sharded_plan.buckets)
+    if fused:
+        tails = bucket_tail_surpluses(nodal_grids, sharded_plan.plan,
+                                      interpret=interpret)
+        return gather_slab_scatter_fused(tails, sharded_plan, mesh,
+                                         axis_name, gather=gather,
+                                         interpret=interpret)
     alphas = bucket_surpluses(nodal_grids, sharded_plan.plan,
                               interpret=interpret)
     return gather_slab_scatter(alphas, sharded_plan, mesh, axis_name,

@@ -12,25 +12,45 @@ function:
      transposed to descending-level axis order without changing the
      transform; all axis-permutations of one level multiset therefore
      share a bucket (e.g. d=10, |ell|=12 has 55 grids but 2 buckets).
-     With this exact-canonical keying every member matches the bucket
-     target, so no intra-bucket padding occurs in practice; the
-     machinery for members BELOW the target (zero-padding to the common
-     ``2**l - 1`` extent, padded ``H (+) I`` operators, dump-slot index
-     routing) is in place and kernel-tested for the planned cost-driven
-     bucket merging (ROADMAP "Bucket merging").
 
-  2. **Batched hierarchization** — each bucket runs the fused Pallas
+  2. **Cost-model-driven bucket merging** (opt-in via
+     ``build_plan(..., merge=MergeConfig(...))``) — near-shape buckets
+     are merged into padded SUPER-buckets when a static cost model says
+     the saved kernel-launch overhead outweighs the pad-waste HBM bytes.
+     Members below the merged target use the kernel machinery built for
+     exactly this: zero-padding to the common ``2**l - 1`` extents,
+     padded ``H (+) I`` operators (identity on the padding, so padded
+     members transform exactly as their unpadded selves), and index-map
+     routing of every pad position to a dump slot.  The planner picks
+     the OPTIMAL CONTIGUOUS partition (interval DP) of the descending-
+     sorted shape sequence; contiguity preserves the global member
+     order, which is what keeps merged results bit-identical to the
+     unmerged plan.  The merge decision is part of the plan (and of the
+     ``build_plan`` cache key) and survives ``extend_plan`` /
+     ``update_plan_coefficients`` / ``shard_plan``.
+
+  3. **Batched hierarchization** — each bucket runs the fused Pallas
      kernels ONCE with the member index as the leading Pallas grid
      dimension (``repro.kernels.hierarchize.hierarchize_batched``):
-     kernel launches scale with the number of buckets, not grids.
+     kernel launches scale with the number of (super-)buckets, not
+     grids.
 
-  3. **Static index plan** — the per-subspace gather/scatter dict is
-     replaced by a per-bucket ``(G, P)`` int32 index map into the
-     flattened common fine grid, precomputed from the scheme (embed
-     offsets ``(j+1) * 2**(L-l) - 1`` and row strides, pad positions
-     pointing at a dump slot).  The gather step is then one jitted
-     coefficient-weighted ``scatter-add`` per bucket; the scatter step is
-     the same map read in reverse (``take``).
+  4. **Static index plan + fused scatter-add epilogue** — the
+     per-subspace gather/scatter dict is replaced by a per-bucket
+     ``(G, P)`` int32 index map into the flattened common fine grid,
+     precomputed from the scheme (embed offsets ``(j+1) * 2**(L-l) - 1``
+     and row strides, pad positions pointing at a dump slot).  On the
+     Pallas path the gather's coefficient weighting and scatter-add are
+     FUSED into the axis-0 kernel's tail
+     (``hier_axis0_scatter_batched_pallas``): surpluses are written
+     through the index map while the block is VMEM-resident, so the
+     ``(G, P)`` compact surplus stack never round-trips through HBM —
+     the extra round trip the paper's roofline says dominates.  The
+     unfused scatter-add (one jitted ``.at[idx].add`` per bucket)
+     remains the fallback for jnp-path buckets and fine grids beyond the
+     VMEM budget; both orders are the same per-slot left fold, so fused
+     and unfused results are bit-identical.  The scatter step is the
+     same map read in reverse (``take``).
 
 ``ct_transform`` / ``ct_scatter`` are end-to-end jittable (scheme static),
 reused by the distributed psum path (``repro.core.distributed.
@@ -75,14 +95,17 @@ import numpy as np
 
 from repro.core.levels import (LevelVector, SchemeLike, canonical_levels,
                                fine_levels, grid_shape)
-from repro.kernels.hierarchize import (dehierarchize_batched,
-                                       hierarchize_batched)
+from repro.kernels.hierarchize import (batched_method, dehierarchize_batched,
+                                       hier_axis0_scatter_batched_pallas,
+                                       hier_tail_batched_pallas,
+                                       hierarchize_batched, tile_volume)
 
 __all__ = ["ExecutorPlan", "Bucket", "ShardedPlan", "SlabBucket",
-           "build_plan", "shard_plan", "extend_plan",
+           "MergeConfig", "build_plan", "shard_plan", "extend_plan",
            "update_plan_coefficients", "ct_transform", "ct_scatter",
            "ct_embedded", "ct_transform_with_plan", "ct_scatter_with_plan",
-           "ct_embedded_with_plan", "bucket_surpluses"]
+           "ct_embedded_with_plan", "bucket_surpluses",
+           "bucket_tail_surpluses", "plan_fused_ok", "plan_launch_stats"]
 
 
 @dataclass(frozen=True)
@@ -103,12 +126,19 @@ class Bucket:
 
 @dataclass(frozen=True)
 class ExecutorPlan:
-    """Precomputed static execution plan for one scheme's comm phase."""
+    """Precomputed static execution plan for one scheme's comm phase.
+
+    ``merge`` records the bucket-merging cost model the plan was built
+    with (``None`` = one bucket per canonical shape); incremental rebuilds
+    (``extend_plan`` / ``update_plan_coefficients``) re-apply it, so a
+    merged plan stays merged through adaptive refinement and fault
+    recombination."""
 
     dim: int
     full_levels: LevelVector
     fine_shape: Tuple[int, ...]
     buckets: Tuple[Bucket, ...]
+    merge: Optional[MergeConfig] = None
 
     @property
     def fine_size(self) -> int:
@@ -193,6 +223,10 @@ class ShardedPlan:
         return self.plan.buckets
 
     @property
+    def merge(self) -> Optional["MergeConfig"]:
+        return self.plan.merge
+
+    @property
     def num_grids(self) -> int:
         return self.plan.num_grids
 
@@ -250,6 +284,103 @@ def shard_plan(plan: ExecutorPlan, n_slabs: int,
                        slab_buckets=slab_buckets)
 
 
+@dataclass(frozen=True)
+class MergeConfig:
+    """Static cost model for merging near-shape buckets into padded
+    super-buckets.
+
+    Hierarchization is memory-bound (the paper's central claim), so both
+    sides of the trade are priced in HBM bytes:
+
+    * each bucket costs a fixed dispatch overhead per kernel launch —
+      ``launch_cost_bytes`` is one launch expressed as the HBM bytes the
+      bus could have moved instead (TPU dispatch ~1-2us at ~800 GB/s is
+      ~1-2 MiB; the default is deliberately on the low side of that);
+    * merging pads every member to the super-bucket target, so each
+      transform moves ``round_trips`` copies of the PADDED member volume
+      through HBM (2 batched launches x read+write; Pallas buckets are
+      priced at the sublane/lane TILE volume they actually transfer,
+      jnp-path buckets at the raw volume).
+
+    ``max_members`` optionally caps super-bucket size (bounds the padded
+    assembly buffer).  Hashable, so the merge decision can live in the
+    ``build_plan`` lru_cache key and in the plan itself.
+    """
+
+    launch_cost_bytes: int = 1 << 20
+    round_trips: int = 4
+    dtype_bytes: int = 8
+    max_members: Optional[int] = None
+
+
+def _bucket_cost(target: LevelVector, n_members: int, merge: MergeConfig,
+                 out_elems: int) -> float:
+    """Modelled HBM cost of one bucket: launch overhead + member traffic.
+
+    Mirrors ``plan_launch_stats`` under the auto-fuse default: a Pallas
+    bucket within the fused VMEM budget (``out_elems`` fine-buffer slots)
+    dispatches tail + axis-0 (one launch when 1-D) with the scatter
+    folded into the axis-0 tail; an UNFUSED bucket (jnp path, or fine
+    buffer over budget) additionally pays its standalone XLA scatter
+    dispatch and the compact-stack write+read round trip."""
+    shape = grid_shape(target)
+    p = int(np.prod(shape, dtype=np.int64))
+    fused = False
+    if batched_method(shape) == "pallas":
+        launches, vol = (1 if len(shape) == 1 else 2), tile_volume(shape)
+        fused = out_elems * merge.dtype_bytes <= _FUSED_OUT_BUDGET_BYTES
+    else:
+        launches, vol = len(shape), p
+    cost = (launches * merge.launch_cost_bytes
+            + merge.round_trips * n_members * vol * merge.dtype_bytes)
+    if not fused:
+        cost += (merge.launch_cost_bytes
+                 + 2 * n_members * p * merge.dtype_bytes)
+    return cost
+
+
+def _merge_partition(keys: Sequence[LevelVector],
+                     sizes: Sequence[int], merge: MergeConfig,
+                     out_elems: int) -> Tuple[Tuple[int, int], ...]:
+    """Optimal contiguous partition of the descending-sorted canonical
+    keys into super-buckets, as half-open index segments ``(i, j)``.
+
+    Contiguity is load-bearing, not a shortcut: scatter-adds run bucket
+    by bucket in sorted order, so only merges of ADJACENT runs keep the
+    global member order — and with it bit-identical results — intact.
+    Adjacent keys are also the near-shape candidates (sorted neighbors
+    differ in few axis levels).  The interval DP is exact under the cost
+    model and O(B^2) in the bucket count.
+    """
+    n = len(keys)
+    d = len(keys[0]) if n else 0
+    # componentwise-max targets and member counts of every prefix i..j
+    best = [0.0] * (n + 1)
+    cut = [0] * (n + 1)
+    for j in range(1, n + 1):
+        best[j] = float("inf")
+        target = list(keys[j - 1])
+        members = 0
+        for i in range(j - 1, -1, -1):
+            for k in range(d):
+                if keys[i][k] > target[k]:
+                    target[k] = keys[i][k]
+            members += sizes[i]
+            if merge.max_members is not None and members > merge.max_members \
+                    and j - i > 1:
+                break
+            c = best[i] + _bucket_cost(tuple(target), members, merge,
+                                       out_elems)
+            if c < best[j]:
+                best[j], cut[j] = c, i
+    segments = []
+    j = n
+    while j > 0:
+        segments.append((cut[j], j))
+        j = cut[j]
+    return tuple(reversed(segments))
+
+
 def _member_index_map(ell: LevelVector, perm: Tuple[int, ...],
                       target: LevelVector, full_levels: LevelVector,
                       fine_strides: np.ndarray, dump: int) -> np.ndarray:
@@ -293,19 +424,37 @@ def _group_members(scheme: SchemeLike) -> Dict[LevelVector, list]:
     return groups
 
 
+def _segment_member_lists(groups: Dict[LevelVector, list],
+                          merge: Optional[MergeConfig],
+                          fine_size: int) -> list:
+    """Deterministic bucket member lists: canonical groups in descending
+    key order, optionally merged into contiguous super-bucket segments
+    (the cost model needs ``fine_size`` to know whether buckets will take
+    the fused epilogue).  Single construction site for ``build_plan`` and
+    ``extend_plan`` — the same groups, ``merge`` and fine grid always
+    give the same partition and the same member order, which is what
+    makes incremental rebuilds bit-identical to from-scratch builds."""
+    keys = sorted(groups, reverse=True)
+    if merge is None:
+        return [list(groups[k]) for k in keys]
+    segments = _merge_partition(keys, [len(groups[k]) for k in keys], merge,
+                                fine_size + 1)
+    return [[m for k in keys[i:j] for m in groups[k]]
+            for i, j in segments]
+
+
 def _make_bucket(members: list, full_levels: LevelVector,
                  fine_strides: np.ndarray, fine_size: int,
-                 old_bucket: Optional[Bucket] = None) -> Bucket:
-    """Build one bucket from its member records; index-map rows of members
-    already in ``old_bucket`` (an incremental rebuild's prior plan) are
-    reused instead of recomputed — valid only while the target shape is
-    unchanged.  Single construction site, so ``build_plan`` and
-    ``extend_plan`` cannot drift apart."""
+                 old_rows: Optional[Dict[LevelVector, np.ndarray]] = None
+                 ) -> Bucket:
+    """Build one bucket from its member records; ``old_rows`` maps member
+    level vectors to index-map rows an incremental rebuild may reuse
+    instead of recomputing — the caller guarantees they were built for
+    THIS bucket's target shape.  Single construction site, so
+    ``build_plan`` and ``extend_plan`` cannot drift apart."""
     target = tuple(max(lv[k] for _, _, lv, _ in members)
                    for k in range(len(full_levels)))
-    old_rows = (dict(zip(old_bucket.ells, old_bucket.index))
-                if old_bucket is not None and old_bucket.target == target
-                else {})
+    old_rows = old_rows or {}
     index = np.stack([
         old_rows[ell] if ell in old_rows else
         _member_index_map(ell, perm, target, full_levels, fine_strides,
@@ -321,45 +470,54 @@ def _make_bucket(members: list, full_levels: LevelVector,
 
 
 def build_plan(scheme: SchemeLike,
-               full_levels: Optional[Sequence[int]] = None) -> ExecutorPlan:
-    """Bucket the scheme's grids and precompute the embed index plan.
+               full_levels: Optional[Sequence[int]] = None, *,
+               merge: Optional[MergeConfig] = None) -> ExecutorPlan:
+    """Bucket (and optionally merge-plan) the scheme's grids and
+    precompute the embed index plan.
 
     ``full_levels`` is normalized (``None`` -> ``fine_levels(scheme)``,
     sequences -> int tuple) BEFORE the cache key is formed, so equivalent
-    calls share one lru_cache entry.
+    calls share one lru_cache entry; ``merge`` (the bucket-merging cost
+    model, hashable) is part of the key — merged and unmerged plans of
+    one scheme coexist in the cache.
     """
     if full_levels is None:
         full_levels = fine_levels(scheme)
-    return _build_plan_cached(scheme, tuple(int(l) for l in full_levels))
+    return _build_plan_cached(scheme, tuple(int(l) for l in full_levels),
+                              merge)
 
 
 @lru_cache(maxsize=64)
-def _build_plan_cached(scheme: SchemeLike,
-                       full_levels: LevelVector) -> ExecutorPlan:
+def _build_plan_cached(scheme: SchemeLike, full_levels: LevelVector,
+                       merge: Optional[MergeConfig]) -> ExecutorPlan:
     fine_shape = grid_shape(full_levels)
     fine_size = int(np.prod(fine_shape))
     fine_strides = _fine_strides(fine_shape)
 
-    groups = _group_members(scheme)
-    buckets = tuple(_make_bucket(groups[key], full_levels, fine_strides,
+    member_lists = _segment_member_lists(_group_members(scheme), merge,
+                                         fine_size)
+    buckets = tuple(_make_bucket(members, full_levels, fine_strides,
                                  fine_size)
-                    for key in sorted(groups, reverse=True))
+                    for members in member_lists)
     return ExecutorPlan(dim=scheme.dim, full_levels=full_levels,
-                        fine_shape=fine_shape, buckets=buckets)
+                        fine_shape=fine_shape, buckets=buckets, merge=merge)
 
 
 def extend_plan(plan: ExecutorPlan, scheme: SchemeLike,
                 full_levels: Optional[Sequence[int]] = None) -> ExecutorPlan:
     """Incremental plan rebuild after the scheme's index set changed.
 
-    Produces exactly ``build_plan(scheme, full_levels)`` but reuses the old
-    plan wherever possible: buckets with an unchanged member list AND
-    unchanged coefficients are returned by object identity; buckets whose
-    members are unchanged but whose inclusion-exclusion coefficients moved
-    keep their ``index`` array by identity; buckets gaining (or losing)
-    members recompute index-map rows only for members the old plan never
-    held.  Falls back to a full (cached) ``build_plan`` when the fine grid
-    itself changed, since then every embed index is stale.
+    Produces exactly ``build_plan(scheme, full_levels, merge=plan.merge)``
+    but reuses the old plan wherever possible: buckets with an unchanged
+    member list AND unchanged coefficients are returned by object identity;
+    buckets whose members are unchanged but whose inclusion-exclusion
+    coefficients moved keep their ``index`` array by identity; buckets
+    gaining (or losing) members recompute index-map rows only for members
+    the old plan never held.  The merge partition is re-planned from the
+    new scheme's groups (the cost model is deterministic, so unchanged
+    groups re-partition identically).  Falls back to a full (cached)
+    ``build_plan`` when the fine grid itself changed, since then every
+    embed index is stale.
     """
     if isinstance(plan, ShardedPlan):
         return shard_plan(extend_plan(plan.plan, scheme, full_levels),
@@ -368,30 +526,38 @@ def extend_plan(plan: ExecutorPlan, scheme: SchemeLike,
         full_levels = fine_levels(scheme)
     full_levels = tuple(int(l) for l in full_levels)
     if full_levels != plan.full_levels:
-        return build_plan(scheme, full_levels)    # full rebuild
-
+        return build_plan(scheme, full_levels,
+                          merge=plan.merge)       # full rebuild
     fine_shape = plan.fine_shape
     fine_size = plan.fine_size
     fine_strides = _fine_strides(fine_shape)
-    old_buckets = {b.target: b for b in plan.buckets}
+    # identity reuse is keyed by the member tuple (unique — buckets
+    # partition the grids; a merged plan may hold several buckets with
+    # the SAME componentwise-max target, so target is not a valid key)
+    old_by_ells = {b.ells: b for b in plan.buckets}
 
     buckets = []
-    groups = _group_members(scheme)
-    for key in sorted(groups, reverse=True):
-        members = groups[key]
+    for members in _segment_member_lists(_group_members(scheme), plan.merge,
+                                         fine_size):
+        target = tuple(max(lv[k] for _, _, lv, _ in members)
+                       for k in range(len(full_levels)))
         ells = tuple(m[0] for m in members)
         coeffs = np.asarray([float(m[3]) for m in members])
-        ob = old_buckets.get(key)
-        if ob is not None and ob.ells == ells:
+        ob = old_by_ells.get(ells)
+        if ob is not None and ob.target == target:
             if np.array_equal(ob.coeffs, coeffs):
                 buckets.append(ob)                # untouched: same object
             else:
                 buckets.append(dataclasses.replace(ob, coeffs=coeffs))
             continue
+        # row donors: any old bucket built for the same target shape
+        old_rows = {ell: row for b in plan.buckets if b.target == target
+                    for ell, row in zip(b.ells, b.index)}
         buckets.append(_make_bucket(members, full_levels, fine_strides,
-                                    fine_size, old_bucket=ob))
+                                    fine_size, old_rows=old_rows))
     return ExecutorPlan(dim=scheme.dim, full_levels=full_levels,
-                        fine_shape=fine_shape, buckets=tuple(buckets))
+                        fine_shape=fine_shape, buckets=tuple(buckets),
+                        merge=plan.merge)
 
 
 def update_plan_coefficients(plan: ExecutorPlan,
@@ -462,12 +628,17 @@ def _assemble_bucket(nodal_grids: Mapping[LevelVector, jnp.ndarray],
 def ct_transform(nodal_grids: Mapping[LevelVector, jnp.ndarray],
                  scheme: SchemeLike, *,
                  full_levels: Optional[Sequence[int]] = None,
-                 interpret: Optional[bool] = None) -> jnp.ndarray:
+                 interpret: Optional[bool] = None,
+                 merge: Optional[MergeConfig] = None) -> jnp.ndarray:
     """Gather phase, batched: nodal component grids -> sparse-grid surplus
     on the common fine grid.  Equals hierarchize-per-grid + ``combine_full``
-    to machine precision, in one jittable computation.
+    to machine precision, in one jittable computation.  ``merge`` opts
+    into cost-model-driven bucket merging (bit-identical result, fewer
+    kernel launches).
     """
-    return ct_transform_with_plan(nodal_grids, build_plan(scheme, full_levels),
+    return ct_transform_with_plan(nodal_grids,
+                                  build_plan(scheme, full_levels,
+                                             merge=merge),
                                   interpret=interpret)
 
 
@@ -490,34 +661,126 @@ def bucket_surpluses(nodal_grids: Mapping[LevelVector, jnp.ndarray],
     return tuple(out)
 
 
+def _tail_transform(x: jnp.ndarray, bucket: Bucket,
+                    interpret: Optional[bool]) -> jnp.ndarray:
+    """Tail phase of the batched Pallas path: axes 1..d-1 transformed,
+    axis 0 still nodal, trailing axes flattened to ``(G, N0, B)`` — the
+    fused scatter epilogue's input layout."""
+    g = x.shape[0]
+    if x.ndim == 2:                       # 1-D bucket: no tail axes
+        return x[:, :, None]
+    y = hier_tail_batched_pallas(x, bucket.levels, interpret=interpret)
+    return y.reshape(g, y.shape[1], -1)
+
+
+def bucket_tail_surpluses(nodal_grids: Mapping[LevelVector, jnp.ndarray],
+                          plan: ExecutorPlan, *,
+                          interpret: Optional[bool] = None
+                          ) -> Tuple[jnp.ndarray, ...]:
+    """Per-bucket TAIL-transformed stacks ``[(G_b, N0, B_b), ...]`` (axis 0
+    untransformed) — what the fused scatter-add epilogue consumes: the
+    axis-0 transform happens inside the epilogue kernel, so the finished
+    compact surpluses never land in HBM.  Only meaningful for buckets on
+    the Pallas path (``plan_fused_ok``)."""
+    if isinstance(plan, ShardedPlan):
+        plan = plan.plan
+    _check_nodal_grids(nodal_grids, plan)
+    return tuple(_tail_transform(_assemble_bucket(nodal_grids, b), b,
+                                 interpret)
+                 for b in plan.buckets)
+
+
+#: Fine-buffer byte budget for the fused epilogue's VMEM-resident output
+#: block (half of a v5e core's 16 MiB VMEM markdown, leaving room for the
+#: member block + operator).  Beyond it the executor falls back to the
+#: unfused scatter-add.
+_FUSED_OUT_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _fuse_bucket(bucket: Bucket, out_elems: int, itemsize: int,
+                 fused: Optional[bool]) -> bool:
+    """Per-bucket fused-epilogue decision: ``None`` = auto (Pallas-path
+    bucket AND fine buffer within the VMEM budget), ``True`` forces the
+    epilogue wherever the kernel supports it (jnp-path buckets always
+    fall back), ``False`` disables."""
+    if fused is False or batched_method(bucket.shape) != "pallas":
+        return False
+    if fused is None and out_elems * itemsize > _FUSED_OUT_BUDGET_BYTES:
+        return False
+    return True
+
+
+def plan_fused_ok(plan: ExecutorPlan, dtype=jnp.float64,
+                  out_elems: Optional[int] = None) -> bool:
+    """True iff EVERY bucket of the plan takes the fused scatter-add
+    epilogue under the auto rule (the all-or-nothing gate of the sharded
+    gather, where the per-device scatter target has ``out_elems`` slots —
+    defaults to the full fine buffer)."""
+    if isinstance(plan, ShardedPlan):
+        if out_elems is None:
+            out_elems = plan.slab_size + 1
+        plan = plan.plan
+    if out_elems is None:
+        out_elems = plan.fine_size + 1
+    itemsize = jnp.dtype(dtype).itemsize
+    return all(_fuse_bucket(b, out_elems, itemsize, None)
+               for b in plan.buckets)
+
+
 def ct_transform_with_plan(nodal_grids: Mapping[LevelVector, jnp.ndarray],
                            plan: ExecutorPlan, *,
-                           interpret: Optional[bool] = None) -> jnp.ndarray:
+                           interpret: Optional[bool] = None,
+                           fused: Optional[bool] = None) -> jnp.ndarray:
     """``ct_transform`` against an explicit (possibly incrementally rebuilt)
     plan — the adaptive-refinement / fault-recovery entry point.  A
     ``ShardedPlan`` is accepted and runs through its base plan (the
     single-device fallback; the multi-device execution lives in
-    ``repro.core.distributed.ct_transform_sharded``)."""
+    ``repro.core.distributed.ct_transform_sharded``).
+
+    Pallas-path buckets run the FUSED scatter-add epilogue by default
+    (``fused=None``; see ``_fuse_bucket`` for the auto rule): the axis-0
+    kernel weights each member by its combination coefficient and writes
+    through the static index map while the block is VMEM-resident, so the
+    ``(G, P)`` compact stack never round-trips through HBM.  Fused and
+    unfused accumulate per fine slot in the same member order (a left
+    fold), so the results are bit-identical."""
     if isinstance(plan, ShardedPlan):
         plan = plan.plan
-    alphas = bucket_surpluses(nodal_grids, plan, interpret=interpret)
-    dtype = jnp.result_type(*(a.dtype for a in alphas))
+    _check_nodal_grids(nodal_grids, plan)
+    dtype = jnp.result_type(*(jnp.asarray(nodal_grids[ell]).dtype
+                              for b in plan.buckets for ell in b.ells))
+    itemsize = jnp.dtype(dtype).itemsize
     full = jnp.zeros(plan.fine_size + 1, dtype)   # +1: pad dump slot
-    for bucket, alpha in zip(plan.buckets, alphas):
-        contrib = jnp.asarray(bucket.coeffs, dtype)[:, None] * alpha
-        full = full.at[jnp.asarray(bucket.index)].add(contrib)
+    for bucket in plan.buckets:
+        g = len(bucket.ells)
+        x = _assemble_bucket(nodal_grids, bucket)
+        if _fuse_bucket(bucket, plan.fine_size + 1, itemsize, fused):
+            y = _tail_transform(x, bucket, interpret)
+            idx = bucket.index.reshape((g,) + y.shape[1:])
+            full = hier_axis0_scatter_batched_pallas(
+                y, [lv[0] for lv in bucket.levels],
+                jnp.asarray(bucket.coeffs, dtype), idx, full,
+                interpret=interpret)
+        else:
+            alpha = hierarchize_batched(x, bucket.levels,
+                                        interpret=interpret)
+            contrib = (jnp.asarray(bucket.coeffs, dtype)[:, None]
+                       * alpha.reshape(g, -1))
+            full = full.at[jnp.asarray(bucket.index)].add(contrib)
     return full[:-1].reshape(plan.fine_shape)
 
 
 def ct_scatter(full: jnp.ndarray, scheme: SchemeLike, *,
                full_levels: Optional[Sequence[int]] = None,
-               interpret: Optional[bool] = None
+               interpret: Optional[bool] = None,
+               merge: Optional[MergeConfig] = None
                ) -> Dict[LevelVector, jnp.ndarray]:
     """Scatter phase, batched: sparse-grid surplus -> nodal values of the
     combined solution on every component grid (truncating projection +
     batched dehierarchization; inverse-direction read of the index plan).
     """
-    return ct_scatter_with_plan(full, build_plan(scheme, full_levels),
+    return ct_scatter_with_plan(full,
+                                build_plan(scheme, full_levels, merge=merge),
                                 interpret=interpret)
 
 
@@ -564,22 +827,94 @@ def ct_embedded_with_plan(nodal_grids: Mapping[LevelVector, jnp.ndarray],
                           interpret: Optional[bool] = None
                           ) -> Tuple[jnp.ndarray, jnp.ndarray,
                                      Tuple[LevelVector, ...]]:
-    """``ct_embedded`` against an explicit plan."""
+    """``ct_embedded`` against an explicit plan.
+
+    The per-bucket embed is ONE flat scatter vectorized over the member
+    axis: the static index map is offset per member row at plan-read time
+    (``g * (fine_size + 1) + index[g]``, a numpy constant under jit), so
+    the map is materialized once per bucket instead of once per member and
+    the write lowers as a single 1-D scatter instead of a 2-D advanced-
+    indexing update."""
     if isinstance(plan, ShardedPlan):
         plan = plan.plan
     _check_nodal_grids(nodal_grids, plan)
     dtype = jnp.result_type(*(jnp.asarray(v).dtype
                               for v in nodal_grids.values()))
+    row = plan.fine_size + 1                      # +1: per-member dump slot
     chunks, coeffs, order = [], [], []
     for bucket in plan.buckets:
         g = len(bucket.ells)
         x = _assemble_bucket(nodal_grids, bucket)
         alpha = hierarchize_batched(x, bucket.levels, interpret=interpret)
-        buf = jnp.zeros((g, plan.fine_size + 1), dtype)
-        buf = buf.at[jnp.arange(g)[:, None],
-                     jnp.asarray(bucket.index)].set(alpha.reshape(g, -1))
-        chunks.append(buf[:, :-1].reshape((g,) + plan.fine_shape))
+        flat_idx = (np.arange(g, dtype=np.int64)[:, None] * row
+                    + bucket.index).ravel()
+        buf = jnp.zeros(g * row, dtype)
+        buf = buf.at[jnp.asarray(flat_idx)].set(alpha.reshape(-1))
+        chunks.append(buf.reshape(g, row)[:, :-1]
+                      .reshape((g,) + plan.fine_shape))
         coeffs.append(bucket.coeffs)
         order.extend(bucket.ells)
     return (jnp.concatenate(chunks), jnp.asarray(np.concatenate(coeffs)),
             tuple(order))
+
+
+def plan_launch_stats(plan: ExecutorPlan, *, dtype_bytes: int = 8,
+                      fused: Optional[bool] = None) -> Dict[str, int]:
+    """Plan-derived dispatch and gather-phase HBM accounting.
+
+    Static mirror of what one ``ct_transform_with_plan`` execution
+    dispatches (cross-checked against the traced counts of
+    ``repro.kernels.hierarchize.count_launches`` in the benchmark).
+    ``dtype_bytes`` must be the gather's ACTUAL itemsize (default 8 =
+    f64): it prices the traffic AND feeds the same fused-epilogue VMEM
+    gate the execution uses, so a mismatched value (e.g. the default for
+    an f32 run near the budget boundary) would mis-report which buckets
+    fuse:
+
+    * ``pallas_launches`` — Pallas kernel launches (tail + axis-0 per
+      Pallas-path bucket; the fused epilogue replaces the axis-0 launch,
+      so the count is unchanged — fusion saves BYTES, merging saves
+      LAUNCHES);
+    * ``einsum_dispatches`` — stacked-operator dispatches of jnp-path
+      buckets (one per grid axis);
+    * ``scatter_dispatches`` — standalone XLA scatter-adds (one per
+      UNFUSED bucket; fused buckets scatter inside the axis-0 kernel);
+    * ``launches`` — the sum: every device-queue dispatch of the gather;
+    * ``transform_bytes`` — modelled HBM traffic of the batched
+      transforms (``round_trips=4`` array touches of each member's padded
+      volume: 2 launches x read+write; tile volume on the Pallas path);
+    * ``stack_bytes`` — the compact-surplus round trip (write the
+      ``(G, P)`` stack after the transform + read it back in the
+      scatter) — ZERO for fused buckets: the bytes the fused epilogue
+      removes.
+    """
+    if isinstance(plan, ShardedPlan):
+        # the sharded gather's scatter target is the per-slab buffer, so
+        # the fused gate mirrors plan_fused_ok, not the dense transform
+        out_elems = plan.slab_size + 1
+        plan = plan.plan
+    else:
+        out_elems = plan.fine_size + 1
+    stats = {"buckets": len(plan.buckets), "members": plan.num_grids,
+             "pallas_launches": 0, "einsum_dispatches": 0,
+             "scatter_dispatches": 0, "launches": 0,
+             "transform_bytes": 0, "stack_bytes": 0}
+    for b in plan.buckets:
+        shape = b.shape
+        g = len(b.ells)
+        p = int(np.prod(shape, dtype=np.int64))
+        if batched_method(shape) == "pallas":
+            stats["pallas_launches"] += 1 if len(shape) == 1 else 2
+            vol = tile_volume(shape)
+        else:
+            stats["einsum_dispatches"] += len(shape)
+            vol = p
+        stats["transform_bytes"] += 4 * g * vol * dtype_bytes
+        if _fuse_bucket(b, out_elems, dtype_bytes, fused):
+            continue
+        stats["scatter_dispatches"] += 1
+        stats["stack_bytes"] += 2 * g * p * dtype_bytes
+    stats["launches"] = (stats["pallas_launches"]
+                         + stats["einsum_dispatches"]
+                         + stats["scatter_dispatches"])
+    return stats

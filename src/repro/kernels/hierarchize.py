@@ -20,12 +20,24 @@ TPU adaptation of the paper's BFS-OverVectorized kernel (DESIGN.md Sect. 2):
   is hierarchized in 2 round trips (tail axes fused while tiling axis 0,
   then axis 0 while tiling the lanes) instead of d.
 
+* ``batched`` — the CT executor's bucket kernels (one launch per bucket,
+  member index on the leading Pallas grid dimension).  FORWARD transforms
+  use the 3-term hierarchical-predecessor gathers (elementwise, bitwise
+  independent of zero-padding — the property bucket merging relies on);
+  the inverse keeps per-member ``H^-1 (+) I`` operator matmuls.  The
+  scatter-add epilogue variant (``hier_axis0_scatter_batched_pallas``)
+  additionally applies each member's combination coefficient and writes
+  the finished surpluses through a static index map into the
+  VMEM-resident fine buffer — the gather phase without the compact-stack
+  HBM round trip.
+
 All kernels are validated in ``interpret=True`` mode against
 ``repro.kernels.ref`` (CPU container; TPU is the compilation target).
 """
 
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Sequence
 
@@ -46,13 +58,53 @@ __all__ = [
     "dehierarchize_nd_fused",
     "hier_tail_batched_pallas",
     "hier_axis0_batched_pallas",
+    "hier_axis0_scatter_batched_pallas",
     "hierarchize_batched",
     "hierarchize_batched_jnp",
     "dehierarchize_batched",
+    "count_launches",
+    "pad_blowup",
+    "tile_volume",
+    "batched_method",
 ]
 
 _LANE = 128
 _SUBLANE = 8
+
+# --- kernel-dispatch accounting (benchmarks / merge cost-model validation) --
+#
+# Counters are bumped at TRACE time, so inside jit they count the dispatches
+# the compiled executable will issue per call (each pallas_call is one kernel
+# launch; each stacked-operator einsum of the jnp path is one fused XLA
+# dispatch).  ``count_launches()`` scopes the accounting.
+
+_LAUNCHES = {"pallas": 0, "einsum": 0}
+
+
+@contextlib.contextmanager
+def count_launches():
+    """Count kernel dispatches traced inside the block.
+
+    Yields a dict, filled when the block EXITS, with keys ``pallas``
+    (pallas_call launches) and ``einsum`` (per-axis stacked-operator
+    dispatches of the jnp fallback path)."""
+    saved = dict(_LAUNCHES)
+    _LAUNCHES["pallas"] = _LAUNCHES["einsum"] = 0
+    result: dict = {}
+    try:
+        yield result
+    finally:
+        result.update(_LAUNCHES)
+        _LAUNCHES.update({k: saved[k] + result[k] for k in saved})
+
+
+def _count(kind: str) -> None:
+    _LAUNCHES[kind] += 1
+
+
+def _pallas_call(*args, **kwargs):
+    _count("pallas")
+    return pl.pallas_call(*args, **kwargs)
 
 
 def _interpret_default() -> bool:
@@ -129,7 +181,7 @@ def hier_pole_pallas(x: jnp.ndarray, *, lane_tile: int = _LANE,
     bpad = _round_up(b, lane_tile)
     xp = jnp.pad(x, ((0, npad - n), (0, bpad - b)))
     kernel = functools.partial(_pole_kernel, level=level, reduced_op=reduced_op)
-    out = pl.pallas_call(
+    out = _pallas_call(
         kernel,
         grid=(bpad // lane_tile,),
         in_specs=[pl.BlockSpec((npad, lane_tile), lambda i: (0, i))],
@@ -173,7 +225,7 @@ def dehier_pole_pallas(a: jnp.ndarray, *, lane_tile: int = _LANE,
     bpad = _round_up(b, lane_tile)
     ap = jnp.pad(a, ((0, npad - n), (0, bpad - b)))
     kernel = functools.partial(_dehier_pole_kernel, level=level)
-    out = pl.pallas_call(
+    out = _pallas_call(
         kernel,
         grid=(bpad // lane_tile,),
         in_specs=[pl.BlockSpec((npad, lane_tile), lambda i: (0, i))],
@@ -209,7 +261,7 @@ def apply_axis_matmul_pallas(x: jnp.ndarray, *, inverse: bool = False,
     hmat = jnp.asarray(_padded_operator(level, np.float32, inverse=inverse),
                        dtype=x.dtype if x.dtype != jnp.bfloat16 else jnp.float32)
     xp = jnp.pad(x, ((0, npad - n), (0, bpad - b)))
-    out = pl.pallas_call(
+    out = _pallas_call(
         _matmul_kernel,
         grid=(bpad // lane_tile,),
         in_specs=[
@@ -285,7 +337,7 @@ def hier_fused_tail_pallas(x: jnp.ndarray, *, inverse: bool = False,
     for m in ops_mats:
         in_specs.append(pl.BlockSpec(m.shape, lambda i: (0, 0)))
     kernel = functools.partial(_fused_tail_kernel, inverse=inverse)
-    out = pl.pallas_call(
+    out = _pallas_call(
         kernel,
         grid=(rpad // row_tile,),
         in_specs=in_specs,
@@ -314,10 +366,22 @@ def hier_axis0_pallas(x: jnp.ndarray, *, inverse: bool = False,
 # The combination technique dispatches one hierarchization per component
 # grid; the executor (repro.core.executor) buckets grids that share a
 # canonical shape and launches ONE Pallas call per bucket with the grid
-# index as the leading Pallas grid dimension.  Per-member operator stacks
-# (G, npad, npad) let members sit at a level BELOW the bucket target: the
-# operator is then H_l (+) I, identity on the zero-padding, so padded
-# members transform exactly as their unpadded selves.
+# index as the leading Pallas grid dimension.  Members may sit at a level
+# BELOW the bucket target (cost-driven bucket merging): they are
+# zero-padded to the target extents and carry their own per-member
+# transform data, so padded members transform exactly as their unpadded
+# selves.
+#
+# FORWARD transforms use the 3-term hierarchical-predecessor form
+# (``alpha_m = u_m - u_{m-s}/2 - u_{m+s}/2`` with ``s = lowbit(m)``,
+# boundary ancestors zero — H has <= 3 nonzeros per row), realized as two
+# static gathers + elementwise arithmetic.  Elementwise math is bitwise
+# independent of the padded extent, which is what makes a merged
+# super-bucket's results BIT-identical to the unmerged buckets' — a dense
+# operator matmul re-associates the contraction when npad changes and
+# drifts by an ulp.  The INVERSE (dehierarchization) operator is dense per
+# row, so it keeps the per-member padded-operator matmul stacks
+# (``H^-1 (+) I``, identity on the padding).
 
 def _op_stack(member_levels: Sequence[int], npad: int, dtype,
               inverse: bool) -> np.ndarray:
@@ -326,12 +390,59 @@ def _op_stack(member_levels: Sequence[int], npad: int, dtype,
                      for l in member_levels])
 
 
+def _pred_index_1d(level: int, npad: int) -> tuple:
+    """Left/right hierarchical-predecessor 0-based index vectors (npad,)
+    plus their validity masks, for a level-``level`` pole embedded at the
+    head of a (possibly padded) axis of extent ``npad >= 2**level - 1``.
+
+    1-based node m has ancestors at ``m -+ lowbit(m)``; a boundary
+    ancestor (0 or 2**level) contributes the homogeneous-zero boundary
+    value and pad positions beyond ``2**level - 1`` must stay zero, so
+    both get a False mask (the gather reads self, the mask zeroes it)."""
+    n = (1 << level) - 1
+    if n > npad:
+        raise ValueError(f"level {level} pole ({n}) exceeds extent {npad}")
+    j = np.arange(1, npad + 1)
+    s = j & -j
+    real = j <= n
+    lm = real & (j - s >= 1)
+    rm = real & (j + s <= n)
+    lp = np.where(lm, j - s, j) - 1
+    rp = np.where(rm, j + s, j) - 1
+    return (lp.astype(np.int32), rp.astype(np.int32), lm, rm)
+
+
+def _pred_stack(member_levels: Sequence[int], npad: int) -> tuple:
+    """Per-member predecessor stacks: ``(idx (2, G, npad) int32,
+    mask (2, G, npad) bool)`` — left then right."""
+    parts = [_pred_index_1d(l, npad) for l in member_levels]
+    idx = np.stack([np.stack([p[0] for p in parts]),
+                    np.stack([p[1] for p in parts])])
+    mask = np.stack([np.stack([p[2] for p in parts]),
+                     np.stack([p[3] for p in parts])])
+    return idx, mask
+
+
+def _hier3(x: jnp.ndarray, xl: jnp.ndarray, xr: jnp.ndarray,
+           lm: jnp.ndarray, rm: jnp.ndarray) -> jnp.ndarray:
+    """THE forward update, shared by every batched path (pallas tail,
+    pallas axis 0, fused scatter epilogue, jnp oracle) so they all agree
+    bitwise: fixed evaluation order, elementwise only.  Masked ancestors
+    (boundary / zero-padding) contribute an exact ``+0.0`` regardless of
+    the gathered value, so the result is independent of the padded
+    extent."""
+    half = jnp.asarray(0.5, x.dtype)
+    zero = jnp.zeros((), x.dtype)
+    return x - half * jnp.where(lm, xl, zero) - half * jnp.where(rm, xr, zero)
+
+
 def _op_dtype(dtype):
     return jnp.float32 if dtype == jnp.bfloat16 else dtype
 
 
 def _batched_tail_kernel(x_ref, *refs):
-    """Per-member operators applied to axes 2..d of a (1, R, N2..Nd) block.
+    """Per-member INVERSE operators applied to axes 2..d of a
+    (1, R, N2..Nd) block.
 
     Identical VMEM-resident fusion to ``_fused_tail_kernel``, plus the
     leading bucket-member axis selected by the Pallas grid."""
@@ -344,6 +455,23 @@ def _batched_tail_kernel(x_ref, *refs):
     o_ref[...] = x[None]
 
 
+def _batched_tail_fwd_kernel(x_ref, *refs):
+    """FORWARD tail transform of a (1, R, N2..Nd) block: per axis, two
+    static predecessor gathers + the elementwise 3-term update — same
+    VMEM-resident multi-axis fusion, no reductions, so results are
+    bitwise independent of the padded extents."""
+    preds, o_ref = refs[:-1], refs[-1]
+    x = x_ref[...][0]
+    for axis_off in range(len(preds) // 4):
+        axis = 1 + axis_off
+        lp, rp, lm, rm = (r[...][0] for r in preds[4 * axis_off:
+                                                   4 * axis_off + 4])
+        bc = (None,) * axis + (slice(None),) + (None,) * (x.ndim - 1 - axis)
+        x = _hier3(x, jnp.take(x, lp, axis=axis),
+                   jnp.take(x, rp, axis=axis), lm[bc], rm[bc])
+    o_ref[...] = x[None]
+
+
 def hier_tail_batched_pallas(x: jnp.ndarray,
                              member_levels: Sequence[Sequence[int]], *,
                              inverse: bool = False,
@@ -353,7 +481,8 @@ def hier_tail_batched_pallas(x: jnp.ndarray,
     """(De)hierarchize grid axes 1..d-1 of a (G, N1, ..., Nd) bucket.
 
     ``member_levels[g]`` is member g's level vector in bucket axis order;
-    entries below the bucket target level get the padded operator."""
+    members below the bucket target level get their own predecessor
+    indices (forward) or padded operator (inverse)."""
     if interpret is None:
         interpret = _interpret_default()
     if x.ndim < 3:
@@ -370,27 +499,37 @@ def hier_tail_batched_pallas(x: jnp.ndarray,
     rpad = _round_up(pads[0], row_tile)
     xp = jnp.pad(x, [(0, 0), (0, rpad - shape[0])] +
                  [(0, p - s) for p, s in zip(pads[1:], shape[1:])])
-    odt = _op_dtype(x.dtype)
-    ops_mats = [jnp.asarray(_op_stack([ml[1 + k] for ml in member_levels],
-                                      p, np.float64, inverse), odt)
-                for k, p in enumerate(pads[1:])]
     nd = len(shape)
+    if inverse:
+        odt = _op_dtype(x.dtype)
+        operands = [jnp.asarray(_op_stack([ml[1 + k] for ml in member_levels],
+                                          p, np.float64, inverse), odt)
+                    for k, p in enumerate(pads[1:])]
+        op_specs = [pl.BlockSpec((1,) + m.shape[1:], lambda gi, i: (gi, 0, 0))
+                    for m in operands]
+        kernel = _batched_tail_kernel
+    else:
+        operands, op_specs = [], []
+        for k, p in enumerate(pads[1:]):
+            idx, mask = _pred_stack([ml[1 + k] for ml in member_levels], p)
+            for side in (idx[0], idx[1], mask[0], mask[1]):
+                operands.append(jnp.asarray(side))
+                op_specs.append(pl.BlockSpec((1, p), lambda gi, i: (gi, 0)))
+        kernel = _batched_tail_fwd_kernel
 
     def x_index(gi, i):
         return (gi, i) + (0,) * (nd - 1)
 
     in_specs = [pl.BlockSpec((1, row_tile) + tuple(pads[1:]), x_index)]
-    for m in ops_mats:
-        in_specs.append(pl.BlockSpec((1,) + m.shape[1:],
-                                     lambda gi, i: (gi, 0, 0)))
-    out = pl.pallas_call(
-        _batched_tail_kernel,
+    in_specs += op_specs
+    out = _pallas_call(
+        kernel,
         grid=(g, rpad // row_tile),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, row_tile) + tuple(pads[1:]), x_index),
         out_shape=jax.ShapeDtypeStruct((g, rpad) + tuple(pads[1:]), x.dtype),
         interpret=interpret,
-    )(xp, *ops_mats)
+    )(xp, *operands)
     return out[(slice(None),) + tuple(slice(0, s) for s in shape)]
 
 
@@ -399,10 +538,20 @@ def _batched_matmul_kernel(h_ref, x_ref, o_ref):
                          preferred_element_type=o_ref.dtype)[None]
 
 
+def _batched_axis0_fwd_kernel(lp_ref, rp_ref, lm_ref, rm_ref, x_ref, o_ref):
+    """Forward axis-0 transform of a (1, Npad, T) block: two row gathers
+    + the elementwise 3-term update (bitwise padding-independent)."""
+    x = x_ref[...][0]
+    o_ref[...] = _hier3(x, jnp.take(x, lp_ref[...][0], axis=0),
+                        jnp.take(x, rp_ref[...][0], axis=0),
+                        lm_ref[...][0][:, None], rm_ref[...][0][:, None])[None]
+
+
 def hier_axis0_batched_pallas(x: jnp.ndarray, levels0: Sequence[int], *,
                               inverse: bool = False, lane_tile: int = 512,
                               interpret: bool | None = None) -> jnp.ndarray:
-    """(De)hierarchize grid axis 0 of a (G, N, B) bucket via MXU matmuls.
+    """(De)hierarchize grid axis 0 of a (G, N, B) bucket: predecessor
+    gathers (forward) or MXU matmuls (inverse).
 
     ``levels0[g]`` is member g's level along the transformed axis."""
     if interpret is None:
@@ -411,54 +560,184 @@ def hier_axis0_batched_pallas(x: jnp.ndarray, levels0: Sequence[int], *,
     npad = _round_up(n, _SUBLANE)
     lane_tile = min(lane_tile, _round_up(b, _LANE))
     bpad = _round_up(b, lane_tile)
-    hmat = jnp.asarray(_op_stack(levels0, npad, np.float64, inverse),
-                       _op_dtype(x.dtype))
     xp = jnp.pad(x, ((0, 0), (0, npad - n), (0, bpad - b)))
-    out = pl.pallas_call(
-        _batched_matmul_kernel,
+    if inverse:
+        hmat = jnp.asarray(_op_stack(levels0, npad, np.float64, inverse),
+                           _op_dtype(x.dtype))
+        operands = [hmat]
+        op_specs = [pl.BlockSpec((1, npad, npad), lambda gi, i: (gi, 0, 0))]
+        kernel = _batched_matmul_kernel
+    else:
+        idx, mask = _pred_stack(levels0, npad)
+        operands = [jnp.asarray(a) for a in (idx[0], idx[1],
+                                             mask[0], mask[1])]
+        op_specs = [pl.BlockSpec((1, npad), lambda gi, i: (gi, 0))] * 4
+        kernel = _batched_axis0_fwd_kernel
+    out = _pallas_call(
+        kernel,
         grid=(g, bpad // lane_tile),
-        in_specs=[
-            pl.BlockSpec((1, npad, npad), lambda gi, i: (gi, 0, 0)),
+        in_specs=op_specs + [
             pl.BlockSpec((1, npad, lane_tile), lambda gi, i: (gi, 0, i)),
         ],
         out_specs=pl.BlockSpec((1, npad, lane_tile), lambda gi, i: (gi, 0, i)),
         out_shape=jax.ShapeDtypeStruct((g, npad, bpad), x.dtype),
         interpret=interpret,
-    )(hmat, xp)
+    )(*operands, xp)
     return out[:, :n, :b]
+
+
+def _axis0_scatter_kernel(lp_ref, rp_ref, lm_ref, rm_ref, x_ref, i_ref,
+                          c_ref, acc_ref, o_ref):
+    """Fused epilogue step: member gi's axis-0 transform + weighted scatter.
+
+    The output block is the WHOLE fine buffer with a constant index map, so
+    it stays VMEM-resident across the entire grid (one HBM write at the
+    end) and accumulates: step (gi, ti) adds ``coeff[gi]`` times member
+    gi's finished surpluses (the same 3-term update as the unfused axis-0
+    kernel) of lane tile ti through the static index map.  Each member's
+    map is injective (pad positions alias the dump slot, which absorbs
+    only zeros), so per fine slot the adds happen once per member, in
+    member order — the same left fold as the unfused ``.at[idx].add``
+    gather, which is what keeps the fused path bit-identical."""
+    gi, ti = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((gi == 0) & (ti == 0))
+    def _init():
+        o_ref[...] = acc_ref[...]
+
+    x = x_ref[...][0]
+    alpha = _hier3(x, jnp.take(x, lp_ref[...][0], axis=0),
+                   jnp.take(x, rp_ref[...][0], axis=0),
+                   lm_ref[...][0][:, None], rm_ref[...][0][:, None])
+    contrib = c_ref[...][0] * alpha
+    o_ref[...] = o_ref[...].at[i_ref[...][0].ravel()].add(
+        contrib.ravel().astype(o_ref.dtype))
+
+
+def hier_axis0_scatter_batched_pallas(x: jnp.ndarray, levels0: Sequence[int],
+                                      coeffs: jnp.ndarray, index, acc,
+                                      *, lane_tile: int = 512,
+                                      interpret: bool | None = None
+                                      ) -> jnp.ndarray:
+    """Fused scatter-add epilogue of the batched CT gather: (de)hierarchize
+    grid axis 0 of a (G, N, B) bucket AND scatter-add the coefficient-
+    weighted surpluses straight into the flat fine buffer ``acc`` — the
+    ``(G, P)`` compact surplus stack never round-trips through HBM.
+
+    ``index`` is the bucket's static (G, N, B) int32 map into ``acc``
+    (every pad position points at the dump slot ``len(acc) - 1``);
+    ``coeffs`` the (G,) combination coefficients in the accumulator dtype.
+    Returns ``acc`` plus all members' contributions, accumulated per fine
+    slot in member order (matching the unfused scatter's left fold, so the
+    result is BIT-identical to weighted-scatter-after-materialize).
+
+    VMEM note: the fine buffer is the kernel's resident output block, so
+    the caller gates this path on ``len(acc)`` fitting the VMEM budget
+    (``repro.core.executor`` falls back to the unfused gather otherwise).
+    In-kernel scatter is validated in interpret mode like the rest of this
+    module; on real TPU the same structure lowers through Mosaic's
+    dynamic-update path."""
+    if interpret is None:
+        interpret = _interpret_default()
+    g, n, b = x.shape
+    npad = _round_up(n, _SUBLANE)
+    lane_tile = min(lane_tile, _round_up(b, _LANE))
+    bpad = _round_up(b, lane_tile)
+    f = acc.shape[0]
+    fpad = _round_up(f, _LANE)
+    dump = f - 1
+    idx_s, mask_s = _pred_stack(levels0, npad)
+    xp = jnp.pad(x, ((0, 0), (0, npad - n), (0, bpad - b)))
+    ip = jnp.pad(jnp.asarray(index, jnp.int32),
+                 ((0, 0), (0, npad - n), (0, bpad - b)),
+                 constant_values=dump)
+    accp = jnp.pad(acc, (0, fpad - f))
+    cs = jnp.asarray(coeffs, acc.dtype)
+    pred_spec = pl.BlockSpec((1, npad), lambda gi, ti: (gi, 0))
+    out = _pallas_call(
+        _axis0_scatter_kernel,
+        grid=(g, bpad // lane_tile),
+        in_specs=[
+            pred_spec, pred_spec, pred_spec, pred_spec,
+            pl.BlockSpec((1, npad, lane_tile), lambda gi, ti: (gi, 0, ti)),
+            pl.BlockSpec((1, npad, lane_tile), lambda gi, ti: (gi, 0, ti)),
+            pl.BlockSpec((1,), lambda gi, ti: (gi,)),
+            pl.BlockSpec((fpad,), lambda gi, ti: (0,)),
+        ],
+        out_specs=pl.BlockSpec((fpad,), lambda gi, ti: (0,)),
+        out_shape=jax.ShapeDtypeStruct((fpad,), acc.dtype),
+        interpret=interpret,
+    )(jnp.asarray(idx_s[0]), jnp.asarray(idx_s[1]), jnp.asarray(mask_s[0]),
+      jnp.asarray(mask_s[1]), xp, ip, cs, accp)
+    return out[:f]
 
 
 def hierarchize_batched_jnp(x: jnp.ndarray,
                             member_levels: Sequence[Sequence[int]], *,
                             inverse: bool = False) -> jnp.ndarray:
-    """Batched (de)hierarchization as per-axis stacked-operator einsums.
+    """Batched (de)hierarchization as per-axis stacked dispatches:
+    predecessor gathers + the shared 3-term update (forward) or
+    stacked-operator einsums (inverse).
 
     No tile padding at all — the path of choice for high-d grids with
     tiny axis extents (a 3^10 grid would pad to 8^9 x 128 under the TPU
     sublane/lane tiling, a ~36000x blowup) and the interpret-mode oracle
-    for the Pallas kernels."""
+    for the Pallas kernels.  The forward path shares ``_hier3`` with the
+    Pallas kernels, so both are BITWISE equal (method choice never
+    changes results — a merged bucket that flips a member from the jnp to
+    the Pallas path stays bit-identical)."""
     member_levels = [tuple(ml) for ml in member_levels]
     d = x.ndim - 1
     odt = _op_dtype(x.dtype)
     for k in range(d):
-        h = jnp.asarray(_op_stack([ml[k] for ml in member_levels],
-                                  x.shape[k + 1], np.float64, inverse), odt)
-        xm = jnp.moveaxis(x, k + 1, 1)
-        tail = xm.shape[2:]
-        xm = jnp.einsum("gij,gjt->git", h,
-                        xm.reshape(xm.shape[0], xm.shape[1], -1))
-        x = jnp.moveaxis(xm.reshape(xm.shape[:2] + tail), 1, k + 1)
+        _count("einsum")
+        axis_levels = [ml[k] for ml in member_levels]
+        if inverse:
+            h = jnp.asarray(_op_stack(axis_levels, x.shape[k + 1],
+                                      np.float64, inverse), odt)
+            xm = jnp.moveaxis(x, k + 1, 1)
+            tail = xm.shape[2:]
+            xm = jnp.einsum("gij,gjt->git", h,
+                            xm.reshape(xm.shape[0], xm.shape[1], -1))
+            x = jnp.moveaxis(xm.reshape(xm.shape[:2] + tail), 1, k + 1)
+        else:
+            idx, mask = _pred_stack(axis_levels, x.shape[k + 1])
+            ishape = [1] * (d + 1)
+            ishape[0], ishape[k + 1] = x.shape[0], x.shape[k + 1]
+            lp = jnp.asarray(idx[0].reshape(ishape))
+            rp = jnp.asarray(idx[1].reshape(ishape))
+            xl = jnp.take_along_axis(x, lp, axis=k + 1)
+            xr = jnp.take_along_axis(x, rp, axis=k + 1)
+            x = _hier3(x, xl, xr, jnp.asarray(mask[0].reshape(ishape)),
+                       jnp.asarray(mask[1].reshape(ishape)))
     return x
 
 
-def _pad_blowup(shape: Sequence[int]) -> float:
-    """Padded-tile volume over true volume for the batched Pallas path."""
+def tile_volume(shape: Sequence[int]) -> int:
+    """Padded-tile element count of one grid under the TPU sublane/lane
+    tiling — the volume the batched Pallas kernels actually move through
+    HBM (the executor's merge cost model prices super-buckets with it)."""
     pads = [_round_up(s, _SUBLANE if i < len(shape) - 1 else _LANE)
             for i, s in enumerate(shape)]
-    return float(np.prod(pads)) / max(1.0, float(np.prod(shape)))
+    return int(np.prod(pads, dtype=np.int64))
 
+
+def pad_blowup(shape: Sequence[int]) -> float:
+    """Padded-tile volume over true volume for the batched Pallas path."""
+    return float(tile_volume(shape)) / max(1.0, float(np.prod(shape)))
+
+
+_pad_blowup = pad_blowup          # original (pre-public) name
 
 _PALLAS_MAX_BLOWUP = 8.0
+
+
+def batched_method(shape: Sequence[int]) -> str:
+    """The ``method="auto"`` rule of ``hierarchize_batched``, exposed so the
+    executor's cost model and launch accounting price buckets the same way
+    the kernels will actually run them."""
+    return ("jnp" if pad_blowup(shape) > _PALLAS_MAX_BLOWUP
+            or max(shape) > 2047 else "pallas")
 
 
 def hierarchize_batched(x: jnp.ndarray,
@@ -471,13 +750,14 @@ def hierarchize_batched(x: jnp.ndarray,
     ``method="pallas"``: same 2-HBM-round-trip structure as
     ``hierarchize_nd_fused`` — tail axes fused while tiling axis 1, then
     axis 1 while tiling the lanes — but ONE kernel launch pair per bucket
-    instead of per grid.  ``"jnp"``: stacked-operator einsums (no tile
-    padding).  ``"auto"`` picks pallas unless sublane/lane padding would
-    inflate the block volume by more than ~8x (high-d tiny-extent grids)."""
+    instead of per grid.  ``"jnp"``: stacked per-axis dispatches, no tile
+    padding (bitwise equal to the pallas path — both run ``_hier3``
+    forward / the operator stacks inverse).  ``"auto"`` picks pallas
+    unless sublane/lane padding would inflate the block volume by more
+    than ~8x (high-d tiny-extent grids); see ``batched_method``."""
     member_levels = [tuple(ml) for ml in member_levels]
     if method == "auto":
-        method = ("jnp" if _pad_blowup(x.shape[1:]) > _PALLAS_MAX_BLOWUP
-                  or max(x.shape[1:]) > 2047 else "pallas")
+        method = batched_method(x.shape[1:])
     if method == "jnp":
         return hierarchize_batched_jnp(x, member_levels, inverse=inverse)
     if method != "pallas":

@@ -108,19 +108,28 @@ class CTSurrogate:
     unchanged.  ``refit`` and ``drop_grid`` re-shard the plan
     incrementally (slab index maps of surviving buckets are reused by
     identity).
+
+    ``merge=`` (a ``repro.core.executor.MergeConfig``) turns on
+    cost-model-driven bucket merging for the ingest plan — fewer kernel
+    launches per ingest on wide-diagonal schemes, with bit-identical
+    surpluses; the merge decision survives ``refit`` / ``drop_grid``
+    (incremental rebuilds re-apply it).  Pallas-path buckets ingest
+    through the fused scatter-add epilogue automatically (single-device
+    and sharded alike).
     """
 
     _shared_eval = None   # one jitted eval across all surrogate instances
 
     def __init__(self, scheme, nodal_grids,
                  interpret: Optional[bool] = None,
-                 mesh=None, axis_name: str = "slab"):
+                 mesh=None, axis_name: str = "slab", merge=None):
         from repro.core.interpolation import interpolate_hierarchical
         self.scheme = scheme
         self._interpret = interpret
         self._mesh, self._axis_name = mesh, axis_name
+        self._merge = merge
         self._plan = self._build_plan(scheme)
-        self._ingest = self._make_ingest(self._plan)
+        self._ingest = self._make_ingest(self._plan, scheme)
         self._surplus = self._ingest(nodal_grids)
         if CTSurrogate._shared_eval is None:
             CTSurrogate._shared_eval = jax.jit(interpolate_hierarchical)
@@ -128,26 +137,29 @@ class CTSurrogate:
 
     def _build_plan(self, scheme):
         from repro.core.executor import build_plan, shard_plan
-        plan = build_plan(scheme)
+        plan = build_plan(scheme, merge=self._merge)
         if self._mesh is None:
             return plan
         return shard_plan(plan, self._mesh.shape[self._axis_name])
 
-    def _make_ingest(self, plan):
-        """One jitted ingest bound to an explicit plan: single-device
-        ``ct_transform_with_plan`` or the slab-sharded gather."""
+    def _make_ingest(self, plan, scheme):
+        """One jitted ingest bound to an explicit plan + the scheme it was
+        built from (passed in, NOT read off self — refit/drop_grid rebind
+        the ingest before mutating state): single-device
+        ``ct_transform_with_plan`` or the slab-sharded gather (both pick
+        the fused scatter-add epilogue when the plan supports it)."""
         from repro.core.executor import ct_transform_with_plan
         interpret = self._interpret
         if self._mesh is None:
             return jax.jit(lambda grids: ct_transform_with_plan(
                 grids, plan, interpret=interpret))
-        from repro.core.distributed import gather_slab_scatter
-        from repro.core.executor import bucket_surpluses
+        from repro.core.distributed import ct_transform_sharded
         mesh, axis_name = self._mesh, self._axis_name
 
         def ingest(grids):
-            alphas = bucket_surpluses(grids, plan.plan, interpret=interpret)
-            return gather_slab_scatter(alphas, plan, mesh, axis_name)
+            return ct_transform_sharded(grids, scheme, mesh, axis_name,
+                                        sharded_plan=plan,
+                                        interpret=interpret)
 
         return jax.jit(ingest)
 
@@ -167,7 +179,7 @@ class CTSurrogate:
         scheme) raises before any state mutates."""
         from repro.core.executor import extend_plan
         plan = extend_plan(self._plan, scheme)
-        ingest = self._make_ingest(plan)
+        ingest = self._make_ingest(plan, scheme)
         surplus = ingest(nodal_grids)
         self.scheme, self._plan = scheme, plan
         self._ingest, self._surplus = ingest, surplus
@@ -189,7 +201,7 @@ class CTSurrogate:
         from repro.runtime.fault_tolerance import recombine_after_fault
         scheme, plan, _ = recombine_after_fault(self.scheme, failed,
                                                 plan=self._plan)
-        ingest = self._make_ingest(plan)
+        ingest = self._make_ingest(plan, scheme)
         surplus = ingest(nodal_grids)   # raises before any state mutates
         self.scheme, self._plan = scheme, plan
         self._ingest, self._surplus = ingest, surplus

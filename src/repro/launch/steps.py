@@ -79,7 +79,8 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
     return step
 
 
-def make_ct_step(scheme, *, interpret: bool | None = None) -> Callable:
+def make_ct_step(scheme, *, interpret: bool | None = None,
+                 merge=None) -> Callable:
     """ONE jitted function for the whole CT communication phase:
     ``{ell: nodal}`` -> sparse-grid surplus on the common fine grid.
 
@@ -87,27 +88,32 @@ def make_ct_step(scheme, *, interpret: bool | None = None) -> Callable:
     ``GeneralScheme`` (both hashable) — is bound at closure time, so the
     executor's bucket plan and index maps are trace-time constants:
     re-calling with new grid VALUES never retraces (one jit cache entry
-    per scheme shape signature).
+    per scheme shape signature).  ``merge`` (a ``repro.core.executor.
+    MergeConfig``) opts the bound plan into cost-model-driven bucket
+    merging — fewer launches per step, bit-identical surpluses.
     """
-    from repro.core.executor import ct_transform
+    from repro.core.executor import build_plan, ct_transform_with_plan
+    plan = build_plan(scheme, merge=merge)
 
     @jax.jit
     def step(nodal_grids):
-        return ct_transform(nodal_grids, scheme, interpret=interpret)
+        return ct_transform_with_plan(nodal_grids, plan, interpret=interpret)
 
     return step
 
 
-def make_ct_eval_step(scheme, *, interpret: bool | None = None) -> Callable:
+def make_ct_eval_step(scheme, *, interpret: bool | None = None,
+                      merge=None) -> Callable:
     """Jitted CT surrogate evaluation: ``({ell: nodal}, points (Q, d))`` ->
     combined-interpolant values (Q,) — transform + hierarchical-basis
     evaluation fused into one computation (the serving hot path)."""
-    from repro.core.executor import ct_transform
+    from repro.core.executor import build_plan, ct_transform_with_plan
     from repro.core.interpolation import interpolate_hierarchical
+    plan = build_plan(scheme, merge=merge)
 
     @jax.jit
     def step(nodal_grids, points):
-        full = ct_transform(nodal_grids, scheme, interpret=interpret)
+        full = ct_transform_with_plan(nodal_grids, plan, interpret=interpret)
         return interpolate_hierarchical(full, points)
 
     return step

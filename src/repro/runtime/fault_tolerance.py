@@ -116,6 +116,9 @@ def recombine_after_fault(scheme, failed: Iterable[Tuple[int, ...]],
     ``plan`` may be a slab-sharded ``repro.core.executor.ShardedPlan``
     (multi-device serving): both update paths re-shard incrementally,
     reusing the slab index maps of every surviving bucket by identity.
+    A merged plan (``build_plan(..., merge=MergeConfig(...))``) stays
+    merged: the coefficient-only path keeps the super-buckets verbatim
+    and the ``extend_plan`` fallback re-applies ``plan.merge``.
     """
     from repro.core.executor import (build_plan, extend_plan,
                                      update_plan_coefficients)
