@@ -91,7 +91,7 @@ def main(argv=None):
             f_psum = jax.jit(lambda gr, m=mesh: ct_transform_psum(
                 gr, scheme, m, "slab"))
             f_slab = jax.jit(lambda gr, m=mesh, sp=splan: ct_transform_psum(
-                gr, scheme, m, "slab", sharded_plan=sp))
+                gr, scheme, m, "slab", plan=sp))
             np.testing.assert_allclose(np.asarray(f_slab(grids)), want,
                                        rtol=1e-12, atol=1e-12)
             np.testing.assert_allclose(np.asarray(f_psum(grids)), want,

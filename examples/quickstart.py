@@ -1,26 +1,36 @@
-"""Quickstart: the paper's pipeline in 60 lines.
+"""Quickstart: the paper's pipeline behind the unified front door.
 
 1. Build the combination scheme for a 2-D sparse grid.
-2. Sample a function on every combination grid (the "solver" output).
-3. Hierarchize each grid (the paper's kernel — here the fused Pallas path,
-   interpret-mode on CPU).
-4. Communication phase: gather the sparse-grid surpluses, scatter back.
-5. Evaluate the combined interpolant and compare against the function.
+2. Sample functions on every combination grid (the "solver" output).
+3. ``ExecSpec`` — ONE config object for the whole execution stack —
+   drives the batched gather (``ct_transform``): hierarchize every grid
+   in bucket-batched Pallas kernels + one static-index scatter-add.
+4. ``CTEngine`` — serve SEVERAL surrogates multi-tenant: equal plan
+   shape-signatures share one compiled ingest executable, and queries
+   submitted together coalesce into one batched eval dispatch.
+5. Scatter back (``ct_scatter``) for the iterated-CT round trip.
+6. The pre-ExecSpec keywords still work as deprecation shims (warn once).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
+import warnings
+
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import combination as comb
-from repro.core.hierarchize import dehierarchize, hierarchize
-from repro.core.interpolation import interpolate_hierarchical, sample_function
+from repro.core.engine import CTEngine, ExecSpec
+from repro.core.executor import ct_scatter, ct_transform
+from repro.core.interpolation import sample_function
 from repro.core.levels import CombinationScheme, grid_shape
 
 
 def f(x, y):
     return jnp.sin(jnp.pi * x) * y * (1 - y)
+
+
+def g(x, y):
+    return x * (1 - x) * jnp.sin(jnp.pi * y)
 
 
 def main():
@@ -29,32 +39,59 @@ def main():
           f"grids, {scheme.total_points()} grid points total "
           f"(vs {(2 ** 5 - 1) ** 2} for the full grid)")
 
-    # --- compute phase (black-box solver; here: sampling f) ---
-    nodal = {ell: sample_function(f, ell) for ell, _ in scheme.grids}
+    # --- compute phase (black-box solver; here: sampling f and g) ---
+    nodal_f = {ell: sample_function(f, ell) for ell, _ in scheme.grids}
+    nodal_g = {ell: sample_function(g, ell) for ell, _ in scheme.grids}
 
-    # --- hierarchize (the paper's kernel) ---
-    hier = {ell: hierarchize(u, method="fused") for ell, u in nodal.items()}
+    # --- one ExecSpec drives every execution knob (all defaults here:
+    #     no merging, single device, auto-fused epilogue, backend-default
+    #     interpret mode) ---
+    spec = ExecSpec()
+    full = ct_transform(nodal_f, scheme, spec=spec)
+    print(f"combined surplus buffer: {full.shape}")
 
-    # --- communication phase: ONE dense buffer, no interpolation needed ---
-    full, full_levels = comb.combine_full(hier, scheme)
-    print(f"combined surplus buffer: {grid_shape(full_levels)}")
+    # --- multi-tenant serving: two surrogates, ONE compiled ingest ---
+    engine = CTEngine(spec=spec)
+    engine.register("f", scheme, nodal_f)
+    engine.register("g", scheme, nodal_g)   # same shape-signature: cache hit
+    cache = engine.stats()["ingest_cache"]
+    print(f"ingest executables: {cache['misses']} compiled, "
+          f"{cache['hits']} shared (2 tenants)")
+    assert cache["misses"] == 1 and cache["hits"] == 1
 
-    # --- evaluate the sparse-grid interpolant ---
-    pts = jnp.asarray(np.random.default_rng(0).random((512, 2)))
-    approx = interpolate_hierarchical(full, pts)
-    exact = f(pts[:, 0], pts[:, 1])
-    err = float(jnp.max(jnp.abs(approx - exact)))
-    print(f"max interpolation error at 512 random points: {err:.2e}")
-    assert err < 5e-3
+    # --- continuous batching: both queries in ONE batched dispatch ---
+    pts = np.random.default_rng(0).random((512, 2))
+    fut_f = engine.submit_query("f", pts)
+    fut_g = engine.submit_query("g", pts)
+    engine.flush()
+    err_f = float(np.max(np.abs(fut_f.result()
+                                - np.asarray(f(pts[:, 0], pts[:, 1])))))
+    err_g = float(np.max(np.abs(fut_g.result()
+                                - np.asarray(g(pts[:, 0], pts[:, 1])))))
+    ev = engine.stats()["eval"]
+    print(f"max interpolation error at 512 random points: "
+          f"f {err_f:.2e}, g {err_g:.2e} "
+          f"({ev['queries']} queries in {ev['batches']} batched dispatch)")
+    assert err_f < 5e-3 and err_g < 5e-3 and ev["batches"] == 1
 
-    # --- scatter back + dehierarchize (iterated CT round-trip) ---
-    scattered = comb.scatter_subspaces(
-        comb.gather_subspaces(hier, scheme), scheme)
-    back = {ell: dehierarchize(a, method="fused")
-            for ell, a in scattered.items()}
-    drift = max(float(jnp.max(jnp.abs(back[ell] - nodal[ell])))
+    # --- scatter back (iterated-CT round trip): the combined interpolant
+    #     reproduces consistent component-grid values at their own nodes ---
+    back = ct_scatter(engine.surplus("f"), scheme, spec=spec)
+    drift = max(float(jnp.max(jnp.abs(back[ell] - nodal_f[ell])))
                 for ell, _ in scheme.grids)
     print(f"round-trip drift on consistent grids: {drift:.2e}")
+
+    # --- the legacy kwargs still work (deprecation shims, warn once) ---
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        legacy = ct_transform(nodal_f, scheme, interpret=None,
+                              merge=None)        # defaults: no warning
+        assert not caught
+        from repro.core.executor import MergeConfig
+        legacy = ct_transform(nodal_f, scheme, merge=MergeConfig())
+    assert np.array_equal(np.asarray(legacy), np.asarray(full))
+    print(f"legacy merge= kwarg: same result bit-for-bit, "
+          f"{len(caught)} DeprecationWarning (then silent)")
     print("OK")
 
 

@@ -11,6 +11,9 @@ Layer map (DESIGN.md Sect. 3):
                   plan rebuilds (extend_plan / update_plan_coefficients)
   adaptive      — dimension-adaptive refinement: surplus-scored index-set
                   growth driving incremental executor-plan extension
+  engine        — the unified front door: ExecSpec (one execution config)
+                  + CTEngine (multi-tenant continuous-batching serving
+                  with signature-shared compiled executables)
   interpolation — nodal / hierarchical-basis evaluation (validation anchor)
   pde           — the black-box solvers of the compute phase
   iterated      — the iterated combination technique driver

@@ -111,12 +111,44 @@ class AdaptiveDriver:
 
     def __init__(self, solver: Solver, dim: Optional[int] = None,
                  initial: Optional[GeneralScheme] = None,
-                 config: Optional[AdaptiveConfig] = None):
+                 config: Optional[AdaptiveConfig] = None, *,
+                 spec=None):
         if initial is None:
             if dim is None:
                 raise ValueError("pass dim or an initial GeneralScheme")
             initial = GeneralScheme.regular(dim, 1)   # {(1, ..., 1)}
         self.config = config or AdaptiveConfig()
+        if spec is not None:
+            # spec is authoritative for the execution policy (merge /
+            # interpret); budgets and indicators stay AdaptiveConfig's.
+            # Per the ExecSpec precedence rules, a CONFLICTING explicit
+            # config raises instead of being silently stomped, and spec
+            # fields this single-device driver cannot honor are rejected.
+            from repro.core.executor import ensure_spec
+            ensure_spec("AdaptiveDriver", spec)
+            if spec.mesh is not None or spec.slabs > 1:
+                raise ValueError(
+                    "AdaptiveDriver runs the gather single-device (the "
+                    "refinement loop re-plans every step); a meshed or "
+                    "slab-sharded spec is not supported here — serve the "
+                    "refined scheme through CTEngine instead")
+            if spec.dtype is not None:
+                raise ValueError(
+                    "AdaptiveDriver: spec.dtype is not supported — the "
+                    "driver scores surpluses in the solver's own dtype; "
+                    "cast the solver output instead")
+            for fld in ("merge", "interpret"):
+                have, want = getattr(self.config, fld), getattr(spec, fld)
+                if have is not None and have != want:
+                    raise ValueError(
+                        f"AdaptiveDriver: config.{fld}={have!r} conflicts "
+                        f"with spec.{fld}={want!r}; set the execution "
+                        f"policy in ONE place (the spec)")
+            import dataclasses as _dc
+            self.config = _dc.replace(self.config, merge=spec.merge,
+                                      interpret=spec.interpret)
+        self.spec = spec
+        self._fused = spec.fused if spec is not None else None
         self.solver = solver
         self.scheme = initial
         self._nodal: Dict[LevelVector, jnp.ndarray] = {}
@@ -147,7 +179,8 @@ class AdaptiveDriver:
 
     def _retransform(self) -> None:
         self._surplus = ct_transform_with_plan(
-            self._nodal, self.plan, interpret=self.config.interpret)
+            self._nodal, self.plan, interpret=self.config.interpret,
+            fused=self._fused)
         self._surplus_host = None        # host copy invalidated
 
     # --- scoring ---
@@ -257,10 +290,11 @@ class AdaptiveDriver:
 
 def refine(solver: Solver, dim: int,
            config: Optional[AdaptiveConfig] = None,
-           initial: Optional[GeneralScheme] = None) -> AdaptiveResult:
+           initial: Optional[GeneralScheme] = None, *,
+           spec=None) -> AdaptiveResult:
     """One-call dimension-adaptive refinement (see ``AdaptiveDriver``)."""
     return AdaptiveDriver(solver, dim=dim, initial=initial,
-                          config=config).run()
+                          config=config, spec=spec).run()
 
 
 # ---------------------------------------------------------------------------

@@ -55,6 +55,7 @@ Slab partitioning invariants (``repro.core.executor.ShardedPlan``):
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Sequence, Tuple
 
@@ -193,7 +194,8 @@ def _finish_slab_gather(out, splan, mesh: Mesh, axis_name: str,
 
 
 def gather_slab_scatter(alphas, sharded_plan, mesh: Mesh, axis_name: str, *,
-                        gather: bool = True) -> jnp.ndarray:
+                        gather: bool = True, idx_arrays=None,
+                        coeff_arrays=None) -> jnp.ndarray:
     """Slab-sharded gather step: per-bucket COMPACT surpluses ``alphas``
     (``repro.core.executor.bucket_surpluses``, one ``(G_b, P_b)`` array per
     bucket, replicated) are coefficient-weighted and scatter-added into the
@@ -208,14 +210,24 @@ def gather_slab_scatter(alphas, sharded_plan, mesh: Mesh, axis_name: str, *,
     (leading axis slab-padded, rows past ``fine_shape[0]`` zero) under
     ``NamedSharding(mesh, P(axis_name, ...))`` for downstream sharded
     consumers.
+
+    ``idx_arrays`` / ``coeff_arrays`` override the plan's numpy constants
+    with (possibly traced) arrays of the same shapes — the hook
+    ``repro.core.engine``'s signature-shared executables use so tenants
+    with equal bucket signatures share one compilation.  The plan is then
+    only read for its static slab metadata.
     """
     splan = sharded_plan
     _check_slab_gather_args(splan, mesh, axis_name, len(alphas), "surplus")
     nb = len(alphas)
     dtype = jnp.result_type(*(a.dtype for a in alphas))
     slab_size = splan.slab_size
-    idx = [jnp.asarray(sb.index) for sb in splan.slab_buckets]
-    coeffs = [jnp.asarray(b.coeffs, dtype) for b in splan.plan.buckets]
+    idx = [jnp.asarray(a) for a in (
+        idx_arrays if idx_arrays is not None
+        else [sb.index for sb in splan.slab_buckets])]
+    coeffs = [jnp.asarray(c).astype(dtype) for c in (
+        coeff_arrays if coeff_arrays is not None
+        else [b.coeffs for b in splan.plan.buckets])]
 
     def local_fn(*args):
         idx_loc = args[:nb]              # (1, G, P) — this device's slab
@@ -241,7 +253,9 @@ def gather_slab_scatter(alphas, sharded_plan, mesh: Mesh, axis_name: str, *,
 
 def gather_slab_scatter_fused(tails, sharded_plan, mesh: Mesh,
                               axis_name: str, *, gather: bool = True,
-                              interpret: bool | None = None) -> jnp.ndarray:
+                              interpret: bool | None = None,
+                              idx_arrays=None,
+                              coeff_arrays=None) -> jnp.ndarray:
     """Slab-sharded gather with the FUSED scatter-add epilogue: consumes
     per-bucket TAIL-transformed stacks (``repro.core.executor.
     bucket_tail_surpluses``, axis 0 still nodal, replicated) and runs the
@@ -263,10 +277,15 @@ def gather_slab_scatter_fused(tails, sharded_plan, mesh: Mesh,
     nb = len(tails)
     dtype = jnp.result_type(*(t.dtype for t in tails))
     slab_size = splan.slab_size
-    # slab-local maps in the (G, N0, B) layout of the tail stacks
-    idx = [jnp.asarray(sb.index).reshape((splan.n_slabs,) + t.shape)
-           for sb, t in zip(splan.slab_buckets, tails)]
-    coeffs = [jnp.asarray(b.coeffs, dtype) for b in splan.plan.buckets]
+    # slab-local maps in the (G, N0, B) layout of the tail stacks;
+    # idx_arrays/coeff_arrays as in gather_slab_scatter (traced overrides)
+    idx = [jnp.asarray(a).reshape((splan.n_slabs,) + t.shape)
+           for a, t in zip(
+               idx_arrays if idx_arrays is not None
+               else [sb.index for sb in splan.slab_buckets], tails)]
+    coeffs = [jnp.asarray(c).astype(dtype) for c in (
+        coeff_arrays if coeff_arrays is not None
+        else [b.coeffs for b in splan.plan.buckets])]
     levels0 = [tuple(lv[0] for lv in b.levels) for b in splan.plan.buckets]
 
     def local_fn(*args):
@@ -296,18 +315,23 @@ def gather_slab_scatter_fused(tails, sharded_plan, mesh: Mesh,
 def ct_transform_sharded(nodal_grids, scheme: SchemeLike, mesh: Mesh,
                          axis_name: str, *,
                          full_levels: Sequence[int] | None = None,
-                         sharded_plan=None, gather: bool = True,
+                         plan=None, sharded_plan=None, gather: bool = True,
                          fused: bool | None = None,
-                         interpret: bool | None = None) -> jnp.ndarray:
+                         interpret: bool | None = None,
+                         spec=None) -> jnp.ndarray:
     """Memory-scaling distributed gather: bucket-batched hierarchization,
     then the slab-sharded scatter-add — the multi-device ``ct_transform``
     whose per-device embedded memory is ``fine_size / n_groups``, not
     ``G * fine_size``.
 
-    Pass ``sharded_plan`` (``repro.core.executor.shard_plan``) to reuse a
-    live plan (the adaptive / fault path); otherwise one is built for
+    Pass ``plan`` (a ``repro.core.executor.shard_plan`` result) to reuse
+    a live plan (the adaptive / fault path); otherwise one is built for
     ``mesh.shape[axis_name]`` slabs.  ``gather=False`` returns the
-    slab-sharded fine buffer (see ``gather_slab_scatter``).
+    slab-sharded fine buffer (see ``gather_slab_scatter``).  ``spec``
+    (a ``repro.core.engine.ExecSpec``) consolidates
+    ``fused``/``interpret``/``merge``; the bare ``fused=``/``interpret=``
+    kwargs and the old ``sharded_plan=`` spelling of ``plan=`` remain as
+    deprecation shims.
 
     ``fused=None`` picks the fused scatter-add epilogue automatically
     when EVERY bucket runs the Pallas path and the per-device slab buffer
@@ -318,9 +342,21 @@ def ct_transform_sharded(nodal_grids, scheme: SchemeLike, mesh: Mesh,
     """
     from repro.core.executor import (build_plan, bucket_surpluses,
                                      bucket_tail_surpluses, plan_fused_ok,
-                                     shard_plan)
+                                     resolve_spec, shard_plan,
+                                     warn_legacy_kwargs)
+    if sharded_plan is not None:
+        if plan is not None:
+            raise ValueError("ct_transform_sharded: pass plan= or the "
+                             "deprecated sharded_plan=, not both")
+        warn_legacy_kwargs("ct_transform_sharded", ("sharded_plan",))
+        plan = sharded_plan
+    spec = resolve_spec("ct_transform_sharded", spec,
+                        fused=fused, interpret=interpret)
+    fused, interpret = spec.fused, spec.interpret
+    sharded_plan = plan
     if sharded_plan is None:
-        sharded_plan = shard_plan(build_plan(scheme, full_levels),
+        sharded_plan = shard_plan(build_plan(scheme, full_levels,
+                                             merge=spec.merge),
                                   mesh.shape[axis_name])
     elif full_levels is not None and sharded_plan.full_levels != \
             tuple(int(l) for l in full_levels):
@@ -356,18 +392,32 @@ def ct_transform_sharded(nodal_grids, scheme: SchemeLike, mesh: Mesh,
 
 def comm_phase_sharded(hier_grids, scheme: SchemeLike, mesh: Mesh,
                        axis_name: str, full_levels: Sequence[int] | None = None,
-                       sharded_plan=None):
+                       sharded_plan=None, *, plan=None, spec=None):
     """Full communication phase: gather + per-grid extract.
 
-    Single-controller convenience wrapper.  Default (``sharded_plan=None``)
+    Single-controller convenience wrapper.  Default (``plan=None``)
     is the grid-replicated psum: embeds every grid, stacks, psums over the
-    grid axis.  With a ``sharded_plan`` the gather runs slab-sharded
-    instead: the already-hierarchized grids are packed into compact bucket
-    rows (no ``(G, *fine_shape)`` stack is ever materialized) and
-    scatter-added slab-locally.  In a multi-controller deployment each
-    group computes only its own embed/extract.
+    grid axis.  With a slab-sharded ``plan`` — or a sharded ``spec``, from
+    which one is built — the gather runs slab-sharded instead: the
+    already-hierarchized grids are packed into compact bucket rows (no
+    ``(G, *fine_shape)`` stack is ever materialized) and scatter-added
+    slab-locally.  In a multi-controller deployment each group computes
+    only its own embed/extract.  ``sharded_plan=`` is the deprecated
+    spelling of ``plan=``.
     """
     from repro.core.combination import embed_to_full, extract_from_full
+    from repro.core.executor import (build_plan, ensure_spec,
+                                     warn_legacy_kwargs)
+    ensure_spec("comm_phase_sharded", spec)
+    if sharded_plan is not None:
+        if plan is not None:
+            raise ValueError("comm_phase_sharded: pass plan= or the "
+                             "deprecated sharded_plan=, not both")
+        warn_legacy_kwargs("comm_phase_sharded", ("sharded_plan",))
+    else:
+        sharded_plan = plan
+    if sharded_plan is None and spec is not None and spec.slabs > 1:
+        sharded_plan = build_plan(scheme, full_levels, spec=spec)
     if full_levels is None:
         full_levels = fine_levels(scheme)
     ells = [ell for ell, _ in scheme.grids]
@@ -398,25 +448,40 @@ def comm_phase_sharded(hier_grids, scheme: SchemeLike, mesh: Mesh,
 def ct_transform_psum(nodal_grids, scheme: SchemeLike, mesh: Mesh,
                       axis_name: str,
                       full_levels: Sequence[int] | None = None,
-                      sharded_plan=None) -> jnp.ndarray:
+                      sharded_plan=None, *, plan=None,
+                      spec=None) -> jnp.ndarray:
     """Distributed batched gather: the executor's bucket-batched
     hierarchization + static index plan produce the per-grid embedded
     surpluses, then ONE weighted psum over grid groups combines them —
     the multi-node realization of ``repro.core.executor.ct_transform``.
 
     Returns the replicated sparse-grid surplus on the common fine grid.
-    Pass ``sharded_plan`` to run the memory-scaling slab-sharded gather
-    instead (no ``(G, *fine_shape)`` stack is materialized; see
-    ``ct_transform_sharded``) — same result, per-device embedded memory
-    ``fine_size / n_groups``.
+    Pass a slab-sharded ``plan`` (or a spec with ``n_slabs``) to run the
+    memory-scaling slab-sharded gather instead (no ``(G, *fine_shape)``
+    stack is materialized; see ``ct_transform_sharded``) — same result,
+    per-device embedded memory ``fine_size / n_groups``.
+    ``sharded_plan=`` is the deprecated spelling of ``plan=``.
     """
+    from repro.core.executor import resolve_spec, warn_legacy_kwargs
     if sharded_plan is not None:
+        if plan is not None:
+            raise ValueError("ct_transform_psum: pass plan= or the "
+                             "deprecated sharded_plan=, not both")
+        warn_legacy_kwargs("ct_transform_psum", ("sharded_plan",))
+        plan = sharded_plan
+    spec = resolve_spec("ct_transform_psum", spec)
+    if plan is None and spec.slabs > 1:
+        from repro.core.executor import build_plan
+        plan = build_plan(scheme, full_levels, spec=spec)
+    if plan is not None:
         return ct_transform_sharded(nodal_grids, scheme, mesh, axis_name,
-                                    full_levels=full_levels,
-                                    sharded_plan=sharded_plan)
+                                    full_levels=full_levels, plan=plan,
+                                    spec=dataclasses.replace(
+                                        spec, mesh=None, n_slabs=None))
     from repro.core.executor import ct_embedded
     embedded, coeffs, _ = ct_embedded(nodal_grids, scheme,
-                                      full_levels=full_levels)
+                                      full_levels=full_levels,
+                                      spec=spec)
     g = embedded.shape[0]
     nshards = mesh.shape[axis_name]
     pad = (-g) % nshards

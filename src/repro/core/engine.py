@@ -1,0 +1,728 @@
+"""Unified CT execution front door: ``ExecSpec`` + multi-tenant ``CTEngine``.
+
+After PRs 1-4 the execution options (bucket merging, mesh/slab sharding,
+fused epilogue, interpret mode) were threaded as ad-hoc kwargs through
+four parallel entry-point families (``ct_transform*``,
+``ct_transform_psum``/``ct_transform_sharded``, ``CTSurrogate``,
+``make_ct_step``) — every new capability multiplied the API surface.
+This module consolidates them behind two objects:
+
+* ``ExecSpec`` — ONE frozen, hashable dataclass carrying every execution
+  policy.  Every consolidated entry point (``build_plan``,
+  ``extend_plan``, ``shard_plan``, ``ct_transform*``,
+  ``ct_transform_psum``, ``ct_transform_sharded``,
+  ``recombine_after_fault``, ``AdaptiveDriver``, ``make_ct_step``,
+  ``CTSurrogate``) accepts ``spec=``.
+* ``CTEngine`` — a multi-tenant registry serving N named surrogates
+  (scheme + plan + spec each) behind a continuous-batching queue, with
+  jitted ingest executables DEDUPED across tenants by plan
+  shape-signature.
+
+ExecSpec precedence rules
+-------------------------
+
+1. **spec wins, conflicts raise.**  An explicit ``spec=`` is
+   authoritative; combining it with a non-``None`` legacy kwarg
+   (``merge=``, ``mesh=``, ``fused=``, ``interpret=``, ...) on the same
+   call raises ``ValueError`` instead of guessing which one the caller
+   meant.
+2. **Legacy kwargs construct a spec.**  Called without ``spec=``, the
+   legacy kwargs are folded into the equivalent ``ExecSpec`` and the
+   call proceeds unchanged — plus ONE ``DeprecationWarning`` per
+   (function, kwarg-set) family per process
+   (``reset_deprecation_warnings`` rearms them, for tests).
+3. **Field-level defaults resolve as late as possible.**
+   ``n_slabs=None`` means "the mesh axis extent" (``spec.slabs``);
+   ``interpret=None`` means "ask ``repro.kernels.hierarchize.
+   interpret_default`` at execution time" (never frozen into the spec);
+   ``fused=None`` means the per-bucket auto rule
+   (``repro.core.executor.plan_fused_ok``); ``dtype=None`` means
+   "promote the input dtypes".
+4. **A meshed spec routes multi-device.**  ``mesh=`` makes the front
+   doors (``ct_transform``, ``CTEngine``, ``CTSurrogate``) run the
+   slab-sharded gather over ``mesh.shape[axis_name]`` device groups;
+   everything else (merge, fused, interpret) composes orthogonally.
+
+Deprecation policy
+------------------
+
+The legacy kwargs keep working for at least one release cycle of this
+repo's PR sequence: they are thin shims that build the equivalent
+``ExecSpec`` and warn ONCE per call-site family — so a long-running
+driver loop does not drown in warnings, while every distinct legacy call
+site still gets flagged.  New capabilities land as ExecSpec fields only.
+
+CTEngine
+--------
+
+``register(name, scheme, grids, spec=...)`` admits a tenant; ingest
+executables are cached in a process-global table keyed by the plan's
+SHAPE SIGNATURE (canonical bucket levels + axis permutations + fine
+grid + the execution-relevant spec fields).  The per-tenant embed index
+maps and combination coefficients are passed to the jitted executable as
+ARGUMENTS rather than baked in as constants, so two schemes with equal
+bucket signatures — same canonical grid shapes, different coefficients
+or different data — compile ONCE and the results stay bit-identical to
+the constants-baked ``ct_transform`` (both spellings trace the same
+ops; pinned by ``tests/test_engine.py``).
+
+``submit_ingest(name, grids)`` / ``submit_query(name, points)`` enqueue
+work and return ``CTFuture``s; ``flush()`` drains the queue by first
+dispatching every pending ingest (jax dispatch is asynchronous, so
+ingest compute overlaps the query batching below — no host sync in
+between) and then coalescing pending queries BY SIGNATURE
+(surplus shape/dtype + padded batch extent) into one vmapped batched
+eval dispatch per group.  Mixed-signature batches split into one
+dispatch per signature; per-request results are bit-identical to a
+per-tenant dispatch because each query point's hat-basis contraction is
+independent of the batching.  ``refit`` / ``extend`` / ``drop_grid``
+route through the incremental plan paths (``extend_plan`` /
+``recombine_after_fault``) per tenant, and ``stats()`` aggregates
+``plan_launch_stats`` with the compile-cache hit counters.
+
+``repro.launch.serve.CTSurrogate`` is a thin single-tenant view over a
+private engine.
+"""
+
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import (ExecutorPlan, MergeConfig, ShardedPlan,
+                                 _assemble_members, _check_nodal_grids,
+                                 _gather_one_bucket, _tail_transform,
+                                 _WARNED_LEGACY, build_plan, extend_plan,
+                                 plan_fused_ok, plan_launch_stats)
+from repro.core.interpolation import interpolate_hierarchical
+from repro.core.levels import SchemeLike
+from repro.kernels.hierarchize import (batched_method, hierarchize_batched,
+                                       interpret_default)
+
+__all__ = ["ExecSpec", "CTEngine", "CTFuture",
+           "reset_deprecation_warnings", "clear_compile_cache"]
+
+
+def reset_deprecation_warnings() -> None:
+    """Re-arm the once-per-call-site legacy-kwarg warnings (tests)."""
+    _WARNED_LEGACY.clear()
+
+
+@dataclass(frozen=True)
+class ExecSpec:
+    """One frozen config for the whole CT execution stack.
+
+    Hashable (meshes hash by device assignment, ``MergeConfig`` is a
+    frozen dataclass, ``dtype`` is canonicalized to its name), so a spec
+    can sit in plan caches and executable-cache keys.  See the module
+    docstring for the precedence rules.
+    """
+
+    #: bucket-merging cost model (``None`` = one bucket per canonical
+    #: shape) — part of the PLAN, so two specs differing only here
+    #: produce different plans, not different executables
+    merge: Optional[MergeConfig] = None
+    #: jax device mesh for the slab-sharded multi-device gather
+    mesh: Optional[Any] = None
+    #: mesh axis the fine grid's leading axis is slab-sharded over
+    axis_name: str = "slab"
+    #: slab count override; ``None`` = ``mesh.shape[axis_name]`` (1 off-mesh)
+    n_slabs: Optional[int] = None
+    #: fused scatter-add epilogue: ``None`` = per-bucket auto rule
+    fused: Optional[bool] = None
+    #: Pallas interpret mode: ``None`` = backend default at execution time
+    interpret: Optional[bool] = None
+    #: accumulation dtype of engine ingest (name, e.g. ``"float64"``);
+    #: ``None`` = promote the input grid dtypes
+    dtype: Optional[str] = None
+
+    def __post_init__(self):
+        if self.dtype is not None:
+            object.__setattr__(self, "dtype", jnp.dtype(self.dtype).name)
+        if self.n_slabs is not None and self.n_slabs < 1:
+            raise ValueError(f"n_slabs must be >= 1, got {self.n_slabs}")
+        if self.mesh is not None:
+            if self.axis_name not in self.mesh.shape:
+                raise ValueError(
+                    f"axis_name {self.axis_name!r} is not an axis of the "
+                    f"mesh (axes: {tuple(self.mesh.shape)})")
+            extent = int(self.mesh.shape[self.axis_name])
+            if self.n_slabs is not None and self.n_slabs != extent:
+                raise ValueError(
+                    f"n_slabs={self.n_slabs} conflicts with mesh axis "
+                    f"{self.axis_name!r} of {extent} device(s); set ONE of "
+                    f"them (precedence rule 1: conflicts raise)")
+
+    @property
+    def slabs(self) -> int:
+        """Effective slab count: explicit ``n_slabs``, else the mesh axis
+        extent, else 1 (unsharded)."""
+        if self.n_slabs is not None:
+            return self.n_slabs
+        if self.mesh is not None:
+            return int(self.mesh.shape[self.axis_name])
+        return 1
+
+    def resolve_interpret(self) -> bool:
+        """The concrete interpret flag this spec means RIGHT NOW (the
+        shared backend-default helper; late so the spec stays portable)."""
+        if self.interpret is not None:
+            return self.interpret
+        return interpret_default()
+
+    def result_dtype(self, *input_dtypes):
+        """Accumulation dtype under this spec's dtype policy."""
+        if self.dtype is not None:
+            return jnp.dtype(self.dtype)
+        return jnp.result_type(*input_dtypes)
+
+    def plan(self, scheme: SchemeLike, full_levels=None):
+        """Build the (possibly slab-sharded, possibly merged) executor
+        plan this spec prescribes for ``scheme``."""
+        return build_plan(scheme, full_levels, spec=self)
+
+
+# ---------------------------------------------------------------------------
+# Signature-shared ingest executables
+# ---------------------------------------------------------------------------
+
+def plan_signature(plan, spec: ExecSpec) -> Tuple:
+    """Hashable shape signature of (plan, spec): everything the jitted
+    ingest executable's TRACE depends on — canonical bucket member levels
+    and axis permutations (these determine every array shape, operator
+    and index-map layout), the fine grid, the slab split, and the
+    execution-relevant spec fields.  NOT included: the member level
+    vectors' original order (``ells``), coefficients and index-map
+    VALUES — those are runtime arguments, which is exactly what lets
+    same-signature tenants share one compilation."""
+    sharded = isinstance(plan, ShardedPlan)
+    base = plan.plan if sharded else plan
+    buckets = tuple((b.levels, b.perms) for b in base.buckets)
+    shard = (plan.n_slabs,) if sharded else None
+    return (base.full_levels, buckets, shard,
+            spec.fused, spec.interpret, spec.dtype,
+            spec.mesh if sharded else None,
+            spec.axis_name if sharded else None)
+
+
+#: Process-global executable cache: signature -> jitted ingest fn.  Shared
+#: across every CTEngine (and so across every CTSurrogate) in the process.
+#: LRU-bounded like ``build_plan``'s plan cache: each entry retains its
+#: jit cache AND (sharded signatures) the representative plan's slab
+#: metadata in the closure, so retired signatures — a long refit/extend
+#: trajectory produces one per scheme shape — must not accumulate
+#: unboundedly.  Live tenants keep their executable reachable through
+#: ``_Tenant.executable`` even after eviction; eviction only forces a
+#: recompile for the NEXT tenant of that signature.
+_INGEST_EXECUTABLES: "collections.OrderedDict[Tuple, Callable]" = \
+    collections.OrderedDict()
+_INGEST_CACHE_MAX = 64
+
+
+def clear_compile_cache() -> None:
+    """Drop the shared ingest-executable cache (tests / benchmarks)."""
+    _INGEST_EXECUTABLES.clear()
+
+
+def _build_ingest_executable(plan, spec: ExecSpec) -> Callable:
+    """Jitted ``(grid_parts, idxs, coeffs) -> surplus`` for one plan
+    signature.  ``plan`` is a REPRESENTATIVE realization of the
+    signature: only signature-determined structure (bucket levels/perms/
+    shapes, fine grid, slab metadata) is closed over; index maps and
+    coefficients arrive as traced arguments."""
+    sharded = isinstance(plan, ShardedPlan)
+    base = plan.plan if sharded else plan
+    metas = [(b.levels, b.perms, b.shape) for b in base.buckets]
+    fine_shape, fine_size = base.fine_shape, base.fine_size
+    interpret, fused, dtype_policy = spec.interpret, spec.fused, spec.dtype
+
+    def _acc_dtype(parts):
+        if dtype_policy is not None:
+            return jnp.dtype(dtype_policy)
+        return jnp.result_type(*(p.dtype for p in parts))
+
+    def _assembled(parts):
+        off, xs = 0, []
+        for levels, perms, shape in metas:
+            xs.append(_assemble_members(parts[off:off + len(levels)],
+                                        perms, shape))
+            off += len(levels)
+        return xs
+
+    if not sharded:
+        def ingest(parts, idxs, coeffs):
+            dtype = _acc_dtype(parts)
+            full = jnp.zeros(fine_size + 1, dtype)   # +1: pad dump slot
+            for x, (levels, _, _), idx, cs in zip(_assembled(parts), metas,
+                                                  idxs, coeffs):
+                full = _gather_one_bucket(full, x, levels, idx,
+                                          cs.astype(dtype), fused=fused,
+                                          interpret=interpret)
+            return full[:-1].reshape(fine_shape)
+
+        return jax.jit(ingest)
+
+    if spec.mesh is None:
+        raise ValueError(
+            "a slab-sharded plan needs a meshed spec (ExecSpec(mesh=...)) "
+            "to execute; n_slabs alone only shapes the plan")
+    mesh, axis_name = spec.mesh, spec.axis_name
+    splan = plan
+
+    def ingest_sharded(parts, idxs, coeffs):
+        from repro.core.distributed import (gather_slab_scatter,
+                                            gather_slab_scatter_fused)
+        dtype = _acc_dtype(parts)
+        use_fused = fused
+        if use_fused is None:
+            use_fused = plan_fused_ok(splan, dtype)
+        elif use_fused:
+            use_fused = all(batched_method(shape) == "pallas"
+                            for _, _, shape in metas)
+        xs = _assembled(parts)
+        cs = [c.astype(dtype) for c in coeffs]
+        if use_fused:
+            tails = [_tail_transform(x, levels, interpret)
+                     for x, (levels, _, _) in zip(xs, metas)]
+            return gather_slab_scatter_fused(
+                tails, splan, mesh, axis_name, interpret=interpret,
+                idx_arrays=idxs, coeff_arrays=cs)
+        alphas = [hierarchize_batched(x, levels, interpret=interpret)
+                  .reshape(len(levels), -1)
+                  for x, (levels, _, _) in zip(xs, metas)]
+        return gather_slab_scatter(alphas, splan, mesh, axis_name,
+                                   idx_arrays=idxs, coeff_arrays=cs)
+
+    return jax.jit(ingest_sharded)
+
+
+def _ingest_executable(signature: Tuple, plan,
+                       spec: ExecSpec) -> Tuple[Callable, bool]:
+    """Fetch-or-build the shared executable; returns ``(fn, was_hit)``."""
+    fn = _INGEST_EXECUTABLES.get(signature)
+    if fn is not None:
+        _INGEST_EXECUTABLES.move_to_end(signature)
+        return fn, True
+    fn = _build_ingest_executable(plan, spec)
+    _INGEST_EXECUTABLES[signature] = fn
+    while len(_INGEST_EXECUTABLES) > _INGEST_CACHE_MAX:
+        _INGEST_EXECUTABLES.popitem(last=False)
+    return fn, False
+
+
+#: One process-global jitted batched eval: vmapped hat-basis contraction.
+#: jit caches one executable per (T, surplus shape, Q, dtypes); each
+#: query point is evaluated independently of its batch neighbors, so the
+#: T=1 row equals the unbatched eval BITWISE.
+_EVAL_BATCHED = jax.jit(jax.vmap(interpolate_hierarchical))
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class CTFuture:
+    """Result handle of ``submit_ingest`` / ``submit_query``.  ``result()``
+    flushes the owning engine's queue if the value is still pending, then
+    blocks on the device value.  A request that FAILED during ``flush``
+    stores its exception here and re-raises it from ``result()`` — one bad
+    request never drops the other queued requests of the same flush."""
+
+    __slots__ = ("_engine", "_payload", "_ready", "_error")
+
+    def __init__(self, engine: "CTEngine"):
+        self._engine = engine
+        self._payload = None
+        self._ready = False
+        self._error = False
+
+    def done(self) -> bool:
+        return self._ready
+
+    def _set(self, payload) -> None:
+        self._payload, self._ready = payload, True
+
+    def _set_error(self, exc: BaseException) -> None:
+        self._payload, self._ready, self._error = exc, True, True
+
+    def result(self):
+        if not self._ready:
+            self._engine.flush()
+        if not self._ready:
+            raise RuntimeError("future unresolved after flush (engine bug)")
+        if self._error:
+            raise self._payload
+        return self._payload() if callable(self._payload) else self._payload
+
+
+@dataclass
+class _Tenant:
+    """One named surrogate: scheme + plan + spec, plus the per-tenant
+    runtime arguments of the shared executable."""
+
+    name: str
+    scheme: SchemeLike
+    spec: ExecSpec
+    plan: Any                       # ExecutorPlan | ShardedPlan
+    signature: Tuple
+    executable: Callable
+    idxs: Tuple[jnp.ndarray, ...]
+    coeffs: Tuple[jnp.ndarray, ...]
+    surplus: Optional[jnp.ndarray] = None
+
+    @property
+    def base_plan(self) -> ExecutorPlan:
+        return self.plan.plan if isinstance(self.plan, ShardedPlan) \
+            else self.plan
+
+
+@dataclass
+class _Request:
+    """One queued unit of work.  Holds the tenant NAME, not the tenant
+    object: refit/extend/drop_grid atomically replace the ``_Tenant``
+    record, and unregister removes it — resolving by name at flush time
+    makes queued work apply to the tenant the engine serves THEN (or fail
+    its future if the name is gone), never to a stale orphan."""
+
+    kind: str                       # "ingest" | "query"
+    name: str
+    payload: Any                    # grids dict | (points (Q, d), q, qpad)
+    future: CTFuture
+
+
+def _tenant_arrays(plan) -> Tuple[Tuple[jnp.ndarray, ...],
+                                  Tuple[jnp.ndarray, ...]]:
+    """Upload a plan's index maps + coefficients once per (re)bind — the
+    runtime arguments that distinguish tenants sharing one executable."""
+    if isinstance(plan, ShardedPlan):
+        idxs = tuple(jnp.asarray(sb.index) for sb in plan.slab_buckets)
+        buckets = plan.plan.buckets
+    else:
+        idxs = tuple(jnp.asarray(b.index) for b in plan.buckets)
+        buckets = plan.buckets
+    coeffs = tuple(jnp.asarray(b.coeffs) for b in buckets)
+    return idxs, coeffs
+
+
+def _validate_points(points, dim: int, name: str) -> np.ndarray:
+    """Named errors for malformed query points — instead of a shape or
+    dtype failure deep inside the jitted eval."""
+    points = np.asarray(points)
+    if points.ndim == 1:
+        points = points[None, :]
+    if points.ndim != 2 or points.shape[1] != dim:
+        raise ValueError(
+            f"query points for tenant {name!r} must have shape (Q, {dim}) "
+            f"— the scheme is {dim}-dimensional — got {points.shape}")
+    if not np.issubdtype(points.dtype, np.floating):
+        raise TypeError(
+            f"query points for tenant {name!r} must be a floating dtype "
+            f"(coordinates in [0,1]^{dim}), got {points.dtype}")
+    return points
+
+
+def _qpad(q: int) -> int:
+    """Pad the batch extent to a power of two (>= 16) so varying batch
+    sizes compile once per bucket, not once per Q."""
+    return max(16, 1 << max(0, q - 1).bit_length())
+
+
+class CTEngine:
+    """Multi-tenant CT surrogate server (see the module docstring).
+
+    Single-controller, single-thread semantics: ``submit_*`` enqueue,
+    ``flush`` drains (ingests first — asynchronously dispatched, so their
+    compute overlaps the query batching — then one coalesced batched
+    eval dispatch per query signature).  The ingest-executable cache is
+    process-global; hit/miss counters are per engine.
+    """
+
+    def __init__(self, spec: Optional[ExecSpec] = None):
+        if spec is not None and not isinstance(spec, ExecSpec):
+            raise TypeError(f"CTEngine: spec must be an ExecSpec, got "
+                            f"{type(spec).__name__}")
+        self._default_spec = spec or ExecSpec()
+        self._tenants: Dict[str, _Tenant] = {}
+        self._pending: List[_Request] = []
+        self._counters = {"ingests": 0, "queries": 0, "eval_batches": 0,
+                          "coalesced_queries": 0, "cache_hits": 0,
+                          "cache_misses": 0}
+
+    # -- registry -----------------------------------------------------------
+
+    def register(self, name: str, scheme: SchemeLike, nodal_grids=None, *,
+                 spec: Optional[ExecSpec] = None) -> "CTEngine":
+        """Admit tenant ``name``: build its plan under ``spec`` (engine
+        default when omitted), bind the signature-shared executable, and
+        — when ``nodal_grids`` is given — ingest immediately."""
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already registered "
+                             f"(unregister first, or refit)")
+        if spec is not None and not isinstance(spec, ExecSpec):
+            raise TypeError(f"register: spec must be an ExecSpec, got "
+                            f"{type(spec).__name__}")
+        spec = spec or self._default_spec
+        plan = build_plan(scheme, spec=spec)
+        tenant = self._bind(name, scheme, spec, plan)
+        self._tenants[name] = tenant
+        if nodal_grids is not None:
+            try:
+                tenant.surplus = self._dispatch_ingest(tenant, nodal_grids)
+                self._counters["ingests"] += 1
+            except Exception:
+                del self._tenants[name]
+                raise
+        return self
+
+    def unregister(self, name: str) -> None:
+        del self._tenants[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._tenants
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._tenants)
+
+    def _tenant(self, name: str) -> _Tenant:
+        try:
+            return self._tenants[name]
+        except KeyError:
+            raise KeyError(f"no tenant {name!r} (registered: "
+                           f"{sorted(self._tenants)})") from None
+
+    def scheme(self, name: str) -> SchemeLike:
+        return self._tenant(name).scheme
+
+    def plan(self, name: str):
+        return self._tenant(name).plan
+
+    def spec(self, name: str) -> ExecSpec:
+        return self._tenant(name).spec
+
+    def surplus(self, name: str) -> jnp.ndarray:
+        """The tenant's served sparse-grid surplus (flushes if an ingest
+        for it is still queued)."""
+        t = self._tenant(name)
+        if any(r.name == name and r.kind == "ingest"
+               for r in self._pending):
+            self.flush()
+            t = self._tenant(name)
+        if t.surplus is None:
+            raise RuntimeError(f"tenant {name!r} has no ingested state yet")
+        return t.surplus
+
+    # -- executable binding -------------------------------------------------
+
+    def _bind(self, name: str, scheme: SchemeLike, spec: ExecSpec,
+              plan) -> _Tenant:
+        signature = plan_signature(plan, spec)
+        executable, hit = _ingest_executable(signature, plan, spec)
+        self._counters["cache_hits" if hit else "cache_misses"] += 1
+        idxs, coeffs = _tenant_arrays(plan)
+        return _Tenant(name=name, scheme=scheme, spec=spec, plan=plan,
+                       signature=signature, executable=executable,
+                       idxs=idxs, coeffs=coeffs)
+
+    def _dispatch_ingest(self, tenant: _Tenant, nodal_grids) -> jnp.ndarray:
+        base = tenant.base_plan
+        _check_nodal_grids(nodal_grids, base)
+        parts = tuple(jnp.asarray(nodal_grids[ell])
+                      for b in base.buckets for ell in b.ells)
+        return tenant.executable(parts, tenant.idxs, tenant.coeffs)
+
+    # -- continuous-batching queue ------------------------------------------
+
+    def submit_ingest(self, name: str, nodal_grids) -> CTFuture:
+        """Enqueue new solver output for ``name``; the future resolves to
+        the new surplus buffer at the next ``flush``."""
+        self._tenant(name)                      # raise early on a bad name
+        fut = CTFuture(self)
+        self._pending.append(_Request("ingest", name, nodal_grids, fut))
+        return fut
+
+    def submit_query(self, name: str, points) -> CTFuture:
+        """Enqueue a point-evaluation batch against ``name``'s surplus;
+        the future resolves to the (Q,) values at the next ``flush``.
+        Same-signature queries across tenants coalesce into one batched
+        dispatch."""
+        tenant = self._tenant(name)
+        points = _validate_points(points, tenant.base_plan.dim, name)
+        q = points.shape[0]
+        fut = CTFuture(self)
+        self._pending.append(
+            _Request("query", name, (points, q, _qpad(q)), fut))
+        return fut
+
+    def flush(self) -> None:
+        """Drain the queue: dispatch pending ingests (in submission
+        order, asynchronously), then one batched eval per query
+        signature.  Queries always evaluate against the tenant's LATEST
+        surplus, including ingests from the same flush.  A failing
+        request resolves ITS OWN future with the exception (re-raised by
+        ``result()``); the other queued requests proceed."""
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        for req in pending:
+            if req.kind != "ingest":
+                continue
+            tenant = self._tenants.get(req.name)
+            if tenant is None:
+                req.future._set_error(KeyError(
+                    f"tenant {req.name!r} was unregistered before its "
+                    f"queued ingest ran"))
+                continue
+            try:
+                surplus = self._dispatch_ingest(tenant, req.payload)
+            except Exception as exc:
+                req.future._set_error(exc)
+                continue
+            tenant.surplus = surplus
+            req.future._set(surplus)
+            self._counters["ingests"] += 1
+
+        # resolve query tenants by name NOW — after the ingests, and after
+        # any refit/extend/drop_grid that replaced tenant records since
+        # submission
+        groups: Dict[Tuple, List[Tuple[_Request, _Tenant]]] = {}
+        for req in pending:
+            if req.kind != "query":
+                continue
+            t = self._tenants.get(req.name)
+            if t is None:
+                req.future._set_error(KeyError(
+                    f"tenant {req.name!r} was unregistered before its "
+                    f"queued query ran"))
+                continue
+            if t.surplus is None:
+                req.future._set_error(RuntimeError(
+                    f"tenant {req.name!r} has no ingested state to query"))
+                continue
+            points, _, qpad = req.payload
+            key = (t.surplus.shape, str(t.surplus.dtype),
+                   str(points.dtype), qpad)
+            groups.setdefault(key, []).append((req, t))
+
+        for (_, _, pts_dtype, qpad), reqs in groups.items():
+            try:
+                surp = jnp.stack([t.surplus for _, t in reqs])
+                dim = reqs[0][1].base_plan.dim
+                padded = np.zeros((len(reqs), qpad, dim), pts_dtype)
+                for i, (r, _) in enumerate(reqs):
+                    points, q, _ = r.payload
+                    padded[i, :q] = points
+                out = _EVAL_BATCHED(surp, jnp.asarray(padded))
+            except Exception as exc:
+                for r, _ in reqs:
+                    r.future._set_error(exc)
+                continue
+            for i, (r, _) in enumerate(reqs):
+                q = r.payload[1]
+                r.future._set(
+                    lambda out=out, i=i, q=q: np.asarray(out[i, :q]))
+            self._counters["eval_batches"] += 1
+            self._counters["queries"] += len(reqs)
+            self._counters["coalesced_queries"] += len(reqs) - 1
+
+    # -- synchronous conveniences -------------------------------------------
+
+    def update(self, name: str, nodal_grids) -> jnp.ndarray:
+        """Synchronous re-ingest (same scheme: no retrace, no recompile)."""
+        fut = self.submit_ingest(name, nodal_grids)
+        self.flush()
+        return fut.result()
+
+    def query(self, name: str, points) -> np.ndarray:
+        """Synchronous point query (one-tenant batch)."""
+        fut = self.submit_query(name, points)
+        self.flush()
+        return fut.result()
+
+    # -- lifecycle: incremental plan paths per tenant -----------------------
+
+    def refit(self, name: str, scheme: SchemeLike, nodal_grids) -> None:
+        """Swap tenant ``name`` onto a (refined) scheme through the
+        incremental ``extend_plan`` path, re-binding the shared
+        executable (a signature-preserving refit recompiles nothing).  A
+        failing ingest raises BEFORE any tenant state mutates."""
+        tenant = self._tenant(name)
+        plan = extend_plan(tenant.plan, scheme, spec=tenant.spec)
+        self._commit(tenant, scheme, plan, nodal_grids)
+
+    def extend(self, name: str, new_levels, nodal_grids) -> None:
+        """Grow tenant ``name``'s downward-closed index set by
+        ``new_levels`` (adaptive-serving convenience over ``refit``)."""
+        tenant = self._tenant(name)
+        scheme = tenant.scheme
+        if not hasattr(scheme, "with_levels"):
+            scheme = scheme.as_general()
+        self.refit(name, scheme.with_levels(new_levels), nodal_grids)
+
+    def drop_grid(self, name: str, failed, nodal_grids) -> None:
+        """Serving-side fault recovery for one tenant: recombine without
+        grid(s) ``failed`` (``repro.runtime.fault_tolerance.
+        recombine_after_fault`` — coefficient-only when possible, so the
+        plan, its slab split and the bound executable are all reused).
+        Raises and leaves the tenant unchanged when the reduced scheme
+        needs data the caller did not supply."""
+        from repro.runtime.fault_tolerance import recombine_after_fault
+        tenant = self._tenant(name)
+        scheme, plan, _ = recombine_after_fault(tenant.scheme, failed,
+                                                plan=tenant.plan)
+        self._commit(tenant, scheme, plan, nodal_grids)
+
+    def _commit(self, tenant: _Tenant, scheme: SchemeLike, plan,
+                nodal_grids) -> None:
+        """Re-bind a tenant onto (scheme, plan) and ingest atomically."""
+        nxt = self._bind(tenant.name, scheme, tenant.spec, plan)
+        surplus = self._dispatch_ingest(nxt, nodal_grids)  # raises first
+        nxt.surplus = surplus
+        self._counters["ingests"] += 1
+        self._tenants[tenant.name] = nxt
+
+    # -- accounting ---------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        """Aggregated serving statistics: per-tenant and summed
+        ``plan_launch_stats`` (the plan-derived dispatch/HBM accounting
+        of ONE ingest), the shared compile-cache counters, and the
+        continuous-batching eval counters."""
+        per_tenant = {}
+        gather = {"buckets": 0, "members": 0, "launches": 0,
+                  "pallas_launches": 0, "einsum_dispatches": 0,
+                  "scatter_dispatches": 0, "transform_bytes": 0,
+                  "stack_bytes": 0}
+        for name, t in self._tenants.items():
+            s = plan_launch_stats(t.plan, fused=t.spec.fused)
+            per_tenant[name] = s
+            for k in gather:
+                gather[k] += s[k]
+        # count over the LIVE tenants' executables (dedup by identity) —
+        # an executable evicted from the LRU cache keeps serving its
+        # tenants and must keep being counted
+        uniq = {id(t.executable): t.executable
+                for t in self._tenants.values()}
+        jit_entries = sum(f._cache_size() for f in uniq.values())
+        return {
+            "tenants": len(self._tenants),
+            "per_tenant": per_tenant,
+            "gather": gather,
+            "ingests": self._counters["ingests"],
+            "ingest_cache": {
+                "entries": len(_INGEST_EXECUTABLES),
+                "hits": self._counters["cache_hits"],
+                "misses": self._counters["cache_misses"],
+                "jit_entries": jit_entries,
+            },
+            "eval": {
+                "queries": self._counters["queries"],
+                "batches": self._counters["eval_batches"],
+                "coalesced_queries": self._counters["coalesced_queries"],
+                "compiles": _EVAL_BATCHED._cache_size(),
+            },
+        }

@@ -86,6 +86,7 @@ classical ``CombinationScheme`` and the downward-closed ``GeneralScheme``
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
 from functools import lru_cache
 from typing import Dict, Mapping, Optional, Sequence, Tuple
@@ -106,6 +107,71 @@ __all__ = ["ExecutorPlan", "Bucket", "ShardedPlan", "SlabBucket",
            "ct_embedded", "ct_transform_with_plan", "ct_scatter_with_plan",
            "ct_embedded_with_plan", "bucket_surpluses",
            "bucket_tail_surpluses", "plan_fused_ok", "plan_launch_stats"]
+
+
+# ---------------------------------------------------------------------------
+# Legacy-kwarg deprecation shims (ExecSpec consolidation, PR 5)
+# ---------------------------------------------------------------------------
+
+#: (function name, sorted kwarg names) combinations already warned about —
+#: each legacy call-site family warns exactly ONCE per process.  Tests
+#: reset via ``repro.core.engine.reset_deprecation_warnings``.
+_WARNED_LEGACY: set = set()
+
+
+def warn_legacy_kwargs(fn_name: str, kwarg_names: Sequence[str]) -> None:
+    """One ``DeprecationWarning`` per (function, kwargs) combination: the
+    scattered execution kwargs (``merge=``, ``mesh=``, ``sharded_plan=``,
+    ``fused=``, ``interpret=``, ...) keep working but should be replaced
+    by one ``spec=repro.core.engine.ExecSpec(...)``."""
+    key = (fn_name, tuple(sorted(kwarg_names)))
+    if key in _WARNED_LEGACY:
+        return
+    _WARNED_LEGACY.add(key)
+    shown = ", ".join(f"{k}=" for k in sorted(kwarg_names))
+    warnings.warn(
+        f"{fn_name}: keyword(s) {shown} are deprecated; pass "
+        f"spec=repro.core.engine.ExecSpec(...) instead (the legacy "
+        f"keywords are folded into an ExecSpec and keep working)",
+        DeprecationWarning, stacklevel=3)
+
+
+def ensure_spec(fn_name: str, spec) -> None:
+    """Named ``TypeError`` when ``spec=`` receives a non-ExecSpec — the
+    API-redesign trap is an old POSITIONAL caller whose third argument
+    (e.g. ``CTSurrogate(scheme, grids, True)``, once ``interpret``) now
+    lands in ``spec`` and would otherwise die on an opaque attribute
+    error deep inside plan construction."""
+    from repro.core.engine import ExecSpec
+    if spec is not None and not isinstance(spec, ExecSpec):
+        raise TypeError(
+            f"{fn_name}: spec must be a repro.core.engine.ExecSpec, got "
+            f"{type(spec).__name__}; legacy options go in their (deprecated)"
+            f" keywords, e.g. interpret=..., not positionally")
+
+
+def resolve_spec(fn_name: str, spec, **legacy):
+    """Fold legacy execution kwargs into an ``ExecSpec`` (the deprecation
+    shim behind every consolidated entry point).
+
+    Precedence (documented in ``repro.core.engine``): an explicit
+    ``spec=`` is authoritative — combining it with a non-``None`` legacy
+    kwarg raises instead of guessing; legacy kwargs alone construct the
+    equivalent spec and warn once per call-site family."""
+    from repro.core.engine import ExecSpec
+    ensure_spec(fn_name, spec)
+    given = {k: v for k, v in legacy.items() if v is not None}
+    if spec is None:
+        spec = ExecSpec()
+    elif given:
+        shown = ", ".join(f"{k}=" for k in sorted(given))
+        raise ValueError(
+            f"{fn_name}: pass either spec= or the legacy keyword(s) "
+            f"{shown}, not both (fold them into the ExecSpec)")
+    if given:
+        warn_legacy_kwargs(fn_name, tuple(given))
+        spec = dataclasses.replace(spec, **given)
+    return spec
 
 
 @dataclass(frozen=True)
@@ -255,15 +321,25 @@ def _shard_bucket(bucket: Bucket, full_levels: LevelVector, n_slabs: int,
     return SlabBucket(index=index, row_ranges=ranges)
 
 
-def shard_plan(plan: ExecutorPlan, n_slabs: int,
-               old: Optional["ShardedPlan"] = None) -> ShardedPlan:
+def shard_plan(plan: ExecutorPlan, n_slabs: Optional[int] = None,
+               old: Optional["ShardedPlan"] = None, *,
+               spec=None) -> ShardedPlan:
     """Slab-shard a plan for ``n_slabs`` device groups.
 
     ``old`` (a prior sharding, e.g. before an incremental rebuild) lets
     buckets whose base ``index`` array survived BY IDENTITY reuse their
     slab split unchanged — the sharded analogue of ``extend_plan``'s
-    bucket reuse.
+    bucket reuse.  ``n_slabs`` may instead come from a
+    ``repro.core.engine.ExecSpec`` (``spec.slabs``: an explicit
+    ``n_slabs`` field, else the mesh axis extent).
     """
+    if spec is not None:
+        ensure_spec("shard_plan", spec)
+        if n_slabs is not None:
+            raise ValueError("shard_plan: pass n_slabs or spec, not both")
+        n_slabs = spec.slabs
+    if n_slabs is None:
+        raise ValueError("shard_plan: n_slabs (or a sharded spec) required")
     if isinstance(plan, ShardedPlan):
         raise TypeError("shard_plan expects the unsharded base plan")
     if n_slabs < 1:
@@ -471,7 +547,8 @@ def _make_bucket(members: list, full_levels: LevelVector,
 
 def build_plan(scheme: SchemeLike,
                full_levels: Optional[Sequence[int]] = None, *,
-               merge: Optional[MergeConfig] = None) -> ExecutorPlan:
+               merge: Optional[MergeConfig] = None,
+               spec=None) -> ExecutorPlan:
     """Bucket (and optionally merge-plan) the scheme's grids and
     precompute the embed index plan.
 
@@ -479,12 +556,24 @@ def build_plan(scheme: SchemeLike,
     sequences -> int tuple) BEFORE the cache key is formed, so equivalent
     calls share one lru_cache entry; ``merge`` (the bucket-merging cost
     model, hashable) is part of the key — merged and unmerged plans of
-    one scheme coexist in the cache.
+    one scheme coexist in the cache.  ``spec`` (a ``repro.core.engine.
+    ExecSpec``) supplies ``merge`` instead — and, when the spec is
+    sharded, makes this return the slab-sharded ``ShardedPlan`` directly
+    (``build_plan(scheme, spec=spec)`` is the one-call plan constructor
+    of the consolidated API).
     """
+    if spec is not None:
+        ensure_spec("build_plan", spec)
+        if merge is not None:
+            raise ValueError("build_plan: pass merge or spec, not both")
+        merge = spec.merge
     if full_levels is None:
         full_levels = fine_levels(scheme)
-    return _build_plan_cached(scheme, tuple(int(l) for l in full_levels),
+    plan = _build_plan_cached(scheme, tuple(int(l) for l in full_levels),
                               merge)
+    if spec is not None and spec.slabs > 1:
+        plan = shard_plan(plan, spec.slabs)
+    return plan
 
 
 @lru_cache(maxsize=64)
@@ -504,7 +593,8 @@ def _build_plan_cached(scheme: SchemeLike, full_levels: LevelVector,
 
 
 def extend_plan(plan: ExecutorPlan, scheme: SchemeLike,
-                full_levels: Optional[Sequence[int]] = None) -> ExecutorPlan:
+                full_levels: Optional[Sequence[int]] = None, *,
+                spec=None) -> ExecutorPlan:
     """Incremental plan rebuild after the scheme's index set changed.
 
     Produces exactly ``build_plan(scheme, full_levels, merge=plan.merge)``
@@ -519,6 +609,23 @@ def extend_plan(plan: ExecutorPlan, scheme: SchemeLike,
     ``build_plan`` when the fine grid itself changed, since then every
     embed index is stale.
     """
+    if spec is not None:
+        ensure_spec("extend_plan", spec)
+        plan_slabs = plan.n_slabs if isinstance(plan, ShardedPlan) else 1
+        if (spec.n_slabs is not None or spec.mesh is not None) \
+                and spec.slabs != plan_slabs:
+            raise ValueError(
+                f"extend_plan: spec requests {spec.slabs} slab(s) but the "
+                f"plan is sharded for {plan_slabs}; re-shard explicitly "
+                f"(shard_plan) instead of extending across layouts")
+    if spec is not None and spec.merge != plan.merge:
+        # an overriding merge model re-partitions below; the buckets (and
+        # any slab split) stay valid until _segment_member_lists runs
+        if isinstance(plan, ShardedPlan):
+            plan = dataclasses.replace(
+                plan, plan=dataclasses.replace(plan.plan, merge=spec.merge))
+        else:
+            plan = dataclasses.replace(plan, merge=spec.merge)
     if isinstance(plan, ShardedPlan):
         return shard_plan(extend_plan(plan.plan, scheme, full_levels),
                           plan.n_slabs, old=plan)
@@ -611,35 +718,58 @@ def _check_nodal_grids(nodal_grids: Mapping[LevelVector, jnp.ndarray],
             f"level vector(s) {shown}{more}")
 
 
+def _assemble_members(parts: Sequence[jnp.ndarray],
+                      perms: Sequence[Tuple[int, ...]],
+                      shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Stack one bucket's member grids (given in bucket order): transpose
+    to canonical order, zero-pad to the bucket target shape (pad values
+    never reach the fine buffer — the index plan routes them to the dump
+    slot).  Shared by the plan-driven gather and the engine's
+    signature-shared executables, so both trace the same ops."""
+    out = []
+    for part, perm in zip(parts, perms):
+        g = jnp.transpose(jnp.asarray(part), perm)
+        pad = [(0, t - s) for t, s in zip(shape, g.shape)]
+        out.append(jnp.pad(g, pad))
+    return jnp.stack(out)
+
+
 def _assemble_bucket(nodal_grids: Mapping[LevelVector, jnp.ndarray],
                      bucket: Bucket) -> jnp.ndarray:
-    """Stack a bucket's grids: transpose to canonical order, zero-pad to
-    the bucket target shape (pad values never reach the fine buffer — the
-    index plan routes them to the dump slot)."""
-    shape = bucket.shape
-    parts = []
-    for ell, perm in zip(bucket.ells, bucket.perms):
-        g = jnp.transpose(jnp.asarray(nodal_grids[ell]), perm)
-        pad = [(0, t - s) for t, s in zip(shape, g.shape)]
-        parts.append(jnp.pad(g, pad))
-    return jnp.stack(parts)
+    """``_assemble_members`` with the members read out of the nodal dict."""
+    return _assemble_members([nodal_grids[ell] for ell in bucket.ells],
+                             bucket.perms, bucket.shape)
 
 
 def ct_transform(nodal_grids: Mapping[LevelVector, jnp.ndarray],
                  scheme: SchemeLike, *,
                  full_levels: Optional[Sequence[int]] = None,
                  interpret: Optional[bool] = None,
-                 merge: Optional[MergeConfig] = None) -> jnp.ndarray:
+                 merge: Optional[MergeConfig] = None,
+                 spec=None) -> jnp.ndarray:
     """Gather phase, batched: nodal component grids -> sparse-grid surplus
     on the common fine grid.  Equals hierarchize-per-grid + ``combine_full``
-    to machine precision, in one jittable computation.  ``merge`` opts
-    into cost-model-driven bucket merging (bit-identical result, fewer
-    kernel launches).
+    to machine precision, in one jittable computation.
+
+    THE front-door transform of the consolidated API: ``spec`` (a
+    ``repro.core.engine.ExecSpec``) carries every execution policy —
+    ``spec.merge`` opts into cost-model-driven bucket merging
+    (bit-identical result, fewer kernel launches), a meshed spec routes
+    through the slab-sharded multi-device gather
+    (``repro.core.distributed.ct_transform_sharded``).  The bare
+    ``interpret``/``merge`` kwargs remain as deprecation shims.
     """
+    spec = resolve_spec("ct_transform", spec,
+                        interpret=interpret, merge=merge)
+    if spec.mesh is not None:
+        from repro.core.distributed import ct_transform_sharded
+        return ct_transform_sharded(nodal_grids, scheme, spec.mesh,
+                                    spec.axis_name, full_levels=full_levels,
+                                    spec=dataclasses.replace(spec, mesh=None))
     return ct_transform_with_plan(nodal_grids,
                                   build_plan(scheme, full_levels,
-                                             merge=merge),
-                                  interpret=interpret)
+                                             merge=spec.merge),
+                                  interpret=spec.interpret, fused=spec.fused)
 
 
 def bucket_surpluses(nodal_grids: Mapping[LevelVector, jnp.ndarray],
@@ -661,7 +791,8 @@ def bucket_surpluses(nodal_grids: Mapping[LevelVector, jnp.ndarray],
     return tuple(out)
 
 
-def _tail_transform(x: jnp.ndarray, bucket: Bucket,
+def _tail_transform(x: jnp.ndarray,
+                    member_levels: Tuple[LevelVector, ...],
                     interpret: Optional[bool]) -> jnp.ndarray:
     """Tail phase of the batched Pallas path: axes 1..d-1 transformed,
     axis 0 still nodal, trailing axes flattened to ``(G, N0, B)`` — the
@@ -669,7 +800,7 @@ def _tail_transform(x: jnp.ndarray, bucket: Bucket,
     g = x.shape[0]
     if x.ndim == 2:                       # 1-D bucket: no tail axes
         return x[:, :, None]
-    y = hier_tail_batched_pallas(x, bucket.levels, interpret=interpret)
+    y = hier_tail_batched_pallas(x, member_levels, interpret=interpret)
     return y.reshape(g, y.shape[1], -1)
 
 
@@ -685,7 +816,7 @@ def bucket_tail_surpluses(nodal_grids: Mapping[LevelVector, jnp.ndarray],
     if isinstance(plan, ShardedPlan):
         plan = plan.plan
     _check_nodal_grids(nodal_grids, plan)
-    return tuple(_tail_transform(_assemble_bucket(nodal_grids, b), b,
+    return tuple(_tail_transform(_assemble_bucket(nodal_grids, b), b.levels,
                                  interpret)
                  for b in plan.buckets)
 
@@ -697,17 +828,48 @@ def bucket_tail_surpluses(nodal_grids: Mapping[LevelVector, jnp.ndarray],
 _FUSED_OUT_BUDGET_BYTES = 8 * 1024 * 1024
 
 
-def _fuse_bucket(bucket: Bucket, out_elems: int, itemsize: int,
-                 fused: Optional[bool]) -> bool:
-    """Per-bucket fused-epilogue decision: ``None`` = auto (Pallas-path
-    bucket AND fine buffer within the VMEM budget), ``True`` forces the
-    epilogue wherever the kernel supports it (jnp-path buckets always
-    fall back), ``False`` disables."""
-    if fused is False or batched_method(bucket.shape) != "pallas":
+def _fuse_shape(shape: Tuple[int, ...], out_elems: int, itemsize: int,
+                fused: Optional[bool]) -> bool:
+    """Per-bucket fused-epilogue decision from the canonical (padded)
+    bucket shape: ``None`` = auto (Pallas-path bucket AND fine buffer
+    within the VMEM budget), ``True`` forces the epilogue wherever the
+    kernel supports it (jnp-path buckets always fall back), ``False``
+    disables."""
+    if fused is False or batched_method(shape) != "pallas":
         return False
     if fused is None and out_elems * itemsize > _FUSED_OUT_BUDGET_BYTES:
         return False
     return True
+
+
+def _fuse_bucket(bucket: Bucket, out_elems: int, itemsize: int,
+                 fused: Optional[bool]) -> bool:
+    return _fuse_shape(bucket.shape, out_elems, itemsize, fused)
+
+
+def _gather_one_bucket(full: jnp.ndarray, x: jnp.ndarray,
+                       member_levels: Tuple[LevelVector, ...],
+                       idx, cs, *, fused: Optional[bool],
+                       interpret: Optional[bool]) -> jnp.ndarray:
+    """Accumulate one assembled bucket stack ``x`` (G members, canonical
+    padded shape) into the flat fine buffer ``full`` (+1 dump slot).
+
+    ``idx`` (the (G, P) embed index map) and ``cs`` (the (G,) combination
+    coefficients, already in ``full.dtype``) may be numpy plan constants
+    OR traced jit arguments — the engine's signature-shared executables
+    pass them as arguments so tenants with equal bucket signatures share
+    one compilation; both spellings trace the same ops, so results are
+    bit-identical either way."""
+    g = len(member_levels)
+    if _fuse_shape(x.shape[1:], full.shape[0],
+                   jnp.dtype(full.dtype).itemsize, fused):
+        y = _tail_transform(x, member_levels, interpret)
+        idx = jnp.asarray(idx).reshape((g,) + y.shape[1:])
+        return hier_axis0_scatter_batched_pallas(
+            y, [lv[0] for lv in member_levels], cs, idx, full,
+            interpret=interpret)
+    alpha = hierarchize_batched(x, member_levels, interpret=interpret)
+    return full.at[jnp.asarray(idx)].add(cs[:, None] * alpha.reshape(g, -1))
 
 
 def plan_fused_ok(plan: ExecutorPlan, dtype=jnp.float64,
@@ -730,12 +892,16 @@ def plan_fused_ok(plan: ExecutorPlan, dtype=jnp.float64,
 def ct_transform_with_plan(nodal_grids: Mapping[LevelVector, jnp.ndarray],
                            plan: ExecutorPlan, *,
                            interpret: Optional[bool] = None,
-                           fused: Optional[bool] = None) -> jnp.ndarray:
+                           fused: Optional[bool] = None,
+                           spec=None) -> jnp.ndarray:
     """``ct_transform`` against an explicit (possibly incrementally rebuilt)
     plan — the adaptive-refinement / fault-recovery entry point.  A
     ``ShardedPlan`` is accepted and runs through its base plan (the
     single-device fallback; the multi-device execution lives in
-    ``repro.core.distributed.ct_transform_sharded``).
+    ``repro.core.distributed.ct_transform_sharded``).  ``spec`` (a
+    ``repro.core.engine.ExecSpec``) supplies ``interpret``/``fused``
+    instead of the bare kwargs; a MESHED spec routes the sharded plan
+    through the slab-sharded gather.
 
     Pallas-path buckets run the FUSED scatter-add epilogue by default
     (``fused=None``; see ``_fuse_bucket`` for the auto rule): the axis-0
@@ -744,44 +910,55 @@ def ct_transform_with_plan(nodal_grids: Mapping[LevelVector, jnp.ndarray],
     ``(G, P)`` compact stack never round-trips through HBM.  Fused and
     unfused accumulate per fine slot in the same member order (a left
     fold), so the results are bit-identical."""
+    if spec is not None:
+        ensure_spec("ct_transform_with_plan", spec)
+        if interpret is not None or fused is not None:
+            raise ValueError("ct_transform_with_plan: pass spec or the "
+                             "bare interpret/fused kwargs, not both")
+        interpret, fused = spec.interpret, spec.fused
+        if spec.mesh is not None:
+            if not isinstance(plan, ShardedPlan):
+                raise ValueError(
+                    "ct_transform_with_plan: spec has a mesh but the plan "
+                    "is not slab-sharded — build it with build_plan(scheme, "
+                    "spec=spec) (or shard_plan) so the multi-device gather "
+                    "can run; a meshed spec never silently degrades to the "
+                    "single-device path")
+            from repro.core.distributed import ct_transform_sharded
+            return ct_transform_sharded(nodal_grids, None, spec.mesh,
+                                        spec.axis_name, plan=plan,
+                                        spec=dataclasses.replace(spec,
+                                                                 mesh=None))
     if isinstance(plan, ShardedPlan):
         plan = plan.plan
     _check_nodal_grids(nodal_grids, plan)
     dtype = jnp.result_type(*(jnp.asarray(nodal_grids[ell]).dtype
                               for b in plan.buckets for ell in b.ells))
-    itemsize = jnp.dtype(dtype).itemsize
     full = jnp.zeros(plan.fine_size + 1, dtype)   # +1: pad dump slot
     for bucket in plan.buckets:
-        g = len(bucket.ells)
         x = _assemble_bucket(nodal_grids, bucket)
-        if _fuse_bucket(bucket, plan.fine_size + 1, itemsize, fused):
-            y = _tail_transform(x, bucket, interpret)
-            idx = bucket.index.reshape((g,) + y.shape[1:])
-            full = hier_axis0_scatter_batched_pallas(
-                y, [lv[0] for lv in bucket.levels],
-                jnp.asarray(bucket.coeffs, dtype), idx, full,
-                interpret=interpret)
-        else:
-            alpha = hierarchize_batched(x, bucket.levels,
-                                        interpret=interpret)
-            contrib = (jnp.asarray(bucket.coeffs, dtype)[:, None]
-                       * alpha.reshape(g, -1))
-            full = full.at[jnp.asarray(bucket.index)].add(contrib)
+        full = _gather_one_bucket(full, x, bucket.levels, bucket.index,
+                                  jnp.asarray(bucket.coeffs, dtype),
+                                  fused=fused, interpret=interpret)
     return full[:-1].reshape(plan.fine_shape)
 
 
 def ct_scatter(full: jnp.ndarray, scheme: SchemeLike, *,
                full_levels: Optional[Sequence[int]] = None,
                interpret: Optional[bool] = None,
-               merge: Optional[MergeConfig] = None
-               ) -> Dict[LevelVector, jnp.ndarray]:
+               merge: Optional[MergeConfig] = None,
+               spec=None) -> Dict[LevelVector, jnp.ndarray]:
     """Scatter phase, batched: sparse-grid surplus -> nodal values of the
     combined solution on every component grid (truncating projection +
     batched dehierarchization; inverse-direction read of the index plan).
+    ``spec`` consolidates the execution kwargs; the bare
+    ``interpret``/``merge`` remain as deprecation shims.
     """
+    spec = resolve_spec("ct_scatter", spec, interpret=interpret, merge=merge)
     return ct_scatter_with_plan(full,
-                                build_plan(scheme, full_levels, merge=merge),
-                                interpret=interpret)
+                                build_plan(scheme, full_levels,
+                                           merge=spec.merge),
+                                interpret=spec.interpret)
 
 
 def ct_scatter_with_plan(full: jnp.ndarray, plan: ExecutorPlan, *,
@@ -810,7 +987,8 @@ def ct_scatter_with_plan(full: jnp.ndarray, plan: ExecutorPlan, *,
 def ct_embedded(nodal_grids: Mapping[LevelVector, jnp.ndarray],
                 scheme: SchemeLike, *,
                 full_levels: Optional[Sequence[int]] = None,
-                interpret: Optional[bool] = None
+                interpret: Optional[bool] = None,
+                spec=None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray, Tuple[LevelVector, ...]]:
     """Per-grid UNWEIGHTED embedded surpluses, batched: the distributed
     gather input (``core.distributed.ct_transform_psum`` psums
@@ -818,8 +996,11 @@ def ct_embedded(nodal_grids: Mapping[LevelVector, jnp.ndarray],
 
     Returns ``(embedded (G, *fine_shape), coeffs (G,), grid order)``.
     """
-    return ct_embedded_with_plan(nodal_grids, build_plan(scheme, full_levels),
-                                 interpret=interpret)
+    spec = resolve_spec("ct_embedded", spec, interpret=interpret)
+    return ct_embedded_with_plan(nodal_grids,
+                                 build_plan(scheme, full_levels,
+                                            merge=spec.merge),
+                                 interpret=spec.interpret)
 
 
 def ct_embedded_with_plan(nodal_grids: Mapping[LevelVector, jnp.ndarray],

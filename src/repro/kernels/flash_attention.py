@@ -32,8 +32,7 @@ __all__ = ["flash_attention", "flash_attention_bhsd"]
 _NEG_INF = -1e30
 
 
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.hierarchize import interpret_default as _interpret_default
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,

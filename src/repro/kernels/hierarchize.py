@@ -107,8 +107,16 @@ def _pallas_call(*args, **kwargs):
     return pl.pallas_call(*args, **kwargs)
 
 
-def _interpret_default() -> bool:
+def interpret_default() -> bool:
+    """THE interpret-mode default: Pallas kernels run in interpret mode
+    everywhere except on real TPU.  Single resolution site for the whole
+    repo (kernels, executor, ``repro.core.engine.ExecSpec``) — an
+    ``interpret=None`` anywhere means "ask this helper at execution
+    time", so the decision is never frozen into a config object."""
     return jax.default_backend() != "tpu"
+
+
+_interpret_default = interpret_default
 
 
 def _level_of(n: int) -> int:

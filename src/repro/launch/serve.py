@@ -85,104 +85,89 @@ def generate(sc: ServeConfig, prompts: np.ndarray,
 class CTSurrogate:
     """Sparse-grid surrogate server: solve once, answer point queries fast.
 
+    A THIN single-tenant view over ``repro.core.engine.CTEngine`` — the
+    surrogate registers itself as one named tenant and delegates ingest,
+    queries and lifecycle to the engine, so its jitted ingest executable
+    is automatically DEDUPED (process-wide) with every other surrogate or
+    engine tenant sharing its plan shape-signature.  Serving many schemes
+    side by side, or overlapping ingest with query traffic through the
+    continuous-batching queue, is the engine's job; this class keeps the
+    one-scheme convenience API.
+
     The CT workload's serving shape: a solver produces nodal values on
     every component grid; queries arrive as batches of points in [0,1]^d.
-    The transform runs ONCE at ingest (``repro.core.executor.ct_transform``
-    via ``make_ct_step`` — one jitted call, no per-grid dispatch), queries
-    hit only the cached surplus buffer through the jitted evaluation step,
-    so steady-state latency is a single interpolation kernel.
+    The transform runs ONCE at ingest (one jitted call, no per-grid
+    dispatch); queries hit only the cached surplus buffer through the
+    engine's batched evaluation, so steady-state latency is a single
+    interpolation kernel.
 
     Accepts the classical ``CombinationScheme`` or a downward-closed
     ``GeneralScheme`` (adaptive index sets, ``repro.core.adaptive``) —
     the executor plan is scheme-shape-keyed either way.  ``refit`` swaps
-    in a refined scheme (new jitted ingest, new plan); ``drop_grid`` is
-    the serving-side fault hook: coefficients are recomputed by
-    inclusion-exclusion while every bucket and index map of the live plan
-    is kept, so recovery costs one re-ingest, not a plan rebuild.
+    in a refined scheme through the incremental ``extend_plan`` path;
+    ``drop_grid`` is the serving-side fault hook: coefficients are
+    recomputed by inclusion-exclusion while every bucket and index map of
+    the live plan is kept, so recovery costs one re-ingest, not a plan
+    rebuild (and, because index maps and coefficients are executable
+    ARGUMENTS, usually not even a recompile).
 
-    Opt-in multi-device ingest: pass ``mesh=`` (and ``axis_name=``, default
-    ``"slab"``) to run the gather slab-sharded over the mesh axis
-    (``repro.core.distributed.ct_transform_sharded``) — per-device embedded
-    memory is ``fine_size / n_devices`` instead of ``G * fine_size``; the
-    served surplus buffer itself stays replicated, so the query path is
-    unchanged.  ``refit`` and ``drop_grid`` re-shard the plan
-    incrementally (slab index maps of surviving buckets are reused by
-    identity).
-
-    ``merge=`` (a ``repro.core.executor.MergeConfig``) turns on
-    cost-model-driven bucket merging for the ingest plan — fewer kernel
-    launches per ingest on wide-diagonal schemes, with bit-identical
-    surpluses; the merge decision survives ``refit`` / ``drop_grid``
-    (incremental rebuilds re-apply it).  Pallas-path buckets ingest
-    through the fused scatter-add epilogue automatically (single-device
-    and sharded alike).
+    Execution policy comes as one ``spec=repro.core.engine.ExecSpec``:
+    ``ExecSpec(mesh=...)`` runs the ingest slab-sharded over the mesh
+    axis (per-device embedded memory ``fine_size / n_devices``; the
+    served surplus stays replicated, so the query path is unchanged),
+    ``ExecSpec(merge=...)`` turns on cost-model-driven bucket merging,
+    and both survive ``refit`` / ``drop_grid`` through the incremental
+    rebuilds.  The pre-ExecSpec keywords (``interpret=``, ``mesh=``,
+    ``axis_name=``, ``merge=``) keep working as deprecation shims that
+    fold into a spec and warn once.
     """
 
-    _shared_eval = None   # one jitted eval across all surrogate instances
-
-    def __init__(self, scheme, nodal_grids,
+    def __init__(self, scheme, nodal_grids, spec=None, *,
+                 engine=None, name: str = "surrogate",
                  interpret: Optional[bool] = None,
-                 mesh=None, axis_name: str = "slab", merge=None):
-        from repro.core.interpolation import interpolate_hierarchical
-        self.scheme = scheme
-        self._interpret = interpret
-        self._mesh, self._axis_name = mesh, axis_name
-        self._merge = merge
-        self._plan = self._build_plan(scheme)
-        self._ingest = self._make_ingest(self._plan, scheme)
-        self._surplus = self._ingest(nodal_grids)
-        if CTSurrogate._shared_eval is None:
-            CTSurrogate._shared_eval = jax.jit(interpolate_hierarchical)
-        self._eval = CTSurrogate._shared_eval
+                 mesh=None, axis_name: Optional[str] = None, merge=None):
+        from repro.core.engine import CTEngine
+        from repro.core.executor import resolve_spec
+        spec = resolve_spec("CTSurrogate", spec, interpret=interpret,
+                            mesh=mesh, axis_name=axis_name, merge=merge)
+        self._engine = engine if engine is not None else CTEngine()
+        self._name = name
+        self._engine.register(name, scheme, nodal_grids, spec=spec)
 
-    def _build_plan(self, scheme):
-        from repro.core.executor import build_plan, shard_plan
-        plan = build_plan(scheme, merge=self._merge)
-        if self._mesh is None:
-            return plan
-        return shard_plan(plan, self._mesh.shape[self._axis_name])
+    @property
+    def engine(self):
+        """The backing (possibly shared) ``CTEngine``."""
+        return self._engine
 
-    def _make_ingest(self, plan, scheme):
-        """One jitted ingest bound to an explicit plan + the scheme it was
-        built from (passed in, NOT read off self — refit/drop_grid rebind
-        the ingest before mutating state): single-device
-        ``ct_transform_with_plan`` or the slab-sharded gather (both pick
-        the fused scatter-add epilogue when the plan supports it)."""
-        from repro.core.executor import ct_transform_with_plan
-        interpret = self._interpret
-        if self._mesh is None:
-            return jax.jit(lambda grids: ct_transform_with_plan(
-                grids, plan, interpret=interpret))
-        from repro.core.distributed import ct_transform_sharded
-        mesh, axis_name = self._mesh, self._axis_name
+    @property
+    def scheme(self):
+        return self._engine.scheme(self._name)
 
-        def ingest(grids):
-            return ct_transform_sharded(grids, scheme, mesh, axis_name,
-                                        sharded_plan=plan,
-                                        interpret=interpret)
+    @property
+    def _plan(self):
+        return self._engine.plan(self._name)
 
-        return jax.jit(ingest)
+    @property
+    def _ingest(self):
+        """The signature-shared jitted ingest executable (exposed for
+        retrace accounting in tests)."""
+        return self._engine._tenant(self._name).executable
 
     @property
     def surplus(self) -> jnp.ndarray:
         """Sparse-grid surplus on the common fine grid (the served state)."""
-        return self._surplus
+        return self._engine.surplus(self._name)
 
     def update(self, nodal_grids) -> None:
         """Re-ingest new solver output (same scheme: no retrace)."""
-        self._surplus = self._ingest(nodal_grids)
+        self._engine.update(self._name, nodal_grids)
 
     def refit(self, scheme, nodal_grids) -> None:
-        """Swap in a (refined) scheme: rebinds the jitted ingest step and
-        re-ingests.  Queries keep hitting the shared jitted eval.  A
-        failing ingest (e.g. ``nodal_grids`` missing a grid of the new
-        scheme) raises before any state mutates."""
-        from repro.core.executor import extend_plan
-        plan = extend_plan(self._plan, scheme)
-        ingest = self._make_ingest(plan, scheme)
-        surplus = ingest(nodal_grids)
-        self.scheme, self._plan = scheme, plan
-        self._ingest, self._surplus = ingest, surplus
+        """Swap in a (refined) scheme through the engine's incremental
+        ``extend_plan`` path.  A failing ingest (e.g. ``nodal_grids``
+        missing a grid of the new scheme) raises before any state
+        mutates."""
+        self._engine.refit(self._name, scheme, nodal_grids)
 
     def drop_grid(self, failed, nodal_grids) -> None:
         """Serving-side fault recovery: recombine without grid(s)
@@ -193,31 +178,20 @@ class CTSurrogate:
         reduction activates a previously coefficient-0 grid (the classic
         (2,2)-drop case), ``nodal_grids`` must also supply that grid's
         data; a missing grid raises ``ValueError`` and leaves the
-        surrogate unchanged.  On success the ingest step is rebound to the
-        post-fault plan — on a mesh, to the incrementally re-sharded plan
-        (untouched slab index maps reused by identity) — so later
-        ``update`` calls recombine with the reduced coefficients (and keep
-        tolerating the dead grids' stale entries in the dict)."""
-        from repro.runtime.fault_tolerance import recombine_after_fault
-        scheme, plan, _ = recombine_after_fault(self.scheme, failed,
-                                                plan=self._plan)
-        ingest = self._make_ingest(plan, scheme)
-        surplus = ingest(nodal_grids)   # raises before any state mutates
-        self.scheme, self._plan = scheme, plan
-        self._ingest, self._surplus = ingest, surplus
+        surrogate unchanged.  On success later ``update`` calls recombine
+        with the reduced coefficients (and keep tolerating the dead
+        grids' stale entries in the dict); on a mesh the plan re-shards
+        incrementally (untouched slab index maps reused by identity)."""
+        self._engine.drop_grid(self._name, failed, nodal_grids)
 
     def query(self, points: np.ndarray) -> np.ndarray:
         """points: (Q, d) in [0,1]^d -> combined-interpolant values (Q,).
 
-        Q is padded up to a power of two before hitting the jitted eval so
-        varying batch sizes compile once per bucket, not once per Q."""
-        points = np.asarray(points)
-        q = points.shape[0]
-        qpad = max(16, 1 << (q - 1).bit_length())
-        padded = np.zeros((qpad, points.shape[1]), points.dtype)
-        padded[:q] = points
-        out = self._eval(self._surplus, jnp.asarray(padded))
-        return np.asarray(out)[:q]
+        Point dimensionality and dtype are validated HERE with a named
+        error (not deep inside the jitted eval); Q is padded up to a
+        power of two before dispatch so varying batch sizes compile once
+        per bucket, not once per Q."""
+        return self._engine.query(self._name, points)
 
 
 def main(argv=None):

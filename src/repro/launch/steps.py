@@ -80,7 +80,7 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
 
 
 def make_ct_step(scheme, *, interpret: bool | None = None,
-                 merge=None) -> Callable:
+                 merge=None, spec=None) -> Callable:
     """ONE jitted function for the whole CT communication phase:
     ``{ell: nodal}`` -> sparse-grid surplus on the common fine grid.
 
@@ -88,32 +88,52 @@ def make_ct_step(scheme, *, interpret: bool | None = None,
     ``GeneralScheme`` (both hashable) — is bound at closure time, so the
     executor's bucket plan and index maps are trace-time constants:
     re-calling with new grid VALUES never retraces (one jit cache entry
-    per scheme shape signature).  ``merge`` (a ``repro.core.executor.
-    MergeConfig``) opts the bound plan into cost-model-driven bucket
-    merging — fewer launches per step, bit-identical surpluses.
+    per scheme shape signature).  ``spec`` (a ``repro.core.engine.
+    ExecSpec``) consolidates the execution policy — ``spec.merge`` opts
+    the bound plan into cost-model-driven bucket merging (fewer launches
+    per step, bit-identical surpluses); the bare ``interpret``/``merge``
+    kwargs remain as deprecation shims.  For steps DEDUPED across many
+    schemes by shape signature, serve through ``repro.core.engine.
+    CTEngine`` instead — this helper compiles per scheme.
     """
-    from repro.core.executor import build_plan, ct_transform_with_plan
-    plan = build_plan(scheme, merge=merge)
-
-    @jax.jit
-    def step(nodal_grids):
-        return ct_transform_with_plan(nodal_grids, plan, interpret=interpret)
-
-    return step
+    from repro.core.executor import resolve_spec
+    spec = resolve_spec("make_ct_step", spec, interpret=interpret,
+                        merge=merge)
+    return jax.jit(_bind_ct_transform(scheme, spec))
 
 
 def make_ct_eval_step(scheme, *, interpret: bool | None = None,
-                      merge=None) -> Callable:
+                      merge=None, spec=None) -> Callable:
     """Jitted CT surrogate evaluation: ``({ell: nodal}, points (Q, d))`` ->
     combined-interpolant values (Q,) — transform + hierarchical-basis
-    evaluation fused into one computation (the serving hot path)."""
-    from repro.core.executor import build_plan, ct_transform_with_plan
+    evaluation fused into one computation (the serving hot path).
+    ``spec``/legacy-kwarg semantics as in ``make_ct_step``."""
+    from repro.core.executor import resolve_spec
     from repro.core.interpolation import interpolate_hierarchical
-    plan = build_plan(scheme, merge=merge)
+    spec = resolve_spec("make_ct_eval_step", spec, interpret=interpret,
+                        merge=merge)
+    transform = _bind_ct_transform(scheme, spec)
 
     @jax.jit
     def step(nodal_grids, points):
-        full = ct_transform_with_plan(nodal_grids, plan, interpret=interpret)
-        return interpolate_hierarchical(full, points)
+        return interpolate_hierarchical(transform(nodal_grids), points)
 
     return step
+
+
+def _bind_ct_transform(scheme, spec) -> Callable:
+    """The gather bound to (scheme, spec) with the plan as a trace-time
+    constant — honoring the WHOLE spec: a meshed spec binds the
+    slab-sharded multi-device gather (``repro.core.engine`` precedence
+    rule 4), everything else the single-device plan gather."""
+    import dataclasses
+    from repro.core.executor import build_plan, ct_transform_with_plan
+    plan = build_plan(scheme, spec=spec)     # ShardedPlan when spec shards
+    if spec.mesh is not None:
+        from repro.core.distributed import ct_transform_sharded
+        inner = dataclasses.replace(spec, mesh=None)
+        return lambda nodal_grids: ct_transform_sharded(
+            nodal_grids, scheme, spec.mesh, spec.axis_name, plan=plan,
+            spec=inner)
+    return lambda nodal_grids: ct_transform_with_plan(
+        nodal_grids, plan, interpret=spec.interpret, fused=spec.fused)

@@ -94,8 +94,13 @@ class HealthMonitor:
 # ---------------------------------------------------------------------------
 
 def recombine_after_fault(scheme, failed: Iterable[Tuple[int, ...]],
-                          plan=None):
+                          plan=None, *, spec=None):
     """Recombine the CT scheme without the failed grid(s).
+
+    ``spec`` (a ``repro.core.engine.ExecSpec``) shapes the plan built
+    when ``plan`` is ``None`` (merge cost model, slab sharding); a live
+    ``plan`` always wins — its merge/sharding layout is preserved by the
+    incremental update paths below.
 
     Returns ``(new_scheme, new_plan, coefficient_only)``:
 
@@ -128,7 +133,7 @@ def recombine_after_fault(scheme, failed: Iterable[Tuple[int, ...]],
     if not isinstance(scheme, GeneralScheme):
         raise TypeError(f"expected a scheme, got {type(scheme).__name__}")
     if plan is None:
-        plan = build_plan(scheme)
+        plan = build_plan(scheme, spec=spec)
     new_scheme = scheme.without_levels(failed)
     try:
         return new_scheme, update_plan_coefficients(plan, new_scheme), True

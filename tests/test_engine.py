@@ -1,0 +1,660 @@
+"""CTEngine / ExecSpec front door: compile-cache sharing across tenants,
+continuous-batching query coalescing, multi-tenant bit-identity against
+the per-scheme executor + dict oracle, lifecycle routing through the
+incremental plan paths, and the legacy-kwarg deprecation shims.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import cases, integers, seeds
+
+from repro.core import combination as comb
+from repro.core import engine as E
+from repro.core.engine import CTEngine, ExecSpec, clear_compile_cache
+from repro.core.executor import MergeConfig, build_plan, ct_transform
+from repro.core.levels import (CombinationScheme, GeneralScheme,
+                               admissible_extensions, grid_shape)
+
+
+def _random_general_scheme(seed, dim, steps, max_level=4):
+    """Seeded random downward-closed index set grown by admissible steps."""
+    rng = np.random.default_rng(seed)
+    gs = GeneralScheme.regular(dim, 1)
+    for _ in range(steps):
+        cands = [c for c in admissible_extensions(gs.index_set)
+                 if max(c) <= max_level]
+        if not cands:
+            break
+        gs = gs.with_levels([cands[int(rng.integers(len(cands)))]])
+    return gs
+
+
+def _random_grids(scheme, rng, dtype=np.float64):
+    return {ell: jnp.asarray(rng.standard_normal(grid_shape(ell)), dtype)
+            for ell, _ in scheme.grids}
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    """Deterministic compile-cache counters per test."""
+    clear_compile_cache()
+    E.reset_deprecation_warnings()
+    yield
+
+
+# ---------------------------------------------------------------------------
+# ExecSpec semantics
+# ---------------------------------------------------------------------------
+
+def test_execspec_defaults_and_resolution():
+    spec = ExecSpec()
+    assert spec.slabs == 1 and spec.merge is None and spec.fused is None
+    assert spec.resolve_interpret() == (jax.default_backend() != "tpu")
+    assert ExecSpec(dtype=jnp.float32).dtype == "float32"
+    assert ExecSpec(n_slabs=4).slabs == 4
+    assert ExecSpec().result_dtype(jnp.float32, jnp.float64) == jnp.float64
+    assert ExecSpec(dtype="float32").result_dtype(jnp.float64) == jnp.float32
+    with pytest.raises(ValueError, match="n_slabs"):
+        ExecSpec(n_slabs=0)
+
+
+def test_execspec_is_hashable_and_plan_constructor():
+    s1, s2 = ExecSpec(merge=MergeConfig()), ExecSpec(merge=MergeConfig())
+    assert s1 == s2 and hash(s1) == hash(s2)
+    scheme = CombinationScheme(2, 3)
+    assert s1.plan(scheme) is build_plan(scheme, merge=MergeConfig())
+
+
+def test_spec_plus_legacy_kwarg_conflict_raises():
+    scheme = CombinationScheme(2, 3)
+    grids = _random_grids(scheme, np.random.default_rng(0))
+    with pytest.raises(ValueError, match="not both"):
+        ct_transform(grids, scheme, spec=ExecSpec(), merge=MergeConfig())
+
+
+# ---------------------------------------------------------------------------
+# Compile-cache sharing (the tentpole's dedup claim)
+# ---------------------------------------------------------------------------
+
+def test_same_signature_tenants_compile_once():
+    """Two schemes with identical bucket signatures — the classical scheme
+    and its GeneralScheme spelling — share ONE jitted ingest executable;
+    results stay bit-identical to the per-scheme constants-baked
+    ``ct_transform``."""
+    s_classic = CombinationScheme(2, 4)
+    s_general = GeneralScheme.regular(2, 4)      # same grids, other object
+    rng = np.random.default_rng(1)
+    ga, gb = _random_grids(s_classic, rng), _random_grids(s_general, rng)
+
+    eng = CTEngine()
+    eng.register("a", s_classic, ga)
+    eng.register("b", s_general, gb)
+    st = eng.stats()["ingest_cache"]
+    assert st["misses"] == 1 and st["hits"] == 1 and st["jit_entries"] == 1
+
+    np.testing.assert_array_equal(np.asarray(eng.surplus("a")),
+                                  np.asarray(ct_transform(ga, s_classic)))
+    np.testing.assert_array_equal(np.asarray(eng.surplus("b")),
+                                  np.asarray(ct_transform(gb, s_general)))
+
+
+def test_distinct_signature_tenants_compile_separately():
+    eng = CTEngine()
+    rng = np.random.default_rng(2)
+    for i, scheme in enumerate([CombinationScheme(2, 3),
+                                CombinationScheme(2, 4),
+                                CombinationScheme(3, 3)]):
+        eng.register(f"t{i}", scheme, _random_grids(scheme, rng))
+    st = eng.stats()["ingest_cache"]
+    assert st["misses"] == 3 and st["hits"] == 0
+
+
+def test_coefficient_only_fault_reuses_executable():
+    """``drop_grid`` on the coefficient-only path keeps the member list
+    (dropped members get coefficient 0), so the plan SIGNATURE — and with
+    it the compiled executable — is reused: zero new cache misses."""
+    gs = GeneralScheme.from_levels([(4, 1), (3, 2), (2, 3), (1, 4)],
+                                   close=True)
+    rng = np.random.default_rng(3)
+    grids = _random_grids(gs, rng)
+    eng = CTEngine()
+    eng.register("t", gs, grids)
+    misses_before = eng.stats()["ingest_cache"]["misses"]
+
+    dropped = (4, 1)
+    after = dict(grids)
+    after[dropped] = jnp.zeros_like(grids[dropped])
+    eng.drop_grid("t", [dropped], after)
+    st = eng.stats()["ingest_cache"]
+    assert st["misses"] == misses_before          # no recompile
+    assert eng.scheme("t") == gs.without_levels([dropped])
+
+    # the coefficient-only path keeps the ORIGINAL fine grid (that is the
+    # point: nothing rebuilt), so compare on the plan's full_levels
+    reduced = eng.scheme("t")
+    want = ct_transform({ell: after[ell] for ell, _ in reduced.grids},
+                        reduced, full_levels=eng.plan("t").full_levels)
+    np.testing.assert_array_equal(np.asarray(eng.surplus("t")),
+                                  np.asarray(want))
+
+
+def test_merge_spec_is_part_of_the_signature():
+    """Merged and unmerged plans of one scheme are different executables
+    (different bucket partition), and both serve bit-identical results."""
+    scheme = CombinationScheme(4, 3)
+    rng = np.random.default_rng(4)
+    grids = _random_grids(scheme, rng)
+    eng = CTEngine()
+    eng.register("plain", scheme, grids)
+    eng.register("merged", scheme, grids, spec=ExecSpec(merge=MergeConfig()))
+    assert eng.stats()["ingest_cache"]["misses"] == 2
+    np.testing.assert_array_equal(np.asarray(eng.surplus("plain")),
+                                  np.asarray(eng.surplus("merged")))
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: coalescing + split correctness
+# ---------------------------------------------------------------------------
+
+def test_same_signature_queries_coalesce_into_one_dispatch():
+    scheme = CombinationScheme(2, 4)
+    rng = np.random.default_rng(5)
+    eng = CTEngine()
+    eng.register("a", scheme, _random_grids(scheme, rng))
+    eng.register("b", scheme, _random_grids(scheme, rng))
+    pts_a = np.random.default_rng(50).random((20, 2))
+    pts_b = np.random.default_rng(51).random((29, 2))     # same qpad=32
+    fa, fb = eng.submit_query("a", pts_a), eng.submit_query("b", pts_b)
+    assert not fa.done() and not fb.done()
+    eng.flush()
+    ev = eng.stats()["eval"]
+    assert ev["batches"] == 1 and ev["queries"] == 2
+    assert ev["coalesced_queries"] == 1
+    # bit-identical to the per-tenant dispatch
+    np.testing.assert_array_equal(fa.result(), eng.query("a", pts_a))
+    np.testing.assert_array_equal(fb.result(), eng.query("b", pts_b))
+
+
+def test_mixed_signature_query_batch_splits_correctly():
+    """Queries against tenants with DIFFERENT surplus signatures split
+    into one batched dispatch per signature and every request gets its
+    own tenant's result, bit-identical to per-tenant dispatch."""
+    s_small, s_big, s_3d = (CombinationScheme(2, 3), CombinationScheme(2, 5),
+                            CombinationScheme(3, 3))
+    rng = np.random.default_rng(6)
+    eng = CTEngine()
+    tenants = {"small": s_small, "big": s_big, "deep": s_3d,
+               "small2": s_small}
+    grids = {}
+    for name, scheme in tenants.items():
+        grids[name] = _random_grids(scheme, rng)
+        eng.register(name, scheme, grids[name])
+    pts2 = np.random.default_rng(60).random((17, 2))
+    pts3 = np.random.default_rng(61).random((17, 3))
+    futs = {name: eng.submit_query(name, pts3 if scheme.dim == 3 else pts2)
+            for name, scheme in tenants.items()}
+    eng.flush()
+    ev = eng.stats()["eval"]
+    assert ev["batches"] == 3          # small+small2 | big | deep
+    assert ev["queries"] == 4 and ev["coalesced_queries"] == 1
+    for name, scheme in tenants.items():
+        pts = pts3 if scheme.dim == 3 else pts2
+        want = eng.query(name, pts)                       # per-tenant
+        np.testing.assert_array_equal(futs[name].result(), want)
+        oracle = np.asarray(comb.combined_interpolant_points(
+            grids[name], scheme, jnp.asarray(pts)))
+        np.testing.assert_allclose(futs[name].result(), oracle,
+                                   rtol=1e-9, atol=1e-10)
+
+
+def test_ingest_overlaps_query_in_one_flush():
+    """An ingest and a query submitted before one flush: the ingest is
+    dispatched first (asynchronously) and the query evaluates against the
+    NEW surplus."""
+    scheme = CombinationScheme(2, 4)
+    rng = np.random.default_rng(7)
+    grids = _random_grids(scheme, rng)
+    eng = CTEngine()
+    eng.register("t", scheme, grids)
+    grids2 = {ell: 2.0 * g for ell, g in grids.items()}
+    pts = np.random.default_rng(70).random((16, 2))
+    before = eng.query("t", pts)
+    fi = eng.submit_ingest("t", grids2)
+    fq = eng.submit_query("t", pts)
+    eng.flush()
+    np.testing.assert_array_equal(fq.result(), 2.0 * before)
+    np.testing.assert_array_equal(np.asarray(fi.result()),
+                                  np.asarray(eng.surplus("t")))
+
+
+def test_failing_request_resolves_only_its_own_future():
+    """One bad request in a flush fails ITS future (the exception
+    re-raises from result()); the other queued requests still complete."""
+    scheme = CombinationScheme(2, 3)
+    rng = np.random.default_rng(77)
+    grids = _random_grids(scheme, rng)
+    eng = CTEngine()
+    eng.register("a", scheme, grids)
+    eng.register("b", scheme, _random_grids(scheme, rng))
+    bad = dict(grids)
+    del bad[next(iter(bad))]                    # ingest will fail
+    before = np.asarray(eng.surplus("a"))
+    f_bad = eng.submit_ingest("a", bad)
+    pts = np.random.default_rng(770).random((8, 2))
+    f_ok = eng.submit_query("b", pts)
+    eng.flush()
+    with pytest.raises(ValueError, match="missing"):
+        f_bad.result()
+    np.testing.assert_array_equal(np.asarray(eng.surplus("a")), before)
+    np.testing.assert_array_equal(f_ok.result(), eng.query("b", pts))
+    # a query against a never-ingested tenant fails its own future too
+    eng.register("empty", scheme, None)
+    f_q = eng.submit_query("empty", pts)
+    f_ok2 = eng.submit_query("b", pts)
+    eng.flush()
+    with pytest.raises(RuntimeError, match="no ingested state"):
+        f_q.result()
+    np.testing.assert_array_equal(f_ok2.result(), eng.query("b", pts))
+
+
+def test_queued_requests_resolve_tenant_by_name_at_flush():
+    """Work queued before a refit applies to the tenant the engine serves
+    AT FLUSH TIME (the post-refit record), and queued work for an
+    unregistered name fails its own future instead of running on an
+    orphaned tenant object."""
+    gs = GeneralScheme.regular(2, 2)
+    rng = np.random.default_rng(82)
+    grids = _random_grids(gs, rng)
+    eng = CTEngine()
+    eng.register("t", gs, grids)
+
+    grown = gs.with_levels([(3, 1)])
+    grids2 = {ell: jnp.asarray(rng.standard_normal(grid_shape(ell)))
+              for ell, _ in grown.grids}
+    fut = eng.submit_ingest("t", grids2)        # queued pre-refit
+    eng.refit("t", grown, grids2)
+    eng.flush()
+    # the queued ingest ran against the POST-refit plan and its result is
+    # the tenant's served state (not dropped on an orphan)
+    np.testing.assert_array_equal(np.asarray(fut.result()),
+                                  np.asarray(eng.surplus("t")))
+    np.testing.assert_array_equal(np.asarray(eng.surplus("t")),
+                                  np.asarray(ct_transform(grids2, grown)))
+
+    f_i = eng.submit_ingest("t", grids2)
+    f_q = eng.submit_query("t", np.random.default_rng(820).random((4, 2)))
+    eng.unregister("t")
+    eng.flush()
+    for f in (f_i, f_q):
+        with pytest.raises(KeyError, match="unregistered"):
+            f.result()
+
+
+def test_extend_plan_spec_slab_conflict_raises():
+    from repro.core.executor import extend_plan, shard_plan
+    gs = GeneralScheme.regular(2, 3)
+    splan = shard_plan(build_plan(gs), 4)
+    with pytest.raises(ValueError, match="sharded for 4"):
+        extend_plan(splan, gs.with_levels([(4, 1)]),
+                    spec=ExecSpec(n_slabs=8))
+    # a spec that does not request sharding extends a sharded plan as-is
+    out = extend_plan(splan, gs.with_levels([(4, 1)]), spec=ExecSpec())
+    assert out.n_slabs == 4
+
+
+def test_positional_non_spec_raises_named_type_error():
+    """Pre-redesign positional callers (third arg used to be interpret)
+    get a named TypeError, not an opaque attribute error."""
+    scheme = CombinationScheme(2, 3)
+    grids = _random_grids(scheme, np.random.default_rng(78))
+    from repro.launch.serve import CTSurrogate
+    with pytest.raises(TypeError, match="ExecSpec.*interpret"):
+        CTSurrogate(scheme, grids, True)
+    with pytest.raises(TypeError, match="ExecSpec"):
+        ct_transform(grids, scheme, spec=True)
+    with pytest.raises(TypeError, match="ExecSpec"):
+        build_plan(scheme, spec="merge-me")
+    with pytest.raises(TypeError, match="ExecSpec"):
+        CTEngine(spec=object())
+
+
+def test_meshed_spec_on_unsharded_plan_raises():
+    """A meshed spec never silently degrades to the single-device path."""
+    from repro.core.executor import ct_transform_with_plan
+
+    class FakeMesh:                     # shape-duck-typed; no devices needed
+        shape = {"slab": 4}
+
+    spec = ExecSpec(mesh=FakeMesh())
+    scheme = CombinationScheme(2, 3)
+    grids = _random_grids(scheme, np.random.default_rng(79))
+    with pytest.raises(ValueError, match="not slab-sharded"):
+        ct_transform_with_plan(grids, build_plan(scheme), spec=spec)
+
+
+def test_execspec_mesh_nslabs_conflict_raises():
+    class FakeMesh:
+        shape = {"slab": 8}
+
+    with pytest.raises(ValueError, match="conflicts with mesh axis"):
+        ExecSpec(mesh=FakeMesh(), n_slabs=4)
+    assert ExecSpec(mesh=FakeMesh(), n_slabs=8).slabs == 8   # consistent OK
+
+
+def test_ingest_executable_cache_is_lru_bounded():
+    import repro.core.engine as engine_mod
+    old_max = engine_mod._INGEST_CACHE_MAX
+    engine_mod._INGEST_CACHE_MAX = 2
+    try:
+        eng = CTEngine()
+        rng = np.random.default_rng(81)
+        for i, scheme in enumerate([CombinationScheme(2, 2),
+                                    CombinationScheme(2, 3),
+                                    CombinationScheme(3, 2)]):
+            eng.register(f"t{i}", scheme, _random_grids(scheme, rng))
+        assert len(engine_mod._INGEST_EXECUTABLES) == 2    # oldest evicted
+        # the evicted signature's tenant keeps serving (executable still
+        # referenced by the tenant); a NEW same-signature tenant recompiles
+        pts = np.random.default_rng(810).random((8, 2))
+        assert eng.query("t0", pts).shape == (8,)
+    finally:
+        engine_mod._INGEST_CACHE_MAX = old_max
+
+
+def test_adaptive_driver_spec_config_conflict_raises():
+    from repro.core.adaptive import AdaptiveConfig, AdaptiveDriver
+    solver = lambda ell: np.zeros(grid_shape(ell))
+    with pytest.raises(ValueError, match="ONE place"):
+        AdaptiveDriver(solver, dim=2,
+                       config=AdaptiveConfig(merge=MergeConfig()),
+                       spec=ExecSpec())
+    with pytest.raises(ValueError, match="CTEngine instead"):
+        AdaptiveDriver(solver, dim=2, spec=ExecSpec(n_slabs=4))
+    # non-conflicting spec is applied
+    drv = AdaptiveDriver(solver, dim=2, spec=ExecSpec(merge=MergeConfig()))
+    assert drv.config.merge == MergeConfig()
+    assert drv.plan.merge == MergeConfig()
+
+
+def test_future_result_autoflushes():
+    scheme = CombinationScheme(2, 3)
+    eng = CTEngine()
+    eng.register("t", scheme, _random_grids(scheme, np.random.default_rng(8)))
+    pts = np.random.default_rng(80).random((8, 2))
+    fut = eng.submit_query("t", pts)
+    got = fut.result()                 # no explicit flush
+    np.testing.assert_array_equal(got, eng.query("t", pts))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance property test: multi-tenant == per-scheme executor + oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dim,steps,seed", cases(
+    lambda r: (integers(r, 2, 3), integers(r, 2, 6), seeds(r)), n=6))
+def test_multi_tenant_bit_identical_to_per_scheme_transform(dim, steps, seed):
+    """Seeded property test (the PR's acceptance gate): a multi-tenant
+    engine serving random downward-closed schemes produces surpluses
+    BIT-identical to the per-scheme jitted ``ct_transform`` and query
+    values matching the dict-oracle interpolant."""
+    from repro.launch.steps import make_ct_step
+    rng = np.random.default_rng(seed)
+    eng = CTEngine()
+    schemes, grids = {}, {}
+    for i in range(3):
+        gs = _random_general_scheme(seed + i, dim, steps)
+        name = f"tenant{i}"
+        schemes[name], grids[name] = gs, _random_grids(gs, rng)
+        eng.register(name, gs, grids[name])
+    pts = rng.random((23, dim))
+    futs = {name: eng.submit_query(name, pts) for name in schemes}
+    eng.flush()
+    for name, gs in schemes.items():
+        step = make_ct_step(gs)
+        np.testing.assert_array_equal(np.asarray(eng.surplus(name)),
+                                      np.asarray(step(grids[name])))
+        oracle = np.asarray(comb.combined_interpolant_points(
+            grids[name], gs, jnp.asarray(pts)))
+        np.testing.assert_allclose(futs[name].result(), oracle,
+                                   rtol=1e-9, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: refit / extend / drop_grid / unregister
+# ---------------------------------------------------------------------------
+
+def test_engine_extend_routes_through_extend_plan():
+    gs = GeneralScheme.regular(2, 2)
+    rng = np.random.default_rng(9)
+    grids = _random_grids(gs, rng)
+    eng = CTEngine()
+    eng.register("t", gs, grids)
+    plan_before = eng.plan("t")
+
+    grown = gs.with_levels([(3, 1)])
+    grids2 = {ell: jnp.asarray(rng.standard_normal(grid_shape(ell)))
+              for ell, _ in grown.grids}
+    eng.extend("t", [(3, 1)], grids2)
+    assert eng.scheme("t") == grown
+    want = ct_transform(grids2, grown)
+    np.testing.assert_array_equal(np.asarray(eng.surplus("t")),
+                                  np.asarray(want))
+    assert eng.plan("t") is not plan_before
+
+
+def test_failed_lifecycle_leaves_tenant_unchanged():
+    gs = GeneralScheme.regular(2, 3)
+    rng = np.random.default_rng(10)
+    grids = _random_grids(gs, rng)
+    eng = CTEngine()
+    eng.register("t", gs, grids)
+    before = np.asarray(eng.surplus("t"))
+    with pytest.raises(ValueError, match=r"\(1, 1\)"):
+        eng.drop_grid("t", [(2, 2)], grids)    # (1, 1) data not supplied
+    assert eng.scheme("t") == gs
+    np.testing.assert_array_equal(np.asarray(eng.surplus("t")), before)
+
+
+def test_register_twice_and_unknown_tenant_raise():
+    scheme = CombinationScheme(2, 2)
+    eng = CTEngine()
+    eng.register("t", scheme,
+                 _random_grids(scheme, np.random.default_rng(11)))
+    with pytest.raises(ValueError, match="already registered"):
+        eng.register("t", scheme, None)
+    with pytest.raises(KeyError, match="nope"):
+        eng.query("nope", np.zeros((4, 2)))
+    eng.unregister("t")
+    assert "t" not in eng
+
+
+# ---------------------------------------------------------------------------
+# Query validation (satellite: named errors instead of jit failures)
+# ---------------------------------------------------------------------------
+
+def test_query_point_validation_named_errors():
+    from repro.launch.serve import CTSurrogate
+    scheme = CombinationScheme(2, 3)
+    srv = CTSurrogate(scheme,
+                      _random_grids(scheme, np.random.default_rng(12)))
+    with pytest.raises(ValueError, match=r"\(Q, 2\).*got \(4, 3\)"):
+        srv.query(np.zeros((4, 3)))
+    with pytest.raises(ValueError, match="2-dimensional"):
+        srv.query(np.zeros((4, 3)))
+    with pytest.raises(TypeError, match="floating"):
+        srv.query(np.zeros((4, 2), np.int32))
+    # a bare (d,) point is promoted to one row, not rejected
+    assert srv.query(np.full(2, 0.5)).shape == (1,)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: every legacy kwarg keeps working, warns ONCE
+# ---------------------------------------------------------------------------
+
+def _deprecations(w):
+    return [x for x in w if issubclass(x.category, DeprecationWarning)]
+
+
+def test_legacy_kwargs_warn_once_and_match_spec():
+    from repro.launch.steps import make_ct_step
+    scheme = CombinationScheme(2, 4)
+    grids = _random_grids(scheme, np.random.default_rng(13))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = ct_transform(grids, scheme, merge=MergeConfig())
+        legacy2 = ct_transform(grids, scheme, merge=MergeConfig())
+        assert len(_deprecations(w)) == 1          # once per call site family
+    spec_way = ct_transform(grids, scheme, spec=ExecSpec(merge=MergeConfig()))
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(spec_way))
+    np.testing.assert_array_equal(np.asarray(legacy2), np.asarray(spec_way))
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        step = make_ct_step(scheme, interpret=True)
+        assert len(_deprecations(w)) == 1
+    np.testing.assert_array_equal(
+        np.asarray(step(grids)),
+        np.asarray(make_ct_step(scheme, spec=ExecSpec(interpret=True))(grids)))
+
+    # distinct call-site families warn independently
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ct_transform(grids, scheme, interpret=True)
+        assert len(_deprecations(w)) == 1          # (ct_transform, interpret)
+
+
+def test_legacy_surrogate_kwargs_warn_once():
+    from repro.launch.serve import CTSurrogate
+    scheme = CombinationScheme(2, 3)
+    grids = _random_grids(scheme, np.random.default_rng(14))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        a = CTSurrogate(scheme, grids, merge=MergeConfig())
+        b = CTSurrogate(scheme, grids, merge=MergeConfig())
+        assert len(_deprecations(w)) == 1
+    spec_way = CTSurrogate(scheme, grids,
+                           ExecSpec(merge=MergeConfig()))
+    pts = np.random.default_rng(140).random((16, 2))
+    np.testing.assert_array_equal(a.query(pts), spec_way.query(pts))
+    np.testing.assert_array_equal(b.query(pts), spec_way.query(pts))
+
+
+@pytest.mark.multidevice
+def test_legacy_mesh_and_sharded_plan_kwargs_warn_once():
+    from repro.compat import AxisType, make_mesh
+    from repro.core.distributed import ct_transform_sharded
+    from repro.core.executor import shard_plan
+    from repro.launch.serve import CTSurrogate
+    mesh = make_mesh((8,), ("slab",), axis_types=(AxisType.Auto,))
+    scheme = GeneralScheme.regular(2, 4)
+    grids = _random_grids(scheme, np.random.default_rng(15))
+    splan = shard_plan(build_plan(scheme), 8)
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        srv = CTSurrogate(scheme, grids, mesh=mesh)
+        CTSurrogate(scheme, grids, mesh=mesh)
+        assert len(_deprecations(w)) == 1
+    ref = CTSurrogate(scheme, grids, ExecSpec(mesh=mesh))
+    np.testing.assert_array_equal(np.asarray(srv.surplus),
+                                  np.asarray(ref.surplus))
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = ct_transform_sharded(grids, scheme, mesh, "slab",
+                                      sharded_plan=splan)
+        ct_transform_sharded(grids, scheme, mesh, "slab",
+                             sharded_plan=splan)
+        assert len(_deprecations(w)) == 1
+    new = ct_transform_sharded(grids, scheme, mesh, "slab", plan=splan)
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(new))
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        fused_legacy = ct_transform_sharded(grids, scheme, mesh, "slab",
+                                            fused=False)
+        assert len(_deprecations(w)) == 1
+    np.testing.assert_array_equal(
+        np.asarray(fused_legacy),
+        np.asarray(ct_transform_sharded(grids, scheme, mesh, "slab",
+                                        spec=ExecSpec(fused=False))))
+
+
+@pytest.mark.multidevice
+def test_make_ct_step_honors_meshed_spec():
+    """``make_ct_step(spec=ExecSpec(mesh=...))`` binds the slab-sharded
+    gather (precedence rule 4), bit-identical to the single-device step."""
+    from repro.compat import AxisType, make_mesh
+    from repro.launch.steps import make_ct_step
+    mesh = make_mesh((8,), ("slab",), axis_types=(AxisType.Auto,))
+    scheme = GeneralScheme.regular(2, 4)
+    grids = _random_grids(scheme, np.random.default_rng(18))
+    step = make_ct_step(scheme, spec=ExecSpec(mesh=mesh))
+    np.testing.assert_array_equal(np.asarray(step(grids)),
+                                  np.asarray(make_ct_step(scheme)(grids)))
+
+
+@pytest.mark.multidevice
+def test_meshed_spec_routes_ct_transform_and_engine_shares_executable():
+    """``ct_transform(spec=ExecSpec(mesh=...))`` routes the slab-sharded
+    gather; two meshed tenants with one signature share one executable
+    and match the single-device result bit-for-bit."""
+    from repro.compat import AxisType, make_mesh
+    mesh = make_mesh((8,), ("slab",), axis_types=(AxisType.Auto,))
+    scheme = GeneralScheme.regular(2, 4)
+    rng = np.random.default_rng(16)
+    ga, gb = _random_grids(scheme, rng), _random_grids(scheme, rng)
+    spec = ExecSpec(mesh=mesh)
+
+    got = ct_transform(ga, scheme, spec=spec)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ct_transform(ga, scheme)))
+
+    eng = CTEngine(spec=spec)
+    eng.register("a", scheme, ga)
+    eng.register("b", scheme, gb)
+    st = eng.stats()["ingest_cache"]
+    assert st["misses"] == 1 and st["hits"] == 1
+    np.testing.assert_array_equal(np.asarray(eng.surplus("a")),
+                                  np.asarray(ct_transform(ga, scheme)))
+    np.testing.assert_array_equal(np.asarray(eng.surplus("b")),
+                                  np.asarray(ct_transform(gb, scheme)))
+
+    # comm_phase_sharded accepts the same spec (builds the sharded plan)
+    from repro.core.distributed import comm_phase_sharded
+    from repro.core.hierarchize import hierarchize
+    hier = {ell: hierarchize(u) for ell, u in ga.items()}
+    got = comm_phase_sharded(hier, scheme, mesh, "slab",
+                             spec=ExecSpec(n_slabs=8))
+    want = comm_phase_sharded(hier, scheme, mesh, "slab")
+    for ell in want:
+        np.testing.assert_allclose(np.asarray(got[ell]),
+                                   np.asarray(want[ell]),
+                                   rtol=0, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Surrogates as thin views over a shared engine
+# ---------------------------------------------------------------------------
+
+def test_surrogates_share_engine_and_compile_cache():
+    from repro.launch.serve import CTSurrogate
+    scheme = CombinationScheme(2, 4)
+    rng = np.random.default_rng(17)
+    eng = CTEngine()
+    a = CTSurrogate(scheme, _random_grids(scheme, rng),
+                    engine=eng, name="a")
+    b = CTSurrogate(scheme, _random_grids(scheme, rng),
+                    engine=eng, name="b")
+    assert a.engine is b.engine is eng
+    st = eng.stats()
+    assert st["tenants"] == 2
+    assert st["ingest_cache"]["misses"] == 1
+    assert st["ingest_cache"]["hits"] == 1
+    # the per-tenant gather accounting aggregates across tenants
+    assert st["gather"]["members"] == 2 * len(scheme.grids)
