@@ -63,7 +63,7 @@ def run_case(cfg, reps: int):
             break
 
     # plan-update cost on a stable fine grid: replay the final expansion
-    from repro.core.executor import _build_plan_cached, extend_plan
+    from repro.core.executor import clear_plan_cache, extend_plan
     plan_t = {}
     if len(drv.scheme.grids) > 1:
         prev = drv.scheme.without_levels([drv.history[-1].added[0]]) \
@@ -79,7 +79,7 @@ def run_case(cfg, reps: int):
         plan_t["extend_s"] = (time.perf_counter() - t0) / reps
         t0 = time.perf_counter()
         for _ in range(reps):
-            _build_plan_cached.cache_clear()
+            clear_plan_cache()
             scratch = build_plan(drv.scheme,
                                  full_levels=drv.plan.full_levels)
         plan_t["scratch_s"] = (time.perf_counter() - t0) / reps

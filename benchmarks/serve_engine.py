@@ -14,9 +14,18 @@ discretization" serving shape), measures
     + per-signature coalesced query dispatches) vs the per-tenant
     dispatch loop, with the engine results asserted BIT-identical to the
     independent path first,
+  * (PR 6) SUSTAINED QPS + tail latency under a mixed OPEN-LOOP
+    ingest+query load replayed against the thread-safe engine twice at
+    equal offered throughput: the deadline/priority scheduler
+    (flush-on-deadline-or-batch-full, background ingest pool) vs a
+    flush-everything drain loop — queries arriving during a drain's
+    ingest barrier convoy behind it, which is exactly the tail the
+    deadline scheduler removes,
 
-and asserts the >=2x compilation reduction (the ISSUE acceptance bar).
-Emits machine-readable ``BENCH_serve_engine.json``.
+asserts the >=2x compilation reduction AND the >=1.5x p99 win of the
+deadline scheduler (the ISSUE acceptance bars), and emits
+machine-readable ``BENCH_serve_engine.json`` with top-level
+``qps_sustained`` / ``p99_ms`` fields.
 
   PYTHONPATH=src python benchmarks/serve_engine.py
 """
@@ -25,6 +34,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import threading
 import time
 
 import jax
@@ -36,7 +46,7 @@ jax.config.update("jax_enable_x64", True)
 from common import time_call  # noqa: E402
 
 from repro.core.engine import CTEngine, clear_compile_cache  # noqa: E402
-from repro.core.executor import (build_plan,  # noqa: E402
+from repro.core.executor import (build_plan, clear_plan_cache,  # noqa: E402
                                  ct_transform_with_plan)
 from repro.core.interpolation import interpolate_hierarchical  # noqa: E402
 from repro.core.levels import CombinationScheme, grid_shape  # noqa: E402
@@ -169,12 +179,178 @@ def bench(reps):
     return payload
 
 
+# ---------------------------------------------------------------------------
+# PR 6: open-loop mixed load — deadline scheduler vs flush-everything
+# ---------------------------------------------------------------------------
+
+def _schedule(n_queries, qps, ingest_every, burst):
+    """Open-loop arrival schedule: queries at fixed ``qps`` spacing, a
+    bulk-refresh ingest burst (``burst`` chained re-ingests of one heavy
+    background tenant) every ``ingest_every`` queries — the mixed load
+    that makes flush-everything convoy: its drain barriers every queued
+    query behind the heavy ingest chain, while the deadline scheduler
+    keeps dispatching queries on their latency budget and lets the
+    ingest pool absorb the refresh."""
+    events = []
+    for i in range(n_queries):
+        events.append((i / qps, "query", i))
+        if ingest_every and i % ingest_every == ingest_every - 1:
+            events.extend([(i / qps, "ingest", i)] * burst)
+    return events
+
+
+def _replay_open_loop(mode, events, tenants, bulk, points, deadline_ms):
+    """Replay the schedule against a fresh engine in one of two drain
+    modes at EQUAL offered load: ``"deadline"`` (started scheduler +
+    background ingest pool) or ``"flush_everything"`` (a dedicated
+    thread draining the whole queue in a loop — every cycle barriers on
+    all pending ingest chains before the next starts)."""
+    engine = CTEngine(deadline_ms=deadline_ms, max_pending=1_000_000)
+    for name, scheme, grids in tenants:
+        engine.register(name, scheme, grids)
+    bulk_name, bulk_scheme, bulk_grids = bulk
+    engine.register(bulk_name, bulk_scheme, bulk_grids)
+    names = [name for name, _, _ in tenants]
+    # warm every dispatch shape before timing: ingest executables, plus
+    # the batched eval at every power-of-two T-pad bucket a deadline
+    # window or a post-convoy drain can produce (group sizes vary per
+    # window; the engine pads T to {4, 8, 16, 32} so only these compile)
+    for name, _, grids in tenants:
+        engine.submit_ingest(name, grids)
+    engine.submit_ingest(bulk_name, bulk_grids)
+    engine.flush()
+    by_scheme = {}
+    for name, scheme, _ in tenants:
+        by_scheme.setdefault(scheme, name)
+    for group_size in (1, 5, 9, 17):
+        for scheme, name in by_scheme.items():
+            for _ in range(group_size):
+                engine.submit_query(name, points[name])
+        engine.flush()
+
+    stop = threading.Event()
+    flusher = None
+    if mode == "deadline":
+        engine.start()
+    else:
+        def drain_loop():
+            while not stop.is_set():
+                engine.flush()
+                time.sleep(0)           # let submitters in
+        flusher = threading.Thread(target=drain_loop, daemon=True)
+        flusher.start()
+
+    qfuts, ingests = [], 0
+    t0 = time.monotonic()
+    for dt, kind, i in events:
+        target = t0 + dt
+        now = time.monotonic()
+        while now < target:
+            time.sleep(min(0.0005, target - now))
+            now = time.monotonic()
+        if kind == "query":
+            name = names[i % len(names)]
+            qfuts.append((time.monotonic(),
+                          engine.submit_query(name, points[name])))
+        else:
+            engine.submit_ingest(bulk_name, bulk_grids)
+            ingests += 1
+    for _, f in qfuts:
+        if not f._event.wait(timeout=120.0):
+            raise RuntimeError(f"open-loop {mode}: query future hung")
+    t_end = max(f.done_at for _, f in qfuts)
+
+    if mode == "deadline":
+        engine.close()
+    else:
+        stop.set()
+        flusher.join(timeout=30.0)
+        engine.flush()
+
+    lat_ms = np.asarray([(f.done_at - sub) * 1e3 for sub, f in qfuts])
+    sched = engine.stats()["scheduler"]
+    return {
+        "mode": mode,
+        "queries": len(qfuts),
+        "ingests": ingests,
+        "qps_offered": len(qfuts) / events[-1][0],
+        "qps_sustained": len(qfuts) / (t_end - t0),
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "max_ms": float(lat_ms.max()),
+        "dispatch_deadline": sched["dispatch_deadline"],
+        "dispatch_batch_full": sched["dispatch_batch_full"],
+        "flushes": sched["flushes"],
+    }
+
+
+#: the heavy background tenant bulk-refreshed during the open-loop load:
+#: each ingest is a few ms on CPU and a burst chains many of them, so a
+#: flush-everything drain barriers queries behind the whole multi-ms
+#: chain while the deadline scheduler interleaves eval dispatches
+#: between the chain links
+BULK_SCHEME = CombinationScheme(2, 9)
+
+
+def bench_open_loop(n_queries, qps, ingest_every, burst, deadline_ms):
+    rng = np.random.default_rng(1)
+    tenants = _fleet(rng)
+    points = {name: rng.random((QUERY_POINTS, scheme.dim))
+              for name, scheme, _ in tenants}
+    bulk = ("bulk_refresh",
+            BULK_SCHEME,
+            {ell: jnp.asarray(rng.standard_normal(grid_shape(ell)))
+             for ell, _ in BULK_SCHEME.grids})
+    out = {}
+    for mode in ("flush_everything", "deadline"):
+        out[mode] = _replay_open_loop(mode,
+                                      _schedule(n_queries, qps,
+                                                ingest_every, burst),
+                                      tenants, bulk, points, deadline_ms)
+    print(f"\n{'open-loop mixed load':>24} {'flush-all':>12} "
+          f"{'deadline':>12}")
+    for k in ("qps_sustained", "p50_ms", "p99_ms", "max_ms"):
+        print(f"{k:>24} {out['flush_everything'][k]:>12.2f} "
+              f"{out['deadline'][k]:>12.2f}")
+    ratio = out["flush_everything"]["p99_ms"] / out["deadline"]["p99_ms"]
+    print(f"{'p99 ratio':>24} {ratio:>25.2f}x  (bar: >=1.5x)")
+
+    # ISSUE acceptance: the deadline scheduler beats flush-everything
+    # p99 by >=1.5x at equal offered throughput
+    assert ratio >= 1.5, (
+        f"deadline scheduler p99 {out['deadline']['p99_ms']:.2f}ms vs "
+        f"flush-everything {out['flush_everything']['p99_ms']:.2f}ms: "
+        f"{ratio:.2f}x < 1.5x bar")
+    return out, ratio
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--open-loop-queries", type=int, default=400)
+    ap.add_argument("--open-loop-qps", type=float, default=300.0)
+    ap.add_argument("--ingest-every", type=int, default=40,
+                    help="one bulk-refresh ingest burst per this many "
+                         "queries in the open-loop load")
+    ap.add_argument("--ingest-burst", type=int, default=12,
+                    help="chained re-ingests of the heavy bulk tenant "
+                         "per burst")
+    ap.add_argument("--deadline-ms", type=float, default=5.0)
     ap.add_argument("--json-out", default="BENCH_serve_engine.json")
     args = ap.parse_args(argv)
     payload = bench(args.reps)
+    clear_compile_cache()
+    clear_plan_cache()
+    open_loop, ratio = bench_open_loop(args.open_loop_queries,
+                                       args.open_loop_qps,
+                                       args.ingest_every, args.ingest_burst,
+                                       args.deadline_ms)
+    payload["open_loop"] = open_loop
+    payload["p99_ratio_flush_vs_deadline"] = ratio
+    # the CI contract (non-null, top-level): sustained QPS + p99 of the
+    # deadline-scheduled engine under the mixed open-loop load
+    payload["qps_sustained"] = open_loop["deadline"]["qps_sustained"]
+    payload["p99_ms"] = open_loop["deadline"]["p99_ms"]
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(payload, f, indent=2)

@@ -13,10 +13,10 @@ This module consolidates them behind two objects:
   ``ct_transform_psum``, ``ct_transform_sharded``,
   ``recombine_after_fault``, ``AdaptiveDriver``, ``make_ct_step``,
   ``CTSurrogate``) accepts ``spec=``.
-* ``CTEngine`` — a multi-tenant registry serving N named surrogates
-  (scheme + plan + spec each) behind a continuous-batching queue, with
-  jitted ingest executables DEDUPED across tenants by plan
-  shape-signature.
+* ``CTEngine`` — a THREAD-SAFE multi-tenant registry serving N named
+  surrogates (scheme + plan + spec each) behind a deadline-aware
+  continuous-batching queue, with jitted ingest executables DEDUPED
+  across tenants by plan shape-signature.
 
 ExecSpec precedence rules
 -------------------------
@@ -30,7 +30,9 @@ ExecSpec precedence rules
    legacy kwargs are folded into the equivalent ``ExecSpec`` and the
    call proceeds unchanged — plus ONE ``DeprecationWarning`` per
    (function, kwarg-set) family per process
-   (``reset_deprecation_warnings`` rearms them, for tests).
+   (``reset_deprecation_warnings`` rearms them, for tests; the
+   warn-once registry is lock-guarded, so concurrent legacy callers
+   still warn exactly once per family).
 3. **Field-level defaults resolve as late as possible.**
    ``n_slabs=None`` means "the mesh axis extent" (``spec.slabs``);
    ``interpret=None`` means "ask ``repro.kernels.hierarchize.
@@ -52,8 +54,58 @@ repo's PR sequence: they are thin shims that build the equivalent
 driver loop does not drown in warnings, while every distinct legacy call
 site still gets flagged.  New capabilities land as ExecSpec fields only.
 
-CTEngine
---------
+CTEngine threading contract
+---------------------------
+
+``submit_ingest`` / ``submit_query`` may be called from ANY thread; they
+enqueue work and return ``CTFuture``s backed by ``threading.Event``
+(``result(timeout=)`` blocks, auto-flushing the queue while it waits).
+The queue drains through three equivalent paths:
+
+* ``flush()`` — drain EVERYTHING now (synchronous; safe to call
+  concurrently — the pending-queue swap is atomic under the engine
+  lock, so requests enqueued during a concurrent flush are never
+  dropped, they simply ride the next drain);
+* ``pump()`` — one scheduler step: dispatch only what is DUE
+  (deadline expired or per-tenant batch full);
+* ``start()`` / ``stop()`` — a background scheduler thread calling the
+  pump loop, waking on submissions and deadline expiry.
+
+**Ingest pool.**  Pending ingests are dispatched on a background thread
+pool (shared across engines by default; ``ingest_workers=N`` gives an
+engine a private pool, ``ingest_workers=0`` forces inline execution).
+Each tenant's ingests form an ordered chain; chains of different
+tenants overlap each other AND the query batching on the main thread —
+jax dispatch releases the GIL inside XLA, so host-side plan work and
+device compute pipeline.  ``jax.block_until_ready`` runs inside the
+chain worker: a device-side failure resolves the OWNING request's
+future and never poisons siblings or escapes ``flush()``.
+
+**Ordering.**  Per tenant, queries observe every ingest of the same
+tenant submitted before them (a monotonic per-tenant watermark pairs
+each query with the ingest generation it must wait for); ingests of one
+tenant apply in submission order.  Across tenants there is no implied
+order — that is what makes the coalesced batching legal.
+
+**Deadlines / priority / backpressure.**  Each query carries an
+absolute deadline (explicit ``deadline_ms=``, else the tenant default,
+else the engine default) and an integer priority (higher first).  The
+scheduler dispatches a tenant's queries when its batch reaches
+``max_batch`` OR the earliest deadline in the group expires —
+flush-on-deadline-or-batch-full, not flush-everything.  The queue is
+bounded by ``max_pending``: ``submit_*(block=False)`` raises
+``EngineSaturated`` when full, blocking submits wait for space (with
+optional ``timeout=``).
+
+**Lock order.**  One engine lock (an ``RLock`` shared by the ``_work``
+and ``_space`` conditions) guards the registry, the queue, the
+watermarks and the counters.  The module-level locks (ingest-executable
+cache, ``build_plan`` cache, warn-once registry) are LEAVES: they are
+never held while taking an engine lock, and no device dispatch ever
+runs under ANY lock.
+
+CTEngine serving model
+----------------------
 
 ``register(name, scheme, grids, spec=...)`` admits a tenant; ingest
 executables are cached in a process-global table keyed by the plan's
@@ -66,19 +118,15 @@ or different data — compile ONCE and the results stay bit-identical to
 the constants-baked ``ct_transform`` (both spellings trace the same
 ops; pinned by ``tests/test_engine.py``).
 
-``submit_ingest(name, grids)`` / ``submit_query(name, points)`` enqueue
-work and return ``CTFuture``s; ``flush()`` drains the queue by first
-dispatching every pending ingest (jax dispatch is asynchronous, so
-ingest compute overlaps the query batching below — no host sync in
-between) and then coalescing pending queries BY SIGNATURE
-(surplus shape/dtype + padded batch extent) into one vmapped batched
-eval dispatch per group.  Mixed-signature batches split into one
-dispatch per signature; per-request results are bit-identical to a
-per-tenant dispatch because each query point's hat-basis contraction is
-independent of the batching.  ``refit`` / ``extend`` / ``drop_grid``
-route through the incremental plan paths (``extend_plan`` /
-``recombine_after_fault``) per tenant, and ``stats()`` aggregates
-``plan_launch_stats`` with the compile-cache hit counters.
+Queries coalesce BY SIGNATURE (surplus shape/dtype + padded batch
+extent) into one vmapped batched eval dispatch per group; per-request
+results are bit-identical to a per-tenant dispatch because each query
+point's hat-basis contraction is independent of the batching.  ``refit``
+/ ``extend`` / ``drop_grid`` route through the incremental plan paths
+(``extend_plan`` / ``recombine_after_fault``) per tenant; ``rebind``
+re-shards a tenant onto a new mesh/slab layout WITHOUT recomputing its
+surplus (the elastic-rebalance fast lane); ``stats()`` aggregates
+``plan_launch_stats`` with the compile-cache and scheduler counters.
 
 ``repro.launch.serve.CTSurrogate`` is a thin single-tenant view over a
 private engine.
@@ -87,6 +135,12 @@ private engine.
 from __future__ import annotations
 
 import collections
+import dataclasses
+import math
+import os
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -97,20 +151,25 @@ import numpy as np
 from repro.core.executor import (ExecutorPlan, MergeConfig, ShardedPlan,
                                  _assemble_members, _check_nodal_grids,
                                  _gather_one_bucket, _tail_transform,
-                                 _WARNED_LEGACY, build_plan, extend_plan,
-                                 plan_fused_ok, plan_launch_stats)
+                                 build_plan, extend_plan, plan_fused_ok,
+                                 plan_launch_stats, reset_legacy_warnings,
+                                 shard_plan)
 from repro.core.interpolation import interpolate_hierarchical
 from repro.core.levels import SchemeLike
 from repro.kernels.hierarchize import (batched_method, hierarchize_batched,
                                        interpret_default)
 
-__all__ = ["ExecSpec", "CTEngine", "CTFuture",
+__all__ = ["ExecSpec", "CTEngine", "CTFuture", "EngineSaturated",
            "reset_deprecation_warnings", "clear_compile_cache"]
 
 
 def reset_deprecation_warnings() -> None:
     """Re-arm the once-per-call-site legacy-kwarg warnings (tests)."""
-    _WARNED_LEGACY.clear()
+    reset_legacy_warnings()
+
+
+class EngineSaturated(RuntimeError):
+    """The engine's bounded request queue is full (admission control)."""
 
 
 @dataclass(frozen=True)
@@ -219,14 +278,21 @@ def plan_signature(plan, spec: ExecSpec) -> Tuple:
 #: unboundedly.  Live tenants keep their executable reachable through
 #: ``_Tenant.executable`` even after eviction; eviction only forces a
 #: recompile for the NEXT tenant of that signature.
+#:
+#: Every get/insert/evict runs under ``_INGEST_CACHE_LOCK`` — building
+#: the executable inside the lock is fine because ``jax.jit`` is lazy
+#: (tracing/compilation happen at FIRST CALL, outside any lock).  The
+#: lock is a LEAF: never held while taking an engine lock.
 _INGEST_EXECUTABLES: "collections.OrderedDict[Tuple, Callable]" = \
     collections.OrderedDict()
 _INGEST_CACHE_MAX = 64
+_INGEST_CACHE_LOCK = threading.Lock()
 
 
 def clear_compile_cache() -> None:
     """Drop the shared ingest-executable cache (tests / benchmarks)."""
-    _INGEST_EXECUTABLES.clear()
+    with _INGEST_CACHE_LOCK:
+        _INGEST_EXECUTABLES.clear()
 
 
 def _build_ingest_executable(plan, spec: ExecSpec) -> Callable:
@@ -303,16 +369,22 @@ def _build_ingest_executable(plan, spec: ExecSpec) -> Callable:
 
 def _ingest_executable(signature: Tuple, plan,
                        spec: ExecSpec) -> Tuple[Callable, bool]:
-    """Fetch-or-build the shared executable; returns ``(fn, was_hit)``."""
-    fn = _INGEST_EXECUTABLES.get(signature)
-    if fn is not None:
-        _INGEST_EXECUTABLES.move_to_end(signature)
-        return fn, True
-    fn = _build_ingest_executable(plan, spec)
-    _INGEST_EXECUTABLES[signature] = fn
-    while len(_INGEST_EXECUTABLES) > _INGEST_CACHE_MAX:
-        _INGEST_EXECUTABLES.popitem(last=False)
-    return fn, False
+    """Fetch-or-build the shared executable; returns ``(fn, was_hit)``.
+
+    The whole get/build/insert/evict sequence runs under ONE lock, so
+    concurrent binders of the same signature observe exactly one miss
+    and the LRU order never corrupts (building is cheap: ``jax.jit``
+    only wraps — tracing happens at first call, outside the lock)."""
+    with _INGEST_CACHE_LOCK:
+        fn = _INGEST_EXECUTABLES.get(signature)
+        if fn is not None:
+            _INGEST_EXECUTABLES.move_to_end(signature)
+            return fn, True
+        fn = _build_ingest_executable(plan, spec)
+        _INGEST_EXECUTABLES[signature] = fn
+        while len(_INGEST_EXECUTABLES) > _INGEST_CACHE_MAX:
+            _INGEST_EXECUTABLES.popitem(last=False)
+        return fn, False
 
 
 #: One process-global jitted batched eval: vmapped hat-basis contraction.
@@ -321,49 +393,90 @@ def _ingest_executable(signature: Tuple, plan,
 #: T=1 row equals the unbatched eval BITWISE.
 _EVAL_BATCHED = jax.jit(jax.vmap(interpolate_hierarchical))
 
+#: Jitted device-side finiteness probe for ``check_finite`` ingests.
+_FINITE_CHECK = jax.jit(lambda x: jnp.all(jnp.isfinite(x)))
+
+#: How long a draining flush waits for another thread's in-flight ingest
+#: before failing the dependent query futures with TimeoutError.
+_DRAIN_TIMEOUT_S = 120.0
+
+
+# ---------------------------------------------------------------------------
+# Shared ingest pool
+# ---------------------------------------------------------------------------
+
+_SHARED_POOL: Optional[ThreadPoolExecutor] = None
+_SHARED_POOL_LOCK = threading.Lock()
+
+
+def _shared_pool() -> ThreadPoolExecutor:
+    """Lazy process-wide ingest pool (daemon threads), shared by every
+    engine constructed with ``ingest_workers=None``."""
+    global _SHARED_POOL
+    with _SHARED_POOL_LOCK:
+        if _SHARED_POOL is None:
+            _SHARED_POOL = ThreadPoolExecutor(
+                max_workers=min(8, (os.cpu_count() or 1) + 2),
+                thread_name_prefix="ct-ingest")
+        return _SHARED_POOL
+
 
 # ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
 
 class CTFuture:
-    """Result handle of ``submit_ingest`` / ``submit_query``.  ``result()``
-    flushes the owning engine's queue if the value is still pending, then
-    blocks on the device value.  A request that FAILED during ``flush``
-    stores its exception here and re-raises it from ``result()`` — one bad
-    request never drops the other queued requests of the same flush."""
+    """Result handle of ``submit_ingest`` / ``submit_query``, safe to
+    wait on from any thread.  Completion is a ``threading.Event``;
+    ``result(timeout=)`` blocks until the request resolves, flushing the
+    owning engine's queue while it waits (so a bare ``submit → result``
+    still makes progress without a scheduler thread).  A request that
+    FAILED stores its exception here and re-raises it from ``result()``
+    — one bad request never drops the other queued requests."""
 
-    __slots__ = ("_engine", "_payload", "_ready", "_error")
+    __slots__ = ("_engine", "_event", "_payload", "_error", "done_at")
 
     def __init__(self, engine: "CTEngine"):
         self._engine = engine
+        self._event = threading.Event()
         self._payload = None
-        self._ready = False
-        self._error = False
+        self._error: Optional[BaseException] = None
+        #: ``time.monotonic()`` at resolution (latency accounting)
+        self.done_at: Optional[float] = None
 
     def done(self) -> bool:
-        return self._ready
+        return self._event.is_set()
 
     def _set(self, payload) -> None:
-        self._payload, self._ready = payload, True
+        self._payload = payload
+        self.done_at = time.monotonic()
+        self._event.set()
 
     def _set_error(self, exc: BaseException) -> None:
-        self._payload, self._ready, self._error = exc, True, True
+        self._error = exc
+        self.done_at = time.monotonic()
+        self._event.set()
 
-    def result(self):
-        if not self._ready:
+    def result(self, timeout: Optional[float] = None):
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while not self._event.is_set():
             self._engine.flush()
-        if not self._ready:
-            raise RuntimeError("future unresolved after flush (engine bug)")
-        if self._error:
-            raise self._payload
+            if self._event.wait(0.02):
+                break
+            if deadline is not None and time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"CTFuture.result: request still pending after "
+                    f"{timeout:.3f}s")
+        if self._error is not None:
+            raise self._error
         return self._payload() if callable(self._payload) else self._payload
 
 
 @dataclass
 class _Tenant:
     """One named surrogate: scheme + plan + spec, plus the per-tenant
-    runtime arguments of the shared executable."""
+    runtime arguments of the shared executable and its scheduling
+    defaults."""
 
     name: str
     scheme: SchemeLike
@@ -374,6 +487,8 @@ class _Tenant:
     idxs: Tuple[jnp.ndarray, ...]
     coeffs: Tuple[jnp.ndarray, ...]
     surplus: Optional[jnp.ndarray] = None
+    deadline_ms: Optional[float] = None   # None = engine default
+    priority: int = 0
 
     @property
     def base_plan(self) -> ExecutorPlan:
@@ -385,14 +500,22 @@ class _Tenant:
 class _Request:
     """One queued unit of work.  Holds the tenant NAME, not the tenant
     object: refit/extend/drop_grid atomically replace the ``_Tenant``
-    record, and unregister removes it — resolving by name at flush time
-    makes queued work apply to the tenant the engine serves THEN (or fail
-    its future if the name is gone), never to a stale orphan."""
+    record, and unregister removes it — resolving by name at dispatch
+    time makes queued work apply to the tenant the engine serves THEN
+    (or fail its future if the name is gone), never to a stale orphan.
+
+    ``ingest_seq`` is the per-tenant ingest watermark: for an ingest,
+    its own generation number; for a query, the generation it must wait
+    for (every same-tenant ingest submitted before it)."""
 
     kind: str                       # "ingest" | "query"
     name: str
-    payload: Any                    # grids dict | (points (Q, d), q, qpad)
+    payload: Any                    # (grids, check_finite) | (points, q, qpad)
     future: CTFuture
+    ingest_seq: int = 0
+    priority: int = 0
+    deadline: Optional[float] = None      # absolute time.monotonic(); None
+    #                                       = only batch-full/flush dispatch
 
 
 def _tenant_arrays(plan) -> Tuple[Tuple[jnp.ndarray, ...],
@@ -432,68 +555,149 @@ def _qpad(q: int) -> int:
     return max(16, 1 << max(0, q - 1).bit_length())
 
 
-class CTEngine:
-    """Multi-tenant CT surrogate server (see the module docstring).
+_UNSET = object()
 
-    Single-controller, single-thread semantics: ``submit_*`` enqueue,
-    ``flush`` drains (ingests first — asynchronously dispatched, so their
-    compute overlaps the query batching — then one coalesced batched
-    eval dispatch per query signature).  The ingest-executable cache is
-    process-global; hit/miss counters are per engine.
+
+class CTEngine:
+    """Thread-safe multi-tenant CT surrogate server (see the module
+    docstring for the full threading / scheduling contract).
+
+    ``submit_*`` enqueue from any thread; the queue drains via
+    ``flush()`` (everything), ``pump()`` (one deadline/batch-full
+    scheduler step) or the ``start()``-ed background scheduler thread.
+    Ingests run on a background pool, ordered per tenant by a watermark
+    that queries of the same tenant wait on; queries coalesce into one
+    batched eval dispatch per signature group.  The ingest-executable
+    cache is process-global (lock-guarded); hit/miss counters are per
+    engine.  The queue is bounded (``max_pending``): non-blocking
+    submits raise ``EngineSaturated`` when full.
     """
 
-    def __init__(self, spec: Optional[ExecSpec] = None):
+    def __init__(self, spec: Optional[ExecSpec] = None, *,
+                 max_batch: int = 32, max_pending: int = 1024,
+                 deadline_ms: float = 10.0,
+                 ingest_workers: Optional[int] = None,
+                 check_finite: bool = False):
         if spec is not None and not isinstance(spec, ExecSpec):
             raise TypeError(f"CTEngine: spec must be an ExecSpec, got "
                             f"{type(spec).__name__}")
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self._default_spec = spec or ExecSpec()
+        self._max_batch = max_batch
+        self._max_pending = max_pending
+        self._deadline_ms = deadline_ms
+        self._check_finite = check_finite
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)    # new work / progress
+        self._space = threading.Condition(self._lock)   # queue has room
+        self._work_seq = 0          # bumped on every submit/progress event
         self._tenants: Dict[str, _Tenant] = {}
         self._pending: List[_Request] = []
+        self._ingest_submitted: Dict[str, int] = {}
+        self._ingest_done: Dict[str, int] = {}
         self._counters = {"ingests": 0, "queries": 0, "eval_batches": 0,
                           "coalesced_queries": 0, "cache_hits": 0,
                           "cache_misses": 0}
+        self._sched = {"dispatch_deadline": 0, "dispatch_batch_full": 0,
+                       "flushes": 0, "rejected": 0, "requeued": 0,
+                       "ingest_retries": 0}
+        if ingest_workers is None:
+            self._private_pool = None
+            self._inline_ingest = False
+        elif ingest_workers == 0:
+            self._private_pool = None
+            self._inline_ingest = True
+        else:
+            self._private_pool = ThreadPoolExecutor(
+                max_workers=ingest_workers, thread_name_prefix="ct-ingest")
+            self._inline_ingest = False
+        self._sched_thread: Optional[threading.Thread] = None
+        self._stop_evt: Optional[threading.Event] = None
 
     # -- registry -----------------------------------------------------------
 
     def register(self, name: str, scheme: SchemeLike, nodal_grids=None, *,
-                 spec: Optional[ExecSpec] = None) -> "CTEngine":
+                 spec: Optional[ExecSpec] = None,
+                 deadline_ms: Optional[float] = None,
+                 priority: int = 0) -> "CTEngine":
         """Admit tenant ``name``: build its plan under ``spec`` (engine
         default when omitted), bind the signature-shared executable, and
-        — when ``nodal_grids`` is given — ingest immediately."""
-        if name in self._tenants:
-            raise ValueError(f"tenant {name!r} already registered "
-                             f"(unregister first, or refit)")
+        — when ``nodal_grids`` is given — ingest immediately.
+        ``deadline_ms`` / ``priority`` set the tenant's scheduling
+        defaults (queries may override per call)."""
         if spec is not None and not isinstance(spec, ExecSpec):
             raise TypeError(f"register: spec must be an ExecSpec, got "
                             f"{type(spec).__name__}")
+        with self._lock:
+            if name in self._tenants:
+                raise ValueError(f"tenant {name!r} already registered "
+                                 f"(unregister first, or refit)")
         spec = spec or self._default_spec
-        plan = build_plan(scheme, spec=spec)
+        plan = build_plan(scheme, spec=spec)          # outside the lock
         tenant = self._bind(name, scheme, spec, plan)
-        self._tenants[name] = tenant
+        tenant.deadline_ms, tenant.priority = deadline_ms, priority
+        with self._work:
+            if name in self._tenants:
+                raise ValueError(f"tenant {name!r} already registered "
+                                 f"(unregister first, or refit)")
+            self._tenants[name] = tenant
+            if nodal_grids is not None:
+                # count the initial ingest in the per-name watermark so a
+                # query submitted between this insert and the surplus
+                # commit below WAITS for it instead of observing the
+                # still-empty tenant ("no ingested state to query")
+                self._ingest_submitted[name] = \
+                    self._ingest_submitted.get(name, 0) + 1
+            self._work_seq += 1
+            self._work.notify_all()
         if nodal_grids is not None:
             try:
-                tenant.surplus = self._dispatch_ingest(tenant, nodal_grids)
-                self._counters["ingests"] += 1
+                surplus = self._dispatch_ingest(tenant, nodal_grids)
+                with self._lock:
+                    tenant.surplus = surplus
+                    self._counters["ingests"] += 1
             except Exception:
-                del self._tenants[name]
+                with self._lock:
+                    if self._tenants.get(name) is tenant:
+                        del self._tenants[name]
                 raise
+            finally:
+                # advance even on failure: waiters re-check and fail fast
+                # against the rolled-back registry instead of hanging
+                with self._work:
+                    self._ingest_done[name] = \
+                        self._ingest_done.get(name, 0) + 1
+                    self._work_seq += 1
+                    self._work.notify_all()
         return self
 
     def unregister(self, name: str) -> None:
-        del self._tenants[name]
+        """Remove tenant ``name``.  Work already queued for the name
+        fails its future with a named ``KeyError`` at dispatch time
+        (never hangs); the per-name ingest watermark stays monotonic so
+        a later re-register is race-free against stragglers."""
+        with self._work:
+            del self._tenants[name]
+            self._work_seq += 1
+            self._work.notify_all()
 
     def __contains__(self, name: str) -> bool:
         return name in self._tenants
 
     def names(self) -> Tuple[str, ...]:
-        return tuple(self._tenants)
+        with self._lock:
+            return tuple(self._tenants)
 
     def _tenant(self, name: str) -> _Tenant:
-        try:
-            return self._tenants[name]
-        except KeyError:
-            raise KeyError(f"no tenant {name!r} (registered: "
-                           f"{sorted(self._tenants)})") from None
+        with self._lock:
+            try:
+                return self._tenants[name]
+            except KeyError:
+                raise KeyError(f"no tenant {name!r} (registered: "
+                               f"{sorted(self._tenants)})") from None
 
     def scheme(self, name: str) -> SchemeLike:
         return self._tenant(name).scheme
@@ -505,12 +709,24 @@ class CTEngine:
         return self._tenant(name).spec
 
     def surplus(self, name: str) -> jnp.ndarray:
-        """The tenant's served sparse-grid surplus (flushes if an ingest
-        for it is still queued)."""
+        """The tenant's served sparse-grid surplus (flushes and waits if
+        an ingest for it is still queued or in flight)."""
         t = self._tenant(name)
-        if any(r.name == name and r.kind == "ingest"
-               for r in self._pending):
+        with self._lock:
+            target = self._ingest_submitted.get(name, 0)
+            behind = self._ingest_done.get(name, 0) < target
+        if behind:
             self.flush()
+            deadline = time.monotonic() + _DRAIN_TIMEOUT_S
+            with self._work:
+                while self._ingest_done.get(name, 0) < target:
+                    if name not in self._tenants:
+                        break
+                    if not self._work.wait(1.0) \
+                            and time.monotonic() >= deadline:
+                        raise TimeoutError(
+                            f"surplus({name!r}): in-flight ingest did not "
+                            f"complete within {_DRAIN_TIMEOUT_S:.0f}s")
             t = self._tenant(name)
         if t.surplus is None:
             raise RuntimeError(f"tenant {name!r} has no ingested state yet")
@@ -522,7 +738,8 @@ class CTEngine:
               plan) -> _Tenant:
         signature = plan_signature(plan, spec)
         executable, hit = _ingest_executable(signature, plan, spec)
-        self._counters["cache_hits" if hit else "cache_misses"] += 1
+        with self._lock:
+            self._counters["cache_hits" if hit else "cache_misses"] += 1
         idxs, coeffs = _tenant_arrays(plan)
         return _Tenant(name=name, scheme=scheme, spec=spec, plan=plan,
                        signature=signature, executable=executable,
@@ -535,99 +752,427 @@ class CTEngine:
                       for b in base.buckets for ell in b.ells)
         return tenant.executable(parts, tenant.idxs, tenant.coeffs)
 
-    # -- continuous-batching queue ------------------------------------------
+    # -- thread-safe submission ---------------------------------------------
 
-    def submit_ingest(self, name: str, nodal_grids) -> CTFuture:
-        """Enqueue new solver output for ``name``; the future resolves to
-        the new surplus buffer at the next ``flush``."""
+    def _admit(self, block: bool, timeout: Optional[float]) -> None:
+        """Bounded-queue admission control; caller holds the lock."""
+        if len(self._pending) < self._max_pending:
+            return
+        if not block:
+            self._sched["rejected"] += 1
+            raise EngineSaturated(
+                f"engine queue is full ({self._max_pending} pending); "
+                f"flush(), start() the scheduler, or raise max_pending")
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while len(self._pending) >= self._max_pending:
+            if deadline is None:
+                self._space.wait(0.1)
+            else:
+                left = deadline - time.monotonic()
+                if left <= 0 or not self._space.wait(left):
+                    if len(self._pending) < self._max_pending:
+                        break
+                    self._sched["rejected"] += 1
+                    raise EngineSaturated(
+                        f"engine queue still full after {timeout:.3f}s "
+                        f"({self._max_pending} pending)")
+
+    def submit_ingest(self, name: str, nodal_grids, *, priority: int = 0,
+                      check_finite: Optional[bool] = None, block: bool = True,
+                      timeout: Optional[float] = None) -> CTFuture:
+        """Enqueue new solver output for ``name`` (callable from any
+        thread); the future resolves to the new surplus buffer once the
+        ingest pool commits it.  Ingests of one tenant apply in
+        submission order; queries of the same tenant submitted later
+        observe this ingest."""
         self._tenant(name)                      # raise early on a bad name
+        check = self._check_finite if check_finite is None else check_finite
         fut = CTFuture(self)
-        self._pending.append(_Request("ingest", name, nodal_grids, fut))
+        with self._work:
+            self._admit(block, timeout)
+            if name not in self._tenants:
+                raise KeyError(f"no tenant {name!r} (registered: "
+                               f"{sorted(self._tenants)})")
+            seq = self._ingest_submitted.get(name, 0) + 1
+            self._ingest_submitted[name] = seq
+            self._pending.append(
+                _Request("ingest", name, (nodal_grids, check), fut,
+                         ingest_seq=seq, priority=priority,
+                         deadline=time.monotonic()))
+            self._work_seq += 1
+            self._work.notify_all()
         return fut
 
-    def submit_query(self, name: str, points) -> CTFuture:
-        """Enqueue a point-evaluation batch against ``name``'s surplus;
-        the future resolves to the (Q,) values at the next ``flush``.
-        Same-signature queries across tenants coalesce into one batched
-        dispatch."""
+    def submit_query(self, name: str, points, *,
+                     deadline_ms: Optional[float] = None,
+                     priority: Optional[int] = None, block: bool = True,
+                     timeout: Optional[float] = None) -> CTFuture:
+        """Enqueue a point-evaluation batch against ``name``'s surplus
+        (callable from any thread); the future resolves to the (Q,)
+        values once the scheduler dispatches its signature group —
+        batch-full, deadline expiry, or any ``flush``.  Same-signature
+        queries across tenants coalesce into one batched dispatch."""
         tenant = self._tenant(name)
         points = _validate_points(points, tenant.base_plan.dim, name)
         q = points.shape[0]
+        if deadline_ms is None:
+            deadline_ms = tenant.deadline_ms if tenant.deadline_ms \
+                is not None else self._deadline_ms
+        prio = tenant.priority if priority is None else priority
         fut = CTFuture(self)
-        self._pending.append(
-            _Request("query", name, (points, q, _qpad(q)), fut))
+        dl = (time.monotonic() + deadline_ms / 1000.0
+              if deadline_ms is not None and math.isfinite(deadline_ms)
+              else None)
+        with self._work:
+            self._admit(block, timeout)
+            if name not in self._tenants:
+                raise KeyError(f"no tenant {name!r} (registered: "
+                               f"{sorted(self._tenants)})")
+            self._pending.append(
+                _Request("query", name, (points, q, _qpad(q)), fut,
+                         ingest_seq=self._ingest_submitted.get(name, 0),
+                         priority=prio, deadline=dl))
+            self._work_seq += 1
+            self._work.notify_all()
         return fut
 
+    # -- draining: flush / pump / scheduler ---------------------------------
+
     def flush(self) -> None:
-        """Drain the queue: dispatch pending ingests (in submission
-        order, asynchronously), then one batched eval per query
-        signature.  Queries always evaluate against the tenant's LATEST
-        surplus, including ingests from the same flush.  A failing
-        request resolves ITS OWN future with the exception (re-raised by
-        ``result()``); the other queued requests proceed."""
-        if not self._pending:
+        """Drain the WHOLE queue now: dispatch every pending ingest on
+        the pool (per-tenant chains, submission order), coalesce every
+        pending query into one batched eval per signature group, and
+        return once all of it completed.  The queue swap is atomic under
+        the engine lock — a ``submit_*`` racing this flush lands either
+        in this drain or intact in the queue for the next one, never
+        dropped.  A failing request resolves ITS OWN future with the
+        exception (re-raised by ``result()``); siblings proceed."""
+        with self._work:
+            pending, self._pending = self._pending, []
+            if pending:
+                self._sched["flushes"] += 1
+                self._space.notify_all()
+        if not pending:
             return
-        pending, self._pending = self._pending, []
-        for req in pending:
-            if req.kind != "ingest":
+        self._run(pending, drain=True)
+
+    def pump(self, now: Optional[float] = None) -> int:
+        """One scheduler step: dispatch only the DUE work (ingests
+        always; queries on batch-full or deadline expiry).  Returns the
+        number of requests resolved or handed to the pool."""
+        with self._work:
+            take, _ = self._take_due(time.monotonic() if now is None
+                                     else now)
+        if not take:
+            return 0
+        return self._run(take, drain=False)
+
+    def start(self) -> "CTEngine":
+        """Start the background scheduler thread (idempotent)."""
+        with self._lock:
+            if self._sched_thread is not None \
+                    and self._sched_thread.is_alive():
+                return self
+            stop_evt = threading.Event()
+            t = threading.Thread(target=self._scheduler_loop,
+                                 args=(stop_evt,), name="ct-scheduler",
+                                 daemon=True)
+            self._stop_evt, self._sched_thread = stop_evt, t
+        t.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the scheduler thread; ``drain=True`` flushes what is
+        left in the queue after it exits."""
+        with self._lock:
+            t, evt = self._sched_thread, self._stop_evt
+            self._sched_thread = self._stop_evt = None
+        if evt is not None:
+            evt.set()
+            with self._work:
+                self._work.notify_all()
+        if t is not None:
+            t.join(timeout=30.0)
+        if drain:
+            self.flush()
+
+    def close(self) -> None:
+        """Stop the scheduler, drain the queue, shut down a private
+        ingest pool.  The shared pool stays up for other engines."""
+        self.stop(drain=True)
+        if self._private_pool is not None:
+            self._private_pool.shutdown(wait=True)
+
+    def __enter__(self) -> "CTEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _scheduler_loop(self, stop_evt: threading.Event) -> None:
+        while not stop_evt.is_set():
+            now = time.monotonic()
+            with self._work:
+                seq = self._work_seq
+                take, next_wake = self._take_due(now)
+            if take:
+                did = self._run(take, drain=False)
+                if did == 0:
+                    # everything requeued (queries waiting on in-flight
+                    # ingests): block briefly instead of spinning
+                    with self._work:
+                        if self._work_seq == seq:
+                            self._work.wait(0.01)
                 continue
-            tenant = self._tenants.get(req.name)
-            if tenant is None:
-                req.future._set_error(KeyError(
-                    f"tenant {req.name!r} was unregistered before its "
-                    f"queued ingest ran"))
-                continue
+            with self._work:
+                if self._work_seq != seq:
+                    continue                    # raced a submit: rescan
+                delay = 0.05
+                if next_wake is not None:
+                    delay = min(delay, next_wake - time.monotonic())
+                self._work.wait(max(delay, 0.001))
+
+    def _take_due(self, now: float) -> Tuple[List[_Request],
+                                             Optional[float]]:
+        """Pull the due requests off the queue; caller holds the lock.
+        Ingests are always due (the pool overlaps them with everything
+        else); a query is due when its tenant's pending batch is full,
+        its deadline expired, or its tenant is gone (fail fast).
+        Returns ``(due, next_deadline)``."""
+        counts: Dict[str, int] = {}
+        for r in self._pending:
+            if r.kind == "query":
+                counts[r.name] = counts.get(r.name, 0) + 1
+        full = {n for n, c in counts.items() if c >= self._max_batch}
+        self._sched["dispatch_batch_full"] += len(full)
+        take, keep = [], []
+        next_wake: Optional[float] = None
+        for r in self._pending:
+            if r.kind == "ingest" or r.name in full \
+                    or r.name not in self._tenants:
+                take.append(r)
+            elif r.deadline is not None and r.deadline <= now:
+                take.append(r)
+                self._sched["dispatch_deadline"] += 1
+            else:
+                keep.append(r)
+                if r.deadline is not None and (next_wake is None
+                                               or r.deadline < next_wake):
+                    next_wake = r.deadline
+        self._pending = keep
+        if take:
+            self._space.notify_all()
+        return take, next_wake
+
+    # -- execution ----------------------------------------------------------
+
+    def _run(self, requests: List[_Request], drain: bool) -> int:
+        """Execute a batch of taken requests: per-tenant ingest chains go
+        to the pool (or run inline), queries resolve/coalesce on the
+        calling thread.  ``drain=True`` additionally barriers on the
+        chains before returning (flush semantics).  Returns the number
+        of requests resolved or handed to the pool."""
+        chains: Dict[str, List[_Request]] = {}
+        queries: List[_Request] = []
+        for r in requests:
+            if r.kind == "ingest":
+                chains.setdefault(r.name, []).append(r)
+            else:
+                queries.append(r)
+        progress = sum(len(c) for c in chains.values())
+        pool = None if self._inline_ingest \
+            else (self._private_pool or _shared_pool())
+        chain_futures = []
+        for reqs in chains.values():
+            if pool is None:
+                self._run_ingest_chain(reqs)
+            else:
+                chain_futures.append(pool.submit(self._run_ingest_chain,
+                                                 reqs))
+        try:
+            progress += self._run_queries(queries, drain=drain)
+        finally:
+            if drain:
+                for f in chain_futures:
+                    f.result()      # engine bugs only; per-request errors
+                    #                 resolved on the owning futures already
+        return progress
+
+    def _run_ingest_chain(self, reqs: List[_Request]) -> None:
+        """One tenant's queued ingests, in submission order.  EVERY exit
+        path advances the watermark and notifies — a failed ingest still
+        unblocks the queries that waited on it (they see the previous
+        surplus, or its error semantics via their own checks)."""
+        for req in reqs:
+            grids, check = req.payload
             try:
-                surplus = self._dispatch_ingest(tenant, req.payload)
+                surplus = self._ingest_one(req.name, grids, check)
             except Exception as exc:
                 req.future._set_error(exc)
-                continue
-            tenant.surplus = surplus
-            req.future._set(surplus)
-            self._counters["ingests"] += 1
+            else:
+                req.future._set(surplus)
+            finally:
+                with self._work:
+                    if req.ingest_seq > self._ingest_done.get(req.name, 0):
+                        self._ingest_done[req.name] = req.ingest_seq
+                    self._work_seq += 1
+                    self._work.notify_all()
 
-        # resolve query tenants by name NOW — after the ingests, and after
-        # any refit/extend/drop_grid that replaced tenant records since
-        # submission
-        groups: Dict[Tuple, List[Tuple[_Request, _Tenant]]] = {}
-        for req in pending:
-            if req.kind != "query":
-                continue
-            t = self._tenants.get(req.name)
-            if t is None:
-                req.future._set_error(KeyError(
-                    f"tenant {req.name!r} was unregistered before its "
-                    f"queued query ran"))
-                continue
-            if t.surplus is None:
-                req.future._set_error(RuntimeError(
-                    f"tenant {req.name!r} has no ingested state to query"))
-                continue
-            points, _, qpad = req.payload
-            key = (t.surplus.shape, str(t.surplus.dtype),
-                   str(points.dtype), qpad)
-            groups.setdefault(key, []).append((req, t))
+    def _ingest_one(self, name: str, nodal_grids, check_finite: bool):
+        """Dispatch + commit one ingest.  Device work runs OUTSIDE the
+        lock; the commit is a compare-and-swap against the tenant record
+        read before dispatch, retried when a concurrent refit/rebind
+        swapped the record mid-flight."""
+        for _ in range(5):
+            with self._lock:
+                tenant = self._tenants.get(name)
+            if tenant is None:
+                raise KeyError(f"tenant {name!r} was unregistered before "
+                               f"its queued ingest ran")
+            surplus = self._dispatch_ingest(tenant, nodal_grids)
+            # device-side failures surface HERE, on the owning request —
+            # never from a sibling's flush
+            jax.block_until_ready(surplus)
+            if check_finite and not bool(_FINITE_CHECK(surplus)):
+                raise FloatingPointError(
+                    f"ingest for tenant {name!r} produced non-finite "
+                    f"surplus values")
+            with self._work:
+                cur = self._tenants.get(name)
+                if cur is None:
+                    raise KeyError(f"tenant {name!r} was unregistered "
+                                   f"before its queued ingest ran")
+                if cur is tenant:
+                    cur.surplus = surplus
+                    self._counters["ingests"] += 1
+                    return surplus
+                self._sched["ingest_retries"] += 1
+        raise RuntimeError(f"ingest for tenant {name!r} kept losing the "
+                           f"rebind race (5 attempts) — engine bug")
 
-        for (_, _, pts_dtype, qpad), reqs in groups.items():
-            try:
-                surp = jnp.stack([t.surplus for _, t in reqs])
-                dim = reqs[0][1].base_plan.dim
-                padded = np.zeros((len(reqs), qpad, dim), pts_dtype)
-                for i, (r, _) in enumerate(reqs):
-                    points, q, _ = r.payload
-                    padded[i, :q] = points
-                out = _EVAL_BATCHED(surp, jnp.asarray(padded))
-            except Exception as exc:
-                for r, _ in reqs:
-                    r.future._set_error(exc)
-                continue
-            for i, (r, _) in enumerate(reqs):
-                q = r.payload[1]
-                r.future._set(
-                    lambda out=out, i=i, q=q: np.asarray(out[i, :q]))
-            self._counters["eval_batches"] += 1
-            self._counters["queries"] += len(reqs)
-            self._counters["coalesced_queries"] += len(reqs) - 1
+    def _run_queries(self, queries: List[_Request], drain: bool) -> int:
+        """Resolve query requests: group the watermark-eligible ones by
+        signature and dispatch; park the rest (requeue when pumping,
+        wait for the in-flight ingests when draining)."""
+        if not queries:
+            return 0
+        resolved = 0
+        remaining = list(queries)
+        give_up = time.monotonic() + _DRAIN_TIMEOUT_S
+        while remaining:
+            groups: Dict[Tuple, List[Tuple[_Request, Any, int]]] = {}
+            waiting: List[_Request] = []
+            with self._lock:
+                for req in remaining:
+                    t = self._tenants.get(req.name)
+                    if t is None:
+                        req.future._set_error(KeyError(
+                            f"tenant {req.name!r} was unregistered before "
+                            f"its queued query ran"))
+                        resolved += 1
+                        continue
+                    if self._ingest_done.get(req.name, 0) < req.ingest_seq:
+                        waiting.append(req)     # its ingest is in flight
+                        continue
+                    if t.surplus is None:
+                        if self._ingest_done.get(req.name, 0) < \
+                                self._ingest_submitted.get(req.name, 0):
+                            # a re-registered tenant whose first surplus
+                            # is still committing: the query predates the
+                            # swap (its seq is already met) but must not
+                            # observe the empty record
+                            waiting.append(req)
+                            continue
+                        req.future._set_error(RuntimeError(
+                            f"tenant {req.name!r} has no ingested state "
+                            f"to query"))
+                        resolved += 1
+                        continue
+                    points, _, qpad = req.payload
+                    key = (t.surplus.shape, str(t.surplus.dtype),
+                           str(points.dtype), qpad)
+                    groups.setdefault(key, []).append(
+                        (req, t.surplus, t.base_plan.dim))
+            if groups:
+                resolved += self._dispatch_query_groups(groups)
+            if not waiting:
+                break
+            if not drain:
+                with self._work:
+                    self._pending[:0] = waiting
+                    self._sched["requeued"] += len(waiting)
+                break
+            with self._work:
+                def _unblocked(r):
+                    t = self._tenants.get(r.name)
+                    if t is None:
+                        return True
+                    done = self._ingest_done.get(r.name, 0)
+                    return done >= r.ingest_seq and (
+                        t.surplus is not None
+                        or done >= self._ingest_submitted.get(r.name, 0))
+                progressed = any(_unblocked(r) for r in waiting)
+                if not progressed:
+                    self._work.wait(0.05)
+                    if time.monotonic() >= give_up:
+                        for r in waiting:
+                            r.future._set_error(TimeoutError(
+                                f"query for tenant {r.name!r} timed out "
+                                f"waiting for its in-flight ingest"))
+                        resolved += len(waiting)
+                        break
+            remaining = waiting
+        return resolved
+
+    def _dispatch_query_groups(self, groups) -> int:
+        """Batched eval of signature groups, highest priority / earliest
+        deadline first, chunked to ``max_batch``.  Runs OUTSIDE the
+        engine lock (device dispatch never holds locks); counters update
+        under the lock afterwards."""
+        def group_rank(item):
+            entries = item[1]
+            return (-max(r.priority for r, _, _ in entries),
+                    min((r.deadline if r.deadline is not None else math.inf)
+                        for r, _, _ in entries))
+
+        count = 0
+        for key, entries in sorted(groups.items(), key=group_rank):
+            _, _, pts_dtype, qpad = key
+            entries.sort(key=lambda e: (
+                -e[0].priority,
+                e[0].deadline if e[0].deadline is not None else math.inf))
+            for off in range(0, len(entries), self._max_batch):
+                chunk = entries[off:off + self._max_batch]
+                try:
+                    # pad the BATCH axis to a power of two as well (>= 4):
+                    # under deadline dispatch the group size varies per
+                    # window, and an unpadded T would recompile the
+                    # batched eval for every new size
+                    tpad = max(4, 1 << max(0, len(chunk) - 1).bit_length())
+                    rows = [s for _, s, _ in chunk]
+                    rows += [jnp.zeros_like(rows[0])] * (tpad - len(chunk))
+                    surp = jnp.stack(rows)
+                    dim = chunk[0][2]
+                    padded = np.zeros((tpad, qpad, dim), pts_dtype)
+                    for i, (r, _, _) in enumerate(chunk):
+                        points, q, _ = r.payload
+                        padded[i, :q] = points
+                    out = _EVAL_BATCHED(surp, jnp.asarray(padded))
+                    jax.block_until_ready(out)
+                except Exception as exc:
+                    for r, _, _ in chunk:
+                        r.future._set_error(exc)
+                else:
+                    for i, (r, _, _) in enumerate(chunk):
+                        q = r.payload[1]
+                        r.future._set(
+                            lambda out=out, i=i, q=q: np.asarray(out[i, :q]))
+                    with self._lock:
+                        self._counters["eval_batches"] += 1
+                        self._counters["queries"] += len(chunk)
+                        self._counters["coalesced_queries"] += len(chunk) - 1
+                count += len(chunk)
+        return count
 
     # -- synchronous conveniences -------------------------------------------
 
@@ -676,28 +1221,89 @@ class CTEngine:
                                                 plan=tenant.plan)
         self._commit(tenant, scheme, plan, nodal_grids)
 
+    def rebind(self, name: str, *, mesh: Any = _UNSET,
+               axis_name: Any = _UNSET, n_slabs: Any = _UNSET) -> str:
+        """Elastic-rebalance fast lane: move tenant ``name`` onto a new
+        mesh / slab layout WITHOUT recomputing its surplus.  The base
+        plan is re-sharded incrementally (``shard_plan(..., old=)``
+        reuses unchanged slab buckets), the signature-shared executable
+        is re-bound, and the served surplus carries over unchanged —
+        queued queries keep resolving throughout.  Returns what
+        happened: ``"kept"`` (spec unchanged), ``"sharded"``,
+        ``"resharded"``, ``"unsharded"`` or ``"rebound"``."""
+        tenant = self._tenant(name)
+        changes = {}
+        if mesh is not _UNSET:
+            changes["mesh"] = mesh
+        if axis_name is not _UNSET:
+            changes["axis_name"] = axis_name
+        if n_slabs is not _UNSET:
+            changes["n_slabs"] = n_slabs
+        new_spec = dataclasses.replace(tenant.spec, **changes) \
+            if changes else tenant.spec
+        if new_spec == tenant.spec:
+            return "kept"
+        base = tenant.base_plan
+        was_sharded = isinstance(tenant.plan, ShardedPlan)
+        if new_spec.slabs > 1:
+            plan = shard_plan(base, new_spec.slabs,
+                              old=tenant.plan if was_sharded else None)
+            outcome = "resharded" if was_sharded else "sharded"
+        else:
+            plan = base
+            outcome = "unsharded" if was_sharded else "rebound"
+        nxt = self._bind(name, tenant.scheme, new_spec, plan)
+        nxt.surplus = tenant.surplus          # carried over: no recompute
+        nxt.deadline_ms, nxt.priority = tenant.deadline_ms, tenant.priority
+        with self._work:
+            if self._tenants.get(name) is not tenant:
+                raise RuntimeError(
+                    f"tenant {name!r} changed during rebind (concurrent "
+                    f"refit/unregister) — retry")
+            self._tenants[name] = nxt
+            self._work_seq += 1
+            self._work.notify_all()
+        return outcome
+
     def _commit(self, tenant: _Tenant, scheme: SchemeLike, plan,
                 nodal_grids) -> None:
-        """Re-bind a tenant onto (scheme, plan) and ingest atomically."""
+        """Re-bind a tenant onto (scheme, plan) and ingest atomically:
+        bind + device work run outside the lock, the record swap is one
+        locked step keyed by name (so queued work picks up the NEW
+        record at its own dispatch time)."""
         nxt = self._bind(tenant.name, scheme, tenant.spec, plan)
+        nxt.deadline_ms, nxt.priority = tenant.deadline_ms, tenant.priority
         surplus = self._dispatch_ingest(nxt, nodal_grids)  # raises first
+        jax.block_until_ready(surplus)
         nxt.surplus = surplus
-        self._counters["ingests"] += 1
-        self._tenants[tenant.name] = nxt
+        with self._work:
+            if tenant.name not in self._tenants:
+                raise KeyError(f"tenant {tenant.name!r} was unregistered "
+                               f"during refit")
+            self._counters["ingests"] += 1
+            self._tenants[tenant.name] = nxt
+            self._work_seq += 1
+            self._work.notify_all()
 
     # -- accounting ---------------------------------------------------------
 
     def stats(self) -> Dict[str, Any]:
         """Aggregated serving statistics: per-tenant and summed
         ``plan_launch_stats`` (the plan-derived dispatch/HBM accounting
-        of ONE ingest), the shared compile-cache counters, and the
-        continuous-batching eval counters."""
+        of ONE ingest), the shared compile-cache counters, the
+        continuous-batching eval counters, and the scheduler's
+        dispatch/backpressure accounting."""
+        with self._lock:
+            tenants = dict(self._tenants)
+            counters = dict(self._counters)
+            sched = dict(self._sched)
+            pending = len(self._pending)
         per_tenant = {}
         gather = {"buckets": 0, "members": 0, "launches": 0,
                   "pallas_launches": 0, "einsum_dispatches": 0,
                   "scatter_dispatches": 0, "transform_bytes": 0,
                   "stack_bytes": 0}
-        for name, t in self._tenants.items():
+        for name, t in tenants.items():
             s = plan_launch_stats(t.plan, fused=t.spec.fused)
             per_tenant[name] = s
             for k in gather:
@@ -705,24 +1311,32 @@ class CTEngine:
         # count over the LIVE tenants' executables (dedup by identity) —
         # an executable evicted from the LRU cache keeps serving its
         # tenants and must keep being counted
-        uniq = {id(t.executable): t.executable
-                for t in self._tenants.values()}
+        uniq = {id(t.executable): t.executable for t in tenants.values()}
         jit_entries = sum(f._cache_size() for f in uniq.values())
+        with _INGEST_CACHE_LOCK:
+            cache_entries = len(_INGEST_EXECUTABLES)
         return {
-            "tenants": len(self._tenants),
+            "tenants": len(tenants),
             "per_tenant": per_tenant,
             "gather": gather,
-            "ingests": self._counters["ingests"],
+            "ingests": counters["ingests"],
             "ingest_cache": {
-                "entries": len(_INGEST_EXECUTABLES),
-                "hits": self._counters["cache_hits"],
-                "misses": self._counters["cache_misses"],
+                "entries": cache_entries,
+                "hits": counters["cache_hits"],
+                "misses": counters["cache_misses"],
                 "jit_entries": jit_entries,
             },
             "eval": {
-                "queries": self._counters["queries"],
-                "batches": self._counters["eval_batches"],
-                "coalesced_queries": self._counters["coalesced_queries"],
+                "queries": counters["queries"],
+                "batches": counters["eval_batches"],
+                "coalesced_queries": counters["coalesced_queries"],
                 "compiles": _EVAL_BATCHED._cache_size(),
+            },
+            "scheduler": {
+                "pending": pending,
+                "max_batch": self._max_batch,
+                "max_pending": self._max_pending,
+                "deadline_ms": self._deadline_ms,
+                **sched,
             },
         }

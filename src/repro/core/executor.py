@@ -85,10 +85,11 @@ classical ``CombinationScheme`` and the downward-closed ``GeneralScheme``
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import warnings
 from dataclasses import dataclass
-from functools import lru_cache
 from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -106,7 +107,8 @@ __all__ = ["ExecutorPlan", "Bucket", "ShardedPlan", "SlabBucket",
            "update_plan_coefficients", "ct_transform", "ct_scatter",
            "ct_embedded", "ct_transform_with_plan", "ct_scatter_with_plan",
            "ct_embedded_with_plan", "bucket_surpluses",
-           "bucket_tail_surpluses", "plan_fused_ok", "plan_launch_stats"]
+           "bucket_tail_surpluses", "plan_fused_ok", "plan_launch_stats",
+           "clear_plan_cache"]
 
 
 # ---------------------------------------------------------------------------
@@ -114,20 +116,33 @@ __all__ = ["ExecutorPlan", "Bucket", "ShardedPlan", "SlabBucket",
 # ---------------------------------------------------------------------------
 
 #: (function name, sorted kwarg names) combinations already warned about —
-#: each legacy call-site family warns exactly ONCE per process.  Tests
-#: reset via ``repro.core.engine.reset_deprecation_warnings``.
+#: each legacy call-site family warns exactly ONCE per process.  Guarded
+#: by ``_WARNED_LEGACY_LOCK``: the bare check-then-add was a race (two
+#: threads hitting the same legacy call site concurrently both missed the
+#: set and warned twice, breaking the warn-once contract).  Tests reset
+#: via ``repro.core.engine.reset_deprecation_warnings``.
 _WARNED_LEGACY: set = set()
+_WARNED_LEGACY_LOCK = threading.Lock()
+
+
+def reset_legacy_warnings() -> None:
+    """Re-arm every once-per-call-site legacy-kwarg warning (tests)."""
+    with _WARNED_LEGACY_LOCK:
+        _WARNED_LEGACY.clear()
 
 
 def warn_legacy_kwargs(fn_name: str, kwarg_names: Sequence[str]) -> None:
     """One ``DeprecationWarning`` per (function, kwargs) combination: the
     scattered execution kwargs (``merge=``, ``mesh=``, ``sharded_plan=``,
     ``fused=``, ``interpret=``, ...) keep working but should be replaced
-    by one ``spec=repro.core.engine.ExecSpec(...)``."""
+    by one ``spec=repro.core.engine.ExecSpec(...)``.  Thread-safe: the
+    first thread to claim the (function, kwargs) key warns; concurrent
+    callers of the same family stay silent."""
     key = (fn_name, tuple(sorted(kwarg_names)))
-    if key in _WARNED_LEGACY:
-        return
-    _WARNED_LEGACY.add(key)
+    with _WARNED_LEGACY_LOCK:
+        if key in _WARNED_LEGACY:
+            return
+        _WARNED_LEGACY.add(key)
     shown = ", ".join(f"{k}=" for k in sorted(kwarg_names))
     warnings.warn(
         f"{fn_name}: keyword(s) {shown} are deprecated; pass "
@@ -576,9 +591,89 @@ def build_plan(scheme: SchemeLike,
     return plan
 
 
-@lru_cache(maxsize=64)
+class _PlanCache:
+    """Thread-safe LRU plan cache (replaces the old module-global
+    ``functools.lru_cache``).
+
+    Two properties the lru_cache could not give:
+
+    * an explicit, exported ``clear_plan_cache()`` — tests and benchmarks
+      that build many throwaway schemes no longer pin up to 64 plans'
+      index maps for process lifetime;
+    * a key/value contract: keys are ``(scheme, full_levels, merge)`` and
+      values are host-side ``ExecutorPlan``s (numpy index maps only).
+      Meshes, ``ExecSpec``s and slab-sharded plans NEVER enter the cache
+      (``build_plan`` re-shards the cached base plan per call), so a
+      retired device mesh is never kept alive by the plan cache — the
+      old failure mode was a meshed caller pinning mesh refs and their
+      device buffers until 64 other plans aged the entry out.
+
+    Concurrent misses on one key may both build; the first insert wins so
+    callers keep getting ONE object per key (identity reuse is load-
+    bearing for ``extend_plan``'s incremental path).
+    """
+
+    def __init__(self, maxsize: int):
+        self._data: "collections.OrderedDict" = collections.OrderedDict()
+        self._lock = threading.Lock()
+        self._maxsize = maxsize
+
+    def get(self, key):
+        with self._lock:
+            val = self._data.get(key)
+            if val is not None:
+                self._data.move_to_end(key)
+            return val
+
+    def put(self, key, value):
+        """Insert-if-absent; returns the winning (cached) value."""
+        with self._lock:
+            have = self._data.get(key)
+            if have is not None:
+                self._data.move_to_end(key)
+                return have
+            self._data[key] = value
+            while len(self._data) > self._maxsize:
+                self._data.popitem(last=False)
+            return value
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def keys(self):
+        with self._lock:
+            return list(self._data)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+
+
+_PLAN_CACHE = _PlanCache(maxsize=64)
+
+
+def clear_plan_cache() -> None:
+    """Drop every cached executor plan (tests / benchmarks).
+
+    The plan cache holds host-side numpy index maps only — but a test or
+    benchmark sweeping many schemes can still pin tens of MB of index
+    maps; clear between sweeps to keep memory measurements honest."""
+    _PLAN_CACHE.clear()
+
+
 def _build_plan_cached(scheme: SchemeLike, full_levels: LevelVector,
                        merge: Optional[MergeConfig]) -> ExecutorPlan:
+    key = (scheme, full_levels, merge)
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        return plan
+    return _PLAN_CACHE.put(key, _build_plan_uncached(scheme, full_levels,
+                                                     merge))
+
+
+def _build_plan_uncached(scheme: SchemeLike, full_levels: LevelVector,
+                         merge: Optional[MergeConfig]) -> ExecutorPlan:
     fine_shape = grid_shape(full_levels)
     fine_size = int(np.prod(fine_shape))
     fine_strides = _fine_strides(fine_shape)

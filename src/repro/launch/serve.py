@@ -120,6 +120,13 @@ class CTSurrogate:
     rebuilds.  The pre-ExecSpec keywords (``interpret=``, ``mesh=``,
     ``axis_name=``, ``merge=``) keep working as deprecation shims that
     fold into a spec and warn once.
+
+    The backing engine is thread-safe: ``submit_query`` /
+    ``submit_update`` enqueue from any thread and return ``CTFuture``
+    handles, riding the engine's deadline-aware batching (see the
+    ``repro.core.engine`` docstring for the scheduler contract); the
+    synchronous ``query`` / ``update`` remain the one-caller
+    convenience path.
     """
 
     def __init__(self, scheme, nodal_grids, spec=None, *,
@@ -192,6 +199,17 @@ class CTSurrogate:
         power of two before dispatch so varying batch sizes compile once
         per bucket, not once per Q."""
         return self._engine.query(self._name, points)
+
+    def submit_query(self, points, **kw):
+        """Asynchronous ``query``: enqueue on the engine (thread-safe)
+        and return the ``CTFuture``.  Accepts the engine's scheduling
+        keywords (``deadline_ms=``, ``priority=``, ``block=``)."""
+        return self._engine.submit_query(self._name, points, **kw)
+
+    def submit_update(self, nodal_grids, **kw):
+        """Asynchronous ``update``: enqueue an ingest on the engine
+        (thread-safe) and return the ``CTFuture``."""
+        return self._engine.submit_ingest(self._name, nodal_grids, **kw)
 
 
 def main(argv=None):

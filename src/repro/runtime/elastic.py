@@ -7,14 +7,24 @@ chip count under the constraint that TP stays within a pod's ICI domain,
 (3) the launcher re-lowers the step for the new mesh and restores.
 
 ``plan_mesh`` is pure policy (unit-testable without devices).
+
+``rebalance_engine`` is the CT-serving recovery path: move every tenant
+of a live ``CTEngine`` onto a new (possibly smaller) slab mesh through
+the engine's ``rebind`` fast lane — plans re-shard incrementally
+(``shard_plan(..., old=)`` reuses unchanged slab buckets by identity)
+and each tenant's served surplus carries over WITHOUT recomputation, so
+queued queries keep resolving while the fleet resizes.  Combined with
+``CTEngine.drop_grid`` (the coefficient-only recombination from
+``repro.runtime.fault_tolerance``), a lost device costs one rebind plus
+at most one re-ingest per affected tenant, never a plan rebuild.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
-__all__ = ["MeshPlan", "plan_mesh"]
+__all__ = ["MeshPlan", "plan_mesh", "rebalance_engine"]
 
 
 @dataclass(frozen=True)
@@ -61,3 +71,28 @@ def plan_mesh(num_chips: int, *, chips_per_pod: int = 256,
         model //= 2
     data = per_pod // model
     return MeshPlan(pods=pods, data=data, model=model)
+
+
+def rebalance_engine(engine, mesh=None, *, axis_name: str = "slab",
+                     names=None) -> Dict[str, str]:
+    """Move engine tenants onto ``mesh`` (or OFF any mesh when ``None``)
+    through ``CTEngine.rebind`` — the coefficient-preserving fast lane:
+    no surplus recompute, incremental plan re-shard, executable re-bound
+    from the shared signature cache.
+
+    ``names`` restricts the sweep (default: every tenant).  Returns
+    ``{name: outcome}`` with the per-tenant ``rebind`` outcome
+    (``"kept"``, ``"sharded"``, ``"resharded"``, ``"unsharded"``,
+    ``"rebound"``).  Safe to run while submitters are live: each tenant
+    swap is atomic and queued work resolves against the record the
+    engine serves at its own dispatch time.
+    """
+    outcomes: Dict[str, str] = {}
+    for name in (engine.names() if names is None else tuple(names)):
+        if mesh is None:
+            outcomes[name] = engine.rebind(name, mesh=None, n_slabs=None)
+        else:
+            outcomes[name] = engine.rebind(name, mesh=mesh,
+                                           axis_name=axis_name,
+                                           n_slabs=None)
+    return outcomes

@@ -658,3 +658,192 @@ def test_surrogates_share_engine_and_compile_cache():
     assert st["ingest_cache"]["hits"] == 1
     # the per-tenant gather accounting aggregates across tenants
     assert st["gather"]["members"] == 2 * len(scheme.grids)
+
+
+# ---------------------------------------------------------------------------
+# Deadline/priority scheduler, backpressure, error routing (PR 6)
+# ---------------------------------------------------------------------------
+
+def test_pump_dispatches_on_deadline_or_batch_full():
+    """``pump`` is flush-on-deadline-or-batch-full, NOT flush-everything:
+    a query inside its latency budget stays queued, an expired one (or a
+    full per-tenant batch) dispatches."""
+    scheme = CombinationScheme(2, 3)
+    eng = CTEngine(max_batch=4, deadline_ms=10_000.0)
+    eng.register("t", scheme, _random_grids(scheme, np.random.default_rng(20)))
+    pts = np.random.default_rng(200).random((4, 2))
+
+    fut = eng.submit_query("t", pts)
+    assert eng.pump() == 0 and not fut.done()      # budget not expired
+    assert eng.pump(now=1e18) == 1 and fut.done()  # deadline passed -> due
+    np.testing.assert_array_equal(fut.result(), eng.query("t", pts))
+
+    futs = [eng.submit_query("t", pts) for _ in range(4)]
+    assert eng.pump() == 4                          # batch-full -> due now
+    assert all(f.done() for f in futs)
+    sched = eng.stats()["scheduler"]
+    assert sched["dispatch_batch_full"] >= 1
+    assert sched["dispatch_deadline"] >= 1
+
+    # ingests are ALWAYS due (the pool overlaps them with everything)
+    f_i = eng.submit_ingest("t", _random_grids(scheme,
+                                               np.random.default_rng(21)))
+    assert eng.pump() >= 1
+    f_i.result(timeout=30)
+    assert f_i.done()
+
+
+def test_scheduler_thread_serves_without_explicit_flush():
+    """A ``start()``-ed engine resolves futures on its own; no caller
+    ever invokes flush/result-autoflush (we wait on the raw event)."""
+    scheme = CombinationScheme(2, 3)
+    eng = CTEngine(deadline_ms=5.0)
+    eng.register("t", scheme, _random_grids(scheme, np.random.default_rng(22)))
+    pts = np.random.default_rng(220).random((8, 2))
+    want = eng.query("t", pts)
+    with eng:                                       # start()/close()
+        fut = eng.submit_query("t", pts)
+        assert fut._event.wait(timeout=30.0)        # scheduler resolved it
+    np.testing.assert_array_equal(fut.result(), want)
+
+
+def test_priority_orders_dispatch_within_a_pump():
+    """Higher-priority signature groups dispatch first (observable via
+    the futures' completion timestamps)."""
+    s_small, s_big = CombinationScheme(2, 3), CombinationScheme(2, 4)
+    eng = CTEngine()
+    rng = np.random.default_rng(23)
+    eng.register("low", s_small, _random_grids(s_small, rng))
+    eng.register("high", s_big, _random_grids(s_big, rng))   # distinct group
+    pts = np.random.default_rng(230).random((4, 2))
+    f_low = eng.submit_query("low", pts, priority=0)
+    f_high = eng.submit_query("high", pts, priority=5)
+    assert eng.pump(now=1e18) == 2
+    assert f_low.done() and f_high.done()
+    assert f_high.done_at <= f_low.done_at
+
+
+def test_backpressure_bounded_queue():
+    from repro.core.engine import EngineSaturated
+    scheme = CombinationScheme(2, 3)
+    eng = CTEngine(max_pending=2)
+    eng.register("t", scheme, _random_grids(scheme, np.random.default_rng(24)))
+    pts = np.random.default_rng(240).random((4, 2))
+    eng.submit_query("t", pts)
+    eng.submit_query("t", pts)
+    with pytest.raises(EngineSaturated, match="full"):
+        eng.submit_query("t", pts, block=False)
+    with pytest.raises(EngineSaturated, match="full"):
+        eng.submit_query("t", pts, block=True, timeout=0.05)
+    assert eng.stats()["scheduler"]["rejected"] == 2
+    eng.flush()                                     # frees the queue
+    f = eng.submit_query("t", pts, block=False)     # admitted again
+    np.testing.assert_array_equal(f.result(), eng.query("t", pts))
+
+
+def test_check_finite_ingest_fails_only_its_own_future():
+    """Satellite: a device-side NaN surfacing at block_until_ready inside
+    the ingest worker resolves the OWNING future with the error; sibling
+    requests in the same flush complete untouched."""
+    scheme = CombinationScheme(2, 3)
+    rng = np.random.default_rng(25)
+    grids = _random_grids(scheme, rng)
+    eng = CTEngine(check_finite=True)
+    eng.register("a", scheme, grids)
+    eng.register("b", scheme, _random_grids(scheme, rng))
+    before = np.asarray(eng.surplus("a"))
+
+    bad = {ell: g for ell, g in grids.items()}
+    first = next(iter(bad))
+    bad[first] = jnp.asarray(np.full(np.shape(bad[first]), np.nan))
+    f_bad = eng.submit_ingest("a", bad)
+    pts = np.random.default_rng(250).random((8, 2))
+    f_q = eng.submit_query("b", pts)
+    eng.flush()                                     # must not raise
+    with pytest.raises(FloatingPointError, match="non-finite"):
+        f_bad.result()
+    np.testing.assert_array_equal(np.asarray(eng.surplus("a")), before)
+    np.testing.assert_array_equal(f_q.result(), eng.query("b", pts))
+
+    # per-submit override beats the engine default
+    f_ok = eng.submit_ingest("a", bad, check_finite=False)
+    eng.flush()
+    assert not np.all(np.isfinite(np.asarray(f_ok.result())))
+
+
+def test_future_result_timeout():
+    eng = CTEngine()
+    fut = E.CTFuture(eng)                       # never resolved
+    with pytest.raises(TimeoutError, match="pending"):
+        fut.result(timeout=0.05)
+
+
+def test_rebind_offmesh_reuses_executable_and_surplus():
+    """``rebind`` off-mesh: the spec swap re-binds from the shared cache
+    (same signature -> a HIT, no recompile) and the served surplus
+    carries over without recomputation."""
+    scheme = CombinationScheme(2, 4)
+    eng = CTEngine()
+    eng.register("t", scheme, _random_grids(scheme, np.random.default_rng(26)))
+    surp_before = eng.surplus("t")
+    misses = eng.stats()["ingest_cache"]["misses"]
+    assert eng.rebind("t") == "kept"
+    assert eng.rebind("t", axis_name="row") == "rebound"
+    assert eng.stats()["ingest_cache"]["misses"] == misses  # hit, not miss
+    assert eng.surplus("t") is surp_before
+    pts = np.random.default_rng(260).random((8, 2))
+    assert eng.query("t", pts).shape == (8,)
+
+
+@pytest.mark.multidevice
+def test_rebalance_engine_onto_and_off_a_mesh():
+    """The elastic fast lane end to end: tenants move onto a slab mesh
+    and back WITHOUT surplus recomputation, bit-identical serving."""
+    from repro.compat import AxisType, make_mesh
+    from repro.runtime.elastic import rebalance_engine
+    mesh = make_mesh((8,), ("slab",), axis_types=(AxisType.Auto,))
+    scheme = GeneralScheme.regular(2, 4)
+    rng = np.random.default_rng(27)
+    eng = CTEngine()
+    eng.register("a", scheme, _random_grids(scheme, rng))
+    eng.register("b", scheme, _random_grids(scheme, rng))
+    pts = np.random.default_rng(270).random((16, 2))
+    want_a, want_b = eng.query("a", pts), eng.query("b", pts)
+    ingests = eng.stats()["ingests"]
+
+    out = rebalance_engine(eng, mesh)
+    assert out == {"a": "sharded", "b": "sharded"}
+    assert eng.stats()["ingests"] == ingests        # no recompute
+    np.testing.assert_array_equal(eng.query("a", pts), want_a)
+    np.testing.assert_array_equal(eng.query("b", pts), want_b)
+    # the NEXT ingest runs slab-sharded and still matches the oracle
+    g2 = _random_grids(scheme, rng)
+    eng.update("a", g2)
+    np.testing.assert_array_equal(np.asarray(eng.surplus("a")),
+                                  np.asarray(ct_transform(g2, scheme)))
+
+    out = rebalance_engine(eng, None)
+    assert out == {"a": "unsharded", "b": "unsharded"}
+    np.testing.assert_array_equal(eng.query("b", pts), want_b)
+
+
+def test_plan_cache_contract_and_explicit_clear():
+    """Satellite: ``build_plan``'s cache keys/values are host-side only —
+    no ExecSpec, no mesh, no ShardedPlan ever enters it — and
+    ``clear_plan_cache()`` empties it."""
+    from repro.core.executor import _PLAN_CACHE, clear_plan_cache
+    clear_plan_cache()
+    scheme = CombinationScheme(2, 4)
+    p1 = build_plan(scheme)
+    assert build_plan(scheme) is p1                 # identity-stable hit
+    sp = build_plan(scheme, spec=ExecSpec(n_slabs=4))
+    from repro.core.executor import ShardedPlan
+    assert isinstance(sp, ShardedPlan)
+    for key in _PLAN_CACHE.keys():
+        for part in key:
+            assert not isinstance(part, ExecSpec)
+            assert not hasattr(part, "devices")     # no mesh objects
+    assert len(_PLAN_CACHE) >= 1
+    clear_plan_cache()
+    assert len(_PLAN_CACHE) == 0
+    assert build_plan(scheme) is not p1             # genuinely rebuilt
