@@ -130,6 +130,37 @@ surplus (the elastic-rebalance fast lane); ``stats()`` aggregates
 
 ``repro.launch.serve.CTSurrogate`` is a thin single-tenant view over a
 private engine.
+
+One engine is one HOST
+----------------------
+
+``repro.runtime.cluster.CTCluster`` serves N engines as a multi-host
+front end: consistent-hash tenant placement routes every ``register`` /
+``submit_*`` to an owner engine, a health monitor watches each engine's
+pump liveness and probe latency, and failover migrates a dead host's
+tenants to survivors.  The engine-side plumbing the cluster relies on:
+
+* ``host_id=`` names the engine in errors and ``stats()`` (so
+  ``EngineSaturated`` / ``KeyError`` messages in cluster logs say WHICH
+  host rejected the work);
+* ``heartbeat()`` is the pump-liveness signal: the monotonic timestamp
+  of the last scheduler pass (``pump`` / ``flush`` / the scheduler
+  loop), plus queue depth and whether the scheduler thread is alive — a
+  stalled dispatch shows up as a growing ``age_s`` with an alive
+  thread, a dead one as a dead thread;
+* ``submit_probe()`` round-trips a no-op request through the full
+  queue/scheduler path; the cluster waits on it with
+  ``CTFuture.wait()`` (which, unlike ``result()``, NEVER drives the
+  engine from the waiting thread — a probe that only resolves because
+  the prober flushed proves nothing about the host's own liveness);
+* ``register(..., plan=, surplus=)`` is the failover fast lane: adopt a
+  tenant from a retained plan and an already-computed surplus without
+  re-ingesting — combined with the process-global executable cache, a
+  signature-preserving migration recompiles NOTHING.
+
+Ownership across hosts is the CLUSTER's job: an engine never calls into
+the cluster (lock order is strictly cluster -> engine), and a tenant
+name is only ever served by the engines the cluster placed it on.
 """
 
 from __future__ import annotations
@@ -199,6 +230,16 @@ class ExecSpec:
     #: accumulation dtype of engine ingest (name, e.g. ``"float64"``);
     #: ``None`` = promote the input grid dtypes
     dtype: Optional[str] = None
+    #: zero-copy ingest hand-off: donate the staged nodal-grid buffers
+    #: into the jitted ingest (``donate_argnums``, like
+    #: ``launch/train.py`` donates the train state) so XLA may reuse
+    #: their memory for the transform's intermediates instead of
+    #: holding inputs + intermediates live together.  OPT-IN: with
+    #: ``donate=True`` a caller that passes device arrays relinquishes
+    #: them (numpy inputs are staged to fresh buffers per call and are
+    #: always safe); backends that cannot use a donation silently keep
+    #: the copying behavior (jax warns once at compile time).
+    donate: bool = False
 
     def __post_init__(self):
         if self.dtype is not None:
@@ -264,7 +305,7 @@ def plan_signature(plan, spec: ExecSpec) -> Tuple:
     buckets = tuple((b.levels, b.perms) for b in base.buckets)
     shard = (plan.n_slabs,) if sharded else None
     return (base.full_levels, buckets, shard,
-            spec.fused, spec.interpret, spec.dtype,
+            spec.fused, spec.interpret, spec.dtype, spec.donate,
             spec.mesh if sharded else None,
             spec.axis_name if sharded else None)
 
@@ -306,6 +347,11 @@ def _build_ingest_executable(plan, spec: ExecSpec) -> Callable:
     metas = [(b.levels, b.perms, b.shape) for b in base.buckets]
     fine_shape, fine_size = base.fine_shape, base.fine_size
     interpret, fused, dtype_policy = spec.interpret, spec.fused, spec.dtype
+    # zero-copy hand-off: the staged grid parts (argument 0) are donated
+    # so the backend may retire them into the transform's intermediates;
+    # index maps / coefficients are NOT donated — they are the tenant's
+    # long-lived runtime identity, reused every ingest
+    donate = (0,) if spec.donate else ()
 
     def _acc_dtype(parts):
         if dtype_policy is not None:
@@ -331,7 +377,7 @@ def _build_ingest_executable(plan, spec: ExecSpec) -> Callable:
                                           interpret=interpret)
             return full[:-1].reshape(fine_shape)
 
-        return jax.jit(ingest)
+        return jax.jit(ingest, donate_argnums=donate)
 
     if spec.mesh is None:
         raise ValueError(
@@ -364,7 +410,7 @@ def _build_ingest_executable(plan, spec: ExecSpec) -> Callable:
         return gather_slab_scatter(alphas, splan, mesh, axis_name,
                                    idx_arrays=idxs, coeff_arrays=cs)
 
-    return jax.jit(ingest_sharded)
+    return jax.jit(ingest_sharded, donate_argnums=donate)
 
 
 def _ingest_executable(signature: Tuple, plan,
@@ -447,6 +493,19 @@ class CTFuture:
     def done(self) -> bool:
         return self._event.is_set()
 
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the request resolves WITHOUT driving the engine
+        (no auto-flush) and return ``done()``.  This is the wait health
+        probes must use: a probe that only resolves because the prober
+        flushed the queue itself proves nothing about the host's own
+        scheduler liveness.  ``error()``/``result()`` read the outcome."""
+        return self._event.wait(timeout)
+
+    def error(self) -> Optional[BaseException]:
+        """The stored failure of a resolved request (``None`` while
+        pending or on success) — a peek that never raises or blocks."""
+        return self._error
+
     def _set(self, payload) -> None:
         self._payload = payload
         self.done_at = time.monotonic()
@@ -487,6 +546,7 @@ class _Tenant:
     idxs: Tuple[jnp.ndarray, ...]
     coeffs: Tuple[jnp.ndarray, ...]
     surplus: Optional[jnp.ndarray] = None
+    surplus_seq: int = 0            # ingest_seq of the committed surplus
     deadline_ms: Optional[float] = None   # None = engine default
     priority: int = 0
 
@@ -577,7 +637,8 @@ class CTEngine:
                  max_batch: int = 32, max_pending: int = 1024,
                  deadline_ms: float = 10.0,
                  ingest_workers: Optional[int] = None,
-                 check_finite: bool = False):
+                 check_finite: bool = False,
+                 host_id: Optional[str] = None):
         if spec is not None and not isinstance(spec, ExecSpec):
             raise TypeError(f"CTEngine: spec must be an ExecSpec, got "
                             f"{type(spec).__name__}")
@@ -590,6 +651,10 @@ class CTEngine:
         self._max_pending = max_pending
         self._deadline_ms = deadline_ms
         self._check_finite = check_finite
+        #: name of this engine in a multi-host deployment (cluster logs,
+        #: error messages, stats); None = a standalone engine
+        self.host_id = host_id
+        self._last_pump = time.monotonic()
         self._lock = threading.RLock()
         self._work = threading.Condition(self._lock)    # new work / progress
         self._space = threading.Condition(self._lock)   # queue has room
@@ -603,7 +668,7 @@ class CTEngine:
                           "cache_misses": 0}
         self._sched = {"dispatch_deadline": 0, "dispatch_batch_full": 0,
                        "flushes": 0, "rejected": 0, "requeued": 0,
-                       "ingest_retries": 0}
+                       "ingest_retries": 0, "promoted": 0}
         if ingest_workers is None:
             self._private_pool = None
             self._inline_ingest = False
@@ -622,23 +687,39 @@ class CTEngine:
     def register(self, name: str, scheme: SchemeLike, nodal_grids=None, *,
                  spec: Optional[ExecSpec] = None,
                  deadline_ms: Optional[float] = None,
-                 priority: int = 0) -> "CTEngine":
+                 priority: int = 0, plan=None, surplus=None) -> "CTEngine":
         """Admit tenant ``name``: build its plan under ``spec`` (engine
         default when omitted), bind the signature-shared executable, and
         — when ``nodal_grids`` is given — ingest immediately.
         ``deadline_ms`` / ``priority`` set the tenant's scheduling
-        defaults (queries may override per call)."""
+        defaults (queries may override per call).
+
+        ``plan=`` / ``surplus=`` are the failover ADOPTION fast lane
+        (``repro.runtime.cluster`` host migration): a retained plan
+        skips ``build_plan`` and — signature unchanged — re-binds the
+        already-compiled executable from the process-global cache; a
+        retained surplus installs the served state directly, skipping
+        the ingest entirely.  The caller owns the consistency of an
+        adopted (scheme, plan, surplus) triple.  ``surplus=`` and
+        ``nodal_grids=`` are mutually exclusive."""
         if spec is not None and not isinstance(spec, ExecSpec):
             raise TypeError(f"register: spec must be an ExecSpec, got "
                             f"{type(spec).__name__}")
+        if surplus is not None and nodal_grids is not None:
+            raise ValueError(
+                "register: pass nodal_grids= (ingest now) or surplus= "
+                "(adopt precomputed state), not both")
         with self._lock:
             if name in self._tenants:
                 raise ValueError(f"tenant {name!r} already registered "
                                  f"(unregister first, or refit)")
         spec = spec or self._default_spec
-        plan = build_plan(scheme, spec=spec)          # outside the lock
+        if plan is None:
+            plan = build_plan(scheme, spec=spec)      # outside the lock
         tenant = self._bind(name, scheme, spec, plan)
         tenant.deadline_ms, tenant.priority = deadline_ms, priority
+        if surplus is not None:
+            tenant.surplus = surplus
         with self._work:
             if name in self._tenants:
                 raise ValueError(f"tenant {name!r} already registered "
@@ -754,15 +835,24 @@ class CTEngine:
 
     # -- thread-safe submission ---------------------------------------------
 
-    def _admit(self, block: bool, timeout: Optional[float]) -> None:
-        """Bounded-queue admission control; caller holds the lock."""
+    def _host(self) -> str:
+        """Prefix naming this engine in error messages."""
+        return f"engine[{self.host_id}]" if self.host_id else "engine"
+
+    def _admit(self, block: bool, timeout: Optional[float],
+               name: str) -> None:
+        """Bounded-queue admission control; caller holds the lock.  The
+        rejection names the tenant and the live queue state — the
+        actionable line a cluster operator greps for."""
         if len(self._pending) < self._max_pending:
             return
         if not block:
             self._sched["rejected"] += 1
             raise EngineSaturated(
-                f"engine queue is full ({self._max_pending} pending); "
-                f"flush(), start() the scheduler, or raise max_pending")
+                f"{self._host()}: rejecting request for tenant {name!r}: "
+                f"queue depth {len(self._pending)} >= max_pending="
+                f"{self._max_pending}; flush(), start() the scheduler, "
+                f"or raise max_pending")
         deadline = None if timeout is None else time.monotonic() + timeout
         while len(self._pending) >= self._max_pending:
             if deadline is None:
@@ -774,8 +864,10 @@ class CTEngine:
                         break
                     self._sched["rejected"] += 1
                     raise EngineSaturated(
-                        f"engine queue still full after {timeout:.3f}s "
-                        f"({self._max_pending} pending)")
+                        f"{self._host()}: request for tenant {name!r} "
+                        f"still blocked after {timeout:.3f}s: queue depth "
+                        f"{len(self._pending)} >= max_pending="
+                        f"{self._max_pending}")
 
     def submit_ingest(self, name: str, nodal_grids, *, priority: int = 0,
                       check_finite: Optional[bool] = None, block: bool = True,
@@ -789,7 +881,7 @@ class CTEngine:
         check = self._check_finite if check_finite is None else check_finite
         fut = CTFuture(self)
         with self._work:
-            self._admit(block, timeout)
+            self._admit(block, timeout, name)
             if name not in self._tenants:
                 raise KeyError(f"no tenant {name!r} (registered: "
                                f"{sorted(self._tenants)})")
@@ -824,7 +916,7 @@ class CTEngine:
               if deadline_ms is not None and math.isfinite(deadline_ms)
               else None)
         with self._work:
-            self._admit(block, timeout)
+            self._admit(block, timeout, name)
             if name not in self._tenants:
                 raise KeyError(f"no tenant {name!r} (registered: "
                                f"{sorted(self._tenants)})")
@@ -835,6 +927,39 @@ class CTEngine:
             self._work_seq += 1
             self._work.notify_all()
         return fut
+
+    def submit_probe(self, *, block: bool = False,
+                     timeout: Optional[float] = None) -> CTFuture:
+        """Liveness probe: enqueue a no-op request that rides the full
+        queue/scheduler path and resolves (to ``True``) when a pump,
+        flush, or the scheduler thread reaches it.  Health monitors
+        pair this with ``CTFuture.wait(deadline)`` — NOT ``result()``,
+        whose auto-flush would mask a dead scheduler.  Probes are
+        always due and never coalesce with tenant work."""
+        fut = CTFuture(self)
+        with self._work:
+            self._admit(block, timeout, "__probe__")
+            self._pending.append(
+                _Request("probe", "__probe__", None, fut,
+                         deadline=time.monotonic()))
+            self._work_seq += 1
+            self._work.notify_all()
+        return fut
+
+    def heartbeat(self) -> Dict[str, Any]:
+        """Pump-liveness snapshot: monotonic time of the last scheduler
+        pass (``pump``/``flush``/scheduler-loop iteration), its age,
+        queue depth, and whether the scheduler thread is alive.  A
+        cluster health monitor reads stalls from a growing ``age_s``."""
+        now = time.monotonic()
+        with self._lock:
+            alive = (self._sched_thread is not None
+                     and self._sched_thread.is_alive())
+            return {"host_id": self.host_id,
+                    "last_pump": self._last_pump,
+                    "age_s": now - self._last_pump,
+                    "pending": len(self._pending),
+                    "scheduler_alive": alive}
 
     # -- draining: flush / pump / scheduler ---------------------------------
 
@@ -848,6 +973,7 @@ class CTEngine:
         dropped.  A failing request resolves ITS OWN future with the
         exception (re-raised by ``result()``); siblings proceed."""
         with self._work:
+            self._last_pump = time.monotonic()
             pending, self._pending = self._pending, []
             if pending:
                 self._sched["flushes"] += 1
@@ -861,6 +987,7 @@ class CTEngine:
         always; queries on batch-full or deadline expiry).  Returns the
         number of requests resolved or handed to the pool."""
         with self._work:
+            self._last_pump = time.monotonic()
             take, _ = self._take_due(time.monotonic() if now is None
                                      else now)
         if not take:
@@ -913,6 +1040,7 @@ class CTEngine:
         while not stop_evt.is_set():
             now = time.monotonic()
             with self._work:
+                self._last_pump = now
                 seq = self._work_seq
                 take, next_wake = self._take_due(now)
             if take:
@@ -935,25 +1063,61 @@ class CTEngine:
     def _take_due(self, now: float) -> Tuple[List[_Request],
                                              Optional[float]]:
         """Pull the due requests off the queue; caller holds the lock.
-        Ingests are always due (the pool overlaps them with everything
-        else); a query is due when its tenant's pending batch is full,
-        its deadline expired, or its tenant is gone (fail fast).
-        Returns ``(due, next_deadline)``."""
+        Ingests and probes are always due (the pool overlaps ingests
+        with everything else); a query is due when its tenant's pending
+        batch is full, its deadline expired, or its tenant is gone
+        (fail fast).  Returns ``(due, next_deadline)``.
+
+        Two anti-head-of-line rules (a large low-priority eval batch
+        must not delay a high-priority query past its budget):
+
+        * **cap** — a batch-full tenant contributes at most
+          ``max_batch`` queries per pump (highest priority first,
+          submission order within a priority), so one oversized
+          low-priority backlog drains across pumps instead of
+          monopolizing a single pump while other deadlines expire;
+        * **promote** — when this pump dispatches any query work,
+          every pending query of STRICTLY higher priority than the due
+          set is taken along (even if its own deadline has not
+          expired): the dispatch path orders by priority, so the
+          high-priority group runs FIRST within the same pump at the
+          cost of a slightly earlier (never later) dispatch for it.
+        """
+        pending = self._pending
         counts: Dict[str, int] = {}
-        for r in self._pending:
+        for r in pending:
             if r.kind == "query":
                 counts[r.name] = counts.get(r.name, 0) + 1
         full = {n for n, c in counts.items() if c >= self._max_batch}
         self._sched["dispatch_batch_full"] += len(full)
+        take_idx = set()
+        for i, r in enumerate(pending):
+            if r.kind != "query" or r.name not in self._tenants:
+                take_idx.add(i)
+            elif r.deadline is not None and r.deadline <= now:
+                take_idx.add(i)
+                self._sched["dispatch_deadline"] += 1
+        for name in full:
+            cand = [i for i, r in enumerate(pending)
+                    if r.kind == "query" and r.name == name
+                    and i not in take_idx]
+            cand.sort(key=lambda i: (-pending[i].priority, i))
+            take_idx.update(cand[:self._max_batch])
+        due_q = [pending[i].priority for i in take_idx
+                 if pending[i].kind == "query"]
+        if due_q:
+            pmax = max(due_q)
+            for i, r in enumerate(pending):
+                if i not in take_idx and r.kind == "query" \
+                        and r.priority > pmax:
+                    take_idx.add(i)
+                    self._sched["promoted"] = \
+                        self._sched.get("promoted", 0) + 1
         take, keep = [], []
         next_wake: Optional[float] = None
-        for r in self._pending:
-            if r.kind == "ingest" or r.name in full \
-                    or r.name not in self._tenants:
+        for i, r in enumerate(pending):
+            if i in take_idx:
                 take.append(r)
-            elif r.deadline is not None and r.deadline <= now:
-                take.append(r)
-                self._sched["dispatch_deadline"] += 1
             else:
                 keep.append(r)
                 if r.deadline is not None and (next_wake is None
@@ -974,12 +1138,19 @@ class CTEngine:
         of requests resolved or handed to the pool."""
         chains: Dict[str, List[_Request]] = {}
         queries: List[_Request] = []
+        probes: List[_Request] = []
         for r in requests:
             if r.kind == "ingest":
                 chains.setdefault(r.name, []).append(r)
+            elif r.kind == "probe":
+                probes.append(r)
             else:
                 queries.append(r)
-        progress = sum(len(c) for c in chains.values())
+        # probes resolve the moment the scheduler path reaches them —
+        # that round trip IS the signal they measure
+        for r in probes:
+            r.future._set(True)
+        progress = len(probes) + sum(len(c) for c in chains.values())
         pool = None if self._inline_ingest \
             else (self._private_pool or _shared_pool())
         chain_futures = []
@@ -1006,7 +1177,8 @@ class CTEngine:
         for req in reqs:
             grids, check = req.payload
             try:
-                surplus = self._ingest_one(req.name, grids, check)
+                surplus = self._ingest_one(req.name, grids, check,
+                                           req.ingest_seq)
             except Exception as exc:
                 req.future._set_error(exc)
             else:
@@ -1018,11 +1190,16 @@ class CTEngine:
                     self._work_seq += 1
                     self._work.notify_all()
 
-    def _ingest_one(self, name: str, nodal_grids, check_finite: bool):
+    def _ingest_one(self, name: str, nodal_grids, check_finite: bool,
+                    seq: int = 0):
         """Dispatch + commit one ingest.  Device work runs OUTSIDE the
         lock; the commit is a compare-and-swap against the tenant record
         read before dispatch, retried when a concurrent refit/rebind
-        swapped the record mid-flight."""
+        swapped the record mid-flight.  The commit is NEWEST-SEQ-WINS:
+        same-tenant chains taken by DIFFERENT pump passes run on the
+        pool concurrently, so an older ingest finishing last must not
+        clobber a newer one's committed surplus (its future still
+        resolves with its own computed value)."""
         for _ in range(5):
             with self._lock:
                 tenant = self._tenants.get(name)
@@ -1043,7 +1220,9 @@ class CTEngine:
                     raise KeyError(f"tenant {name!r} was unregistered "
                                    f"before its queued ingest ran")
                 if cur is tenant:
-                    cur.surplus = surplus
+                    if seq >= cur.surplus_seq:
+                        cur.surplus = surplus
+                        cur.surplus_seq = seq
                     self._counters["ingests"] += 1
                     return surplus
                 self._sched["ingest_retries"] += 1
@@ -1141,8 +1320,18 @@ class CTEngine:
             entries.sort(key=lambda e: (
                 -e[0].priority,
                 e[0].deadline if e[0].deadline is not None else math.inf))
-            for off in range(0, len(entries), self._max_batch):
-                chunk = entries[off:off + self._max_batch]
+            # chunk by max_batch AND break at priority boundaries: a
+            # high-priority query dispatches in its own (small, small
+            # T-pad) batch instead of padding into — and waiting on —
+            # the low-priority mega-batch behind it
+            chunks: List[List] = []
+            for e in entries:
+                if chunks and len(chunks[-1]) < self._max_batch \
+                        and chunks[-1][0][0].priority == e[0].priority:
+                    chunks[-1].append(e)
+                else:
+                    chunks.append([e])
+            for chunk in chunks:
                 try:
                     # pad the BATCH axis to a power of two as well (>= 4):
                     # under deadline dispatch the group size varies per
@@ -1316,6 +1505,7 @@ class CTEngine:
         with _INGEST_CACHE_LOCK:
             cache_entries = len(_INGEST_EXECUTABLES)
         return {
+            "host_id": self.host_id,
             "tenants": len(tenants),
             "per_tenant": per_tenant,
             "gather": gather,

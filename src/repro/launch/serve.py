@@ -127,17 +127,29 @@ class CTSurrogate:
     ``repro.core.engine`` docstring for the scheduler contract); the
     synchronous ``query`` / ``update`` remain the one-caller
     convenience path.
+
+    ``cluster=`` swaps the single engine for a whole
+    ``repro.runtime.cluster.CTCluster`` fleet: the surrogate registers
+    its one tenant through the cluster front door and every call routes
+    by consistent-hash placement, with health-checked failover
+    underneath — the API here does not change at all.  (In that mode
+    the spec must be mesh-free; meshes belong to the cluster's hosts.)
     """
 
     def __init__(self, scheme, nodal_grids, spec=None, *,
-                 engine=None, name: str = "surrogate",
+                 engine=None, cluster=None, name: str = "surrogate",
                  interpret: Optional[bool] = None,
                  mesh=None, axis_name: Optional[str] = None, merge=None):
         from repro.core.engine import CTEngine
         from repro.core.executor import resolve_spec
+        if engine is not None and cluster is not None:
+            raise ValueError("pass engine= or cluster=, not both")
         spec = resolve_spec("CTSurrogate", spec, interpret=interpret,
                             mesh=mesh, axis_name=axis_name, merge=merge)
-        self._engine = engine if engine is not None else CTEngine()
+        if cluster is not None:
+            self._engine = cluster      # duck-typed CTEngine surface
+        else:
+            self._engine = engine if engine is not None else CTEngine()
         self._name = name
         self._engine.register(name, scheme, nodal_grids, spec=spec)
 

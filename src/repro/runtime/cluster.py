@@ -1,0 +1,1134 @@
+"""CTCluster: a multi-host serving front end over N ``CTEngine`` hosts.
+
+The paper frames hierarchization as the preprocessing step that
+"facilitates the communication needed for the combination technique"
+across many solver processes; Harding et al. (PAPERS.md) run the
+combination technique manager/worker style and recover LOST component
+grids by recombination instead of recompute.  This module is that
+architecture as a serving tier: one ``CTEngine`` per host, a consistent-
+hash ring placing tenants on hosts, and a health monitor whose failover
+path is recombination — never a recompute of lost solves.
+
+Architecture: placement -> health -> failover
+---------------------------------------------
+
+**Placement.**  Tenants are placed by consistent hashing
+(``HashRing``): every host projects ``vnodes`` virtual nodes onto a
+64-bit ring under a deterministic seed (``blake2b``, never Python's
+per-process ``hash``), and a tenant's owner list is the first
+``replication`` DISTINCT hosts clockwise from its own ring point.
+Determinism means a restarted cluster (same hosts, same seed) computes
+the SAME tenant map, and removing one of N hosts relocates only the
+tenants whose owner walk crossed it — ~``tenants/N``, not a reshuffle.
+Index 0 of the owner list is the PRIMARY (serves queries); all owners
+ingest (the replicas are warm standbys with live surplus).
+
+**Health.**  ``check_health`` (called by the ``start()``-ed monitor
+thread, or manually) combines two signals per host — the engine's
+pump-liveness heartbeat (``CTEngine.heartbeat``: age of the last
+scheduler pass) and a deadline-bounded probe query against the host's
+private ``__probe__`` tenant, waited on with ``CTFuture.wait`` (which
+never drives the engine from the prober's thread, so a dead scheduler
+cannot pass by accident).  Strike accounting lives in
+``repro.runtime.fault_tolerance.HostHealthTracker``; a host that
+reports itself killed (the fault injector's seam) fails immediately.
+
+**Failover.**  ``fail_host`` removes the host from the ring and
+migrates every tenant it owned to the tenant's new consistent-hash
+owners:
+
+* **replica exists** — the survivor keeps serving; new owners ADOPT the
+  replica's plan and live surplus through ``CTEngine.register(plan=,
+  surplus=)`` — no re-ingest, and (in-process hosts share the
+  process-global executable cache) no recompile.
+* **no replica** — the cluster re-registers from its RETAINED state:
+  the last-acked nodal grids (kept host-side, donation-safe numpy
+  copies) and the retained plan.  Ingests that were IN FLIGHT on the
+  dead host are data loss the cluster refuses to paper over: their
+  component grids are dropped from the scheme via the coefficient-only
+  ``recombine_after_fault`` path (plan and signature unchanged — the
+  dropped members' coefficients become 0, so migration recompiles
+  NOTHING), exactly Harding et al.'s recombination recovery.  Only
+  when the in-flight loss covers the whole index set does the cluster
+  fall back to serving the last-acked state unreduced.
+
+In-flight requests routed at the dead host are never silently dropped:
+queries are transparently RESUBMITTED to the new primary (idempotent),
+replicated ingests re-point at a surviving replica's acknowledgement,
+and unreplicated in-flight ingests resolve with the named
+``HostFailed`` error.  ``benchmarks/serve_cluster.py`` measures the
+whole loop (kill one of four hosts mid-replay) and CI asserts
+``dropped_futures == 0``.
+
+Lock / ownership rules across hosts
+-----------------------------------
+
+One cluster ``RLock`` guards the host table, the ring, the tenant
+records, and the in-flight set.  Lock ORDER is strictly
+``cluster -> engine``: the cluster calls into engines while holding its
+lock (registration, routing, failover), and an engine NEVER calls into
+the cluster — so the pair cannot deadlock.  Every engine submit made
+under the cluster lock is NON-BLOCKING (``block=False``): a blocking
+admission wait on a host whose scheduler just died would hold the
+cluster lock forever and wedge the monitor out of the very failover
+that frees the queue.  Instead, ``EngineSaturated`` from a host with a
+dead scheduler triggers failover + re-route (the submitters drive
+detection), while saturation of a healthy host propagates to the
+caller as honest backpressure.  ``ClusterFuture`` waits hold no lock
+at all; they poll the inner engine future and only take the cluster
+lock to finalize.  A tenant name is owned by the cluster:
+only the engines in its current owner list serve it, the PRIMARY alone
+answers queries, and the cluster's retained record (scheme + last-acked
+grids + plan) is the source of truth a migration rebuilds from.
+``FaultInjector`` provides the failure seams (kill host, stall
+dispatch, NaN-poison one ingest) that make all of the above testable.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import hashlib
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import (CTEngine, CTFuture, EngineSaturated,
+                               ExecSpec)
+from repro.core.levels import CombinationScheme, SchemeLike, grid_shape
+from repro.runtime.fault_tolerance import (HostHealthConfig,
+                                           HostHealthTracker,
+                                           recombine_after_fault)
+
+__all__ = ["CTCluster", "ClusterFuture", "FaultInjector", "HashRing",
+           "HostFailed"]
+
+#: per-host liveness tenant (registered directly on each engine, never
+#: placed on the ring); its probe query is the health monitor's signal
+PROBE_TENANT = "__probe__"
+
+#: how long the synchronous conveniences (``query``/``update``) and the
+#: failover drain wait before declaring a future hung
+_SYNC_TIMEOUT_S = 120.0
+
+
+class HostFailed(RuntimeError):
+    """Named failover error: the request was in flight on a host that
+    failed, and no replica could transparently absorb it.  Carries the
+    failed ``host_id`` — the actionable line in cluster logs."""
+
+    def __init__(self, message: str, host_id: Optional[str] = None):
+        super().__init__(message)
+        self.host_id = host_id
+
+
+def _stable_hash(s: str) -> int:
+    """64-bit ring position, stable across processes and restarts
+    (Python's ``hash`` is salted per process and would reshuffle the
+    whole tenant map on every restart)."""
+    return int.from_bytes(
+        hashlib.blake2b(s.encode(), digest_size=8).digest(), "big")
+
+
+class HashRing:
+    """Consistent-hash ring with virtual nodes and a deterministic seed.
+
+    ``owners(key, r)`` returns the first ``r`` DISTINCT hosts clockwise
+    from the key's ring position — the replica placement rule.  Two
+    rings built from the same (hosts, vnodes, seed) agree exactly;
+    removing a host only reassigns keys whose owner walk crossed its
+    virtual nodes."""
+
+    def __init__(self, hosts: Sequence[str], *, vnodes: int = 64,
+                 seed: int = 0):
+        if not hosts:
+            raise ValueError("HashRing needs at least one host")
+        self.hosts = tuple(hosts)
+        self.vnodes = vnodes
+        self.seed = seed
+        ring = sorted((_stable_hash(f"{seed}/{h}/{v}"), h)
+                      for h in hosts for v in range(vnodes))
+        self._keys = [k for k, _ in ring]
+        self._vals = [h for _, h in ring]
+
+    def owners(self, key: str, r: int = 1) -> Tuple[str, ...]:
+        r = min(max(1, r), len(self.hosts))
+        pos = bisect.bisect_right(self._keys, _stable_hash(
+            f"{self.seed}/{key}"))
+        out: List[str] = []
+        n = len(self._vals)
+        for i in range(n):
+            h = self._vals[(pos + i) % n]
+            if h not in out:
+                out.append(h)
+                if len(out) == r:
+                    break
+        return tuple(out)
+
+
+@dataclass
+class _Host:
+    host_id: str
+    engine: CTEngine
+    spec: ExecSpec                     # host-level execution policy (mesh)
+    alive: bool = True                 # False once fail_host processed it
+    killed: bool = False               # fault injector: reported dead
+    stalled: bool = False              # fault injector: dispatch wedged
+    fail_reason: str = ""
+
+
+@dataclass
+class _TenantRecord:
+    """The cluster's retained source of truth for one tenant: what a
+    migration rebuilds from when every serving copy is gone."""
+
+    name: str
+    scheme: SchemeLike
+    spec: ExecSpec                     # tenant execution prefs (no mesh)
+    replication: int
+    owners: Tuple[str, ...]
+    #: last-ACKED nodal grids (host numpy copies — donation-safe, and a
+    #: dead host cannot take them down)
+    grids: Dict[Tuple[int, ...], np.ndarray]
+    plan: Any = None                   # representative executor plan
+    plan_spec: Optional[ExecSpec] = None   # host spec the plan was built under
+    deadline_ms: Optional[float] = None
+    priority: int = 0
+    dropped: Tuple[Tuple[int, ...], ...] = ()   # grids lost to failovers
+    ingest_seq: int = 0                # cluster-side submission counter
+    committed_seq: int = 0             # newest ack folded into ``grids``
+
+
+class ClusterFuture:
+    """Result handle of a routed request.  Wraps the owner engine's
+    ``CTFuture`` and stays valid ACROSS failover: when the owner dies,
+    the cluster retargets this handle at the new owner (queries are
+    resubmitted, replicated ingests re-point at a surviving replica's
+    acknowledgement) or resolves it with the named ``HostFailed`` —
+    never a silent drop, never a hang past the failover."""
+
+    def __init__(self, cluster: "CTCluster", kind: str, name: str,
+                 host_id: str, inner: CTFuture, *,
+                 levels: Tuple[Tuple[int, ...], ...] = (),
+                 updates: Optional[Dict] = None,
+                 updates_new: Optional[Dict] = None,
+                 points=None, query_kwargs: Optional[Dict] = None,
+                 seq: int = 0):
+        self._cluster = cluster
+        self.kind = kind                    # "ingest" | "query"
+        self.name = name
+        self._host_id = host_id
+        self._inner = inner
+        self._secondaries: List[Tuple[str, CTFuture]] = []
+        self.levels = levels                # ingest: NEW level vectors carried
+        self._updates = updates             # ingest: full projected payload
+        self._updates_new = updates_new     # ingest: this request's delta
+        self._points = points               # query: validated points
+        self._query_kwargs = query_kwargs or {}
+        self._seq = seq
+        self._done = False
+        self._value = None
+        self._error: Optional[BaseException] = None
+        self.retargeted = 0
+        self.submitted_at = time.monotonic()
+        self.done_at: Optional[float] = None
+
+    # -- state transitions (cluster lock held by callers in CTCluster) ----
+
+    def _finalize_locked(self, value=None,
+                         error: Optional[BaseException] = None) -> None:
+        if self._done:
+            return
+        self._done = True
+        self._value, self._error = value, error
+        # resolution time = when the ENGINE resolved the inner future
+        # (the wrapper may be polled much later); failover-resolved
+        # wrappers (named error, no inner resolution) stamp now
+        inner_t = getattr(self._inner, "done_at", None)
+        self.done_at = inner_t if inner_t is not None else time.monotonic()
+
+    def _retarget_locked(self, host_id: str, inner: CTFuture) -> None:
+        self._host_id = host_id
+        self._inner = inner
+        self.retargeted += 1
+
+    # -- waiting (no cluster lock held while blocked) ---------------------
+
+    def done(self) -> bool:
+        self._cluster._poll(self)
+        return self._done
+
+    def error(self) -> Optional[BaseException]:
+        """Peek at a resolved request's failure (None while pending or
+        on success)."""
+        self._cluster._poll(self)
+        return self._error
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            self._cluster._poll(self)
+            if self._done:
+                return True
+            if deadline is not None and time.monotonic() >= deadline:
+                return False
+            self._cluster._progress(self)
+            self._inner.wait(0.02)
+
+    def result(self, timeout: Optional[float] = None):
+        if not self.wait(timeout):
+            raise TimeoutError(
+                f"ClusterFuture.result: {self.kind} for tenant "
+                f"{self.name!r} still pending after {timeout:.3f}s "
+                f"(host {self._host_id!r})")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+class FaultInjector:
+    """Deterministic failure seams for tests and benchmarks.
+
+    * ``kill(host)`` — the host drops dead: its scheduler stops, it
+      reports ``killed`` to the next health check, queued work on it
+      goes unanswered until failover resolves/retries it.
+    * ``stall(host)`` — dispatch wedges WITHOUT an admission of death:
+      the scheduler stops pumping, so the failure is only visible as a
+      growing heartbeat age + missed probe deadlines (the slow-failure
+      detection path).
+    * ``poison_next_ingest(tenant=)`` — the next routed ingest carries
+      NaN-poisoned data (a device/data fault): with the cluster's
+      ``check_finite`` engines it must resolve ONLY its own future with
+      ``FloatingPointError`` and leave host and siblings healthy.
+    """
+
+    def __init__(self, cluster: "CTCluster"):
+        self._cluster = cluster
+        self._poison: Optional[str] = None     # tenant name or "*"
+
+    def kill(self, host_id: str) -> None:
+        c = self._cluster
+        with c._lock:
+            host = c._hosts[host_id]
+            host.killed = True
+        host.engine.stop(drain=False)
+
+    def stall(self, host_id: str) -> None:
+        c = self._cluster
+        with c._lock:
+            host = c._hosts[host_id]
+            host.stalled = True
+        host.engine.stop(drain=False)
+
+    def poison_next_ingest(self, tenant: Optional[str] = None) -> None:
+        with self._cluster._lock:
+            self._poison = tenant if tenant is not None else "*"
+
+    def _maybe_poison(self, name: str, grids: Dict) -> Dict:
+        """Caller holds the cluster lock."""
+        if self._poison is None or self._poison not in ("*", name):
+            return grids
+        self._poison = None
+        poisoned = dict(grids)
+        ell = next(iter(poisoned))
+        bad = np.array(poisoned[ell], dtype=float, copy=True)
+        bad.flat[0] = np.nan
+        poisoned[ell] = bad
+        return poisoned
+
+
+class CTCluster:
+    """Multi-host CT serving front door (see the module docstring for
+    the placement/health/failover architecture and the lock rules).
+
+    Exposes the ``CTEngine`` serving surface — ``register`` /
+    ``submit_ingest`` / ``submit_query`` / ``query`` / ``update`` /
+    ``refit`` / ``drop_grid`` / ``unregister`` / ``surplus`` /
+    ``stats`` — routed by consistent-hash placement, so
+    ``CTSurrogate(cluster=...)`` and other engine clients work
+    unchanged on top of a fleet.
+    """
+
+    def __init__(self, n_hosts: int = 4, *,
+                 host_specs: Optional[Sequence[ExecSpec]] = None,
+                 spec: Optional[ExecSpec] = None,
+                 replication: int = 1,
+                 vnodes: int = 64, seed: int = 0,
+                 health: Optional[HostHealthConfig] = None,
+                 monitor_interval_s: float = 0.25,
+                 engine_kwargs: Optional[Dict[str, Any]] = None):
+        if host_specs is not None:
+            n_hosts = len(host_specs)
+        if n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+        if replication < 1:
+            raise ValueError(f"replication must be >= 1, got {replication}")
+        self._default_spec = spec or ExecSpec()
+        if self._default_spec.mesh is not None:
+            raise ValueError(
+                "the cluster-default tenant spec must be mesh-free; "
+                "meshes are HOST properties — pass per-host ExecSpecs "
+                "via host_specs= (or over_device_slices())")
+        self.replication = replication
+        self.vnodes, self.seed = vnodes, seed
+        self._health = HostHealthTracker(cfg=health or HostHealthConfig())
+        self._monitor_interval_s = monitor_interval_s
+        self._lock = threading.RLock()
+        self._hosts: Dict[str, _Host] = {}
+        self._records: Dict[str, _TenantRecord] = {}
+        self._inflight: set = set()
+        self._failovers: List[Dict[str, Any]] = []
+        self._counters = {"queries": 0, "ingests": 0, "retried_queries": 0,
+                          "promoted_ingests": 0, "host_failed": 0}
+        self._started = False
+        self._monitor_thread: Optional[threading.Thread] = None
+        self._monitor_stop: Optional[threading.Event] = None
+        ekw = dict(engine_kwargs or {})
+        ekw.setdefault("check_finite", True)
+        for i in range(n_hosts):
+            hid = f"host{i}"
+            hspec = (host_specs[i] if host_specs is not None
+                     else ExecSpec())
+            engine = CTEngine(hspec, host_id=hid, **ekw)
+            self._add_probe_tenant(engine)
+            self._hosts[hid] = _Host(host_id=hid, engine=engine, spec=hspec)
+        self._ring = self._build_ring()
+        self.injector = FaultInjector(self)
+
+    @classmethod
+    def over_device_slices(cls, n_hosts: int = 4, *,
+                           devices=None, axis_name: str = "slab",
+                           **kwargs) -> "CTCluster":
+        """Build a cluster whose hosts mesh DISJOINT slices of the
+        local device set (the ``tests/conftest.py`` 8-fake-device
+        trick): ``n_hosts`` hosts x ``len(devices)//n_hosts`` devices
+        each, every host running its tenants slab-sharded over its own
+        slice."""
+        import jax
+
+        from repro.compat import make_mesh
+        devices = list(jax.devices()) if devices is None else list(devices)
+        per = len(devices) // n_hosts
+        if per < 1:
+            raise ValueError(
+                f"{len(devices)} devices cannot back {n_hosts} hosts")
+        specs = []
+        for i in range(n_hosts):
+            sl = np.array(devices[i * per:(i + 1) * per])
+            specs.append(ExecSpec(
+                mesh=make_mesh((len(sl),), (axis_name,), devices=sl),
+                axis_name=axis_name))
+        return cls(host_specs=specs, **kwargs)
+
+    # -- construction helpers ---------------------------------------------
+
+    def _add_probe_tenant(self, engine: CTEngine) -> None:
+        """Per-host liveness tenant: a tiny d=2 scheme whose query is
+        the health monitor's probe.  Registered directly on the engine
+        (never placed on the ring) and warmed here so the first real
+        probe measures the scheduler, not a compile."""
+        probe_scheme = CombinationScheme(2, 2)
+        grids = {ell: np.zeros(grid_shape(ell))
+                 for ell, _ in probe_scheme.grids}
+        engine.register(PROBE_TENANT, probe_scheme, grids)
+        engine.query(PROBE_TENANT, np.array([[0.5, 0.5]]))
+
+    def _build_ring(self) -> HashRing:
+        live = [h.host_id for h in self._hosts.values() if h.alive]
+        return HashRing(live, vnodes=self.vnodes, seed=self.seed)
+
+    def _host_exec_spec(self, host: _Host, tspec: ExecSpec) -> ExecSpec:
+        """Placement decides the execution environment: the tenant's
+        exec prefs (merge/fused/dtype/donate) combined with the HOST's
+        mesh (or lack of one)."""
+        if host.spec.mesh is not None:
+            return dataclasses.replace(tspec, mesh=host.spec.mesh,
+                                       axis_name=host.spec.axis_name,
+                                       n_slabs=None)
+        return dataclasses.replace(tspec, mesh=None, n_slabs=None)
+
+    # -- introspection ------------------------------------------------------
+
+    def hosts(self) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(self._hosts)
+
+    def live_hosts(self) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(h.host_id for h in self._hosts.values() if h.alive)
+
+    def names(self) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(self._records)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._records
+
+    def owners_of(self, name: str) -> Tuple[str, ...]:
+        with self._lock:
+            return self._record(name).owners
+
+    def scheme(self, name: str) -> SchemeLike:
+        with self._lock:
+            return self._record(name).scheme
+
+    def plan(self, name: str):
+        with self._lock:
+            return self._record(name).plan
+
+    def spec(self, name: str) -> ExecSpec:
+        with self._lock:
+            return self._record(name).spec
+
+    def engine(self, host_id: str) -> CTEngine:
+        with self._lock:
+            return self._hosts[host_id].engine
+
+    def _record(self, name: str) -> _TenantRecord:
+        try:
+            return self._records[name]
+        except KeyError:
+            raise KeyError(f"no tenant {name!r} (registered: "
+                           f"{sorted(self._records)})") from None
+
+    def _primary(self, rec: _TenantRecord) -> _Host:
+        """First owner the cluster still considers alive (an injected
+        kill stays routable — and unanswered — until detection, exactly
+        like a real dead host)."""
+        for hid in rec.owners:
+            host = self._hosts.get(hid)
+            if host is not None and host.alive:
+                return host
+        raise HostFailed(
+            f"tenant {rec.name!r} has no live owner (owners: "
+            f"{rec.owners}) — failover has not completed", None)
+
+    def _tenant(self, name: str):
+        """Primary host's engine-side tenant record (the ``CTSurrogate``
+        introspection hook)."""
+        with self._lock:
+            rec = self._record(name)
+            return self._primary(rec).engine._tenant(name)
+
+    # -- registry -----------------------------------------------------------
+
+    def register(self, name: str, scheme: SchemeLike, nodal_grids=None, *,
+                 spec: Optional[ExecSpec] = None,
+                 replication: Optional[int] = None,
+                 deadline_ms: Optional[float] = None,
+                 priority: int = 0) -> "CTCluster":
+        """Admit a tenant: place it on ``replication`` consistent-hash
+        owners (cluster default when omitted) and register it — with an
+        immediate ingest when ``nodal_grids`` is given — on every
+        owner.  The nodal grids are RETAINED cluster-side (numpy
+        copies) as the migration source of truth."""
+        if name == PROBE_TENANT:
+            raise ValueError(f"{PROBE_TENANT!r} is reserved for the "
+                             f"health monitor")
+        tspec = spec if spec is not None else self._default_spec
+        if tspec.mesh is not None:
+            raise ValueError(
+                "tenant specs must be mesh-free: the cluster assigns "
+                "each owner host's mesh at placement time")
+        r = self.replication if replication is None else replication
+        with self._lock:
+            if name in self._records:
+                raise ValueError(f"tenant {name!r} already registered "
+                                 f"(unregister first, or refit)")
+            owners = self._ring.owners(name, r)
+            grids_np = {} if nodal_grids is None else {
+                tuple(ell): np.asarray(v) for ell, v in nodal_grids.items()}
+            rec = _TenantRecord(name=name, scheme=scheme, spec=tspec,
+                                replication=r, owners=owners,
+                                grids=grids_np, deadline_ms=deadline_ms,
+                                priority=priority)
+            for hid in owners:
+                host = self._hosts[hid]
+                hspec = self._host_exec_spec(host, tspec)
+                host.engine.register(
+                    name, scheme, grids_np if nodal_grids is not None
+                    else None, spec=hspec, deadline_ms=deadline_ms,
+                    priority=priority)
+            primary = self._hosts[owners[0]]
+            rec.plan = primary.engine.plan(name)
+            rec.plan_spec = self._host_exec_spec(primary, tspec)
+            self._records[name] = rec
+        return self
+
+    def unregister(self, name: str) -> None:
+        with self._lock:
+            rec = self._record(name)
+            for hid in rec.owners:
+                host = self._hosts.get(hid)
+                if host is not None and rec.name in host.engine:
+                    host.engine.unregister(name)
+            del self._records[name]
+
+    # -- routed submission --------------------------------------------------
+
+    def _rescue_saturated(self, host: Optional[_Host]) -> bool:
+        """Called WITHOUT the cluster lock after a ``block=False`` engine
+        submit was rejected.  A bounded-queue rejection from a host whose
+        scheduler is dead is a failure SYMPTOM (the queue can only grow),
+        not backpressure: fail the host over and tell the caller to
+        re-route.  Returns False for genuine live saturation — the
+        ``EngineSaturated`` then propagates to the submitter."""
+        if host is None or not self._started:
+            return False
+        dead = (host.killed or host.stalled
+                or not host.engine.heartbeat()["scheduler_alive"])
+        if not dead:
+            return False
+        self.fail_host(host.host_id,
+                       reason="saturated with dead scheduler")
+        return True
+
+    def submit_ingest(self, name: str, nodal_grids, **kw) -> ClusterFuture:
+        """Route new solver output to every live owner of ``name``.
+        ``nodal_grids`` may be a PARTIAL dict (a subset of the scheme's
+        component grids): the cluster merges it over the retained
+        last-acked grids before handing each engine the full dict.  The
+        future tracks the PRIMARY's acknowledgement; replicas ingest the
+        same merged payload, which is what makes primary failover
+        transparent for replicated tenants."""
+        kw.pop("block", None), kw.pop("timeout", None)
+        new_np = {tuple(ell): np.asarray(v)
+                  for ell, v in nodal_grids.items()}
+        while True:
+            err: Optional[EngineSaturated] = None
+            sat_host: Optional[_Host] = None
+            with self._lock:
+                rec = self._record(name)
+                # project the payload over last-ACKED state PLUS the
+                # still-in-flight ingests in submission order: engines
+                # apply full dicts per-tenant IN ORDER, so the record's
+                # commit (the full projected payload, newest ack wins)
+                # always converges to exactly the engines' state
+                merged = dict(rec.grids)
+                for f in sorted((f for f in self._inflight
+                                 if f.kind == "ingest" and f.name == name
+                                 and not f._done), key=lambda f: f._seq):
+                    merged.update(f._updates_new)
+                merged.update(new_np)
+                payload = self.injector._maybe_poison(name, merged)
+                primary = self._primary(rec)
+                inners: List[Tuple[str, CTFuture]] = []
+                try:
+                    for hid in rec.owners:
+                        host = self._hosts.get(hid)
+                        if host is None or not host.alive:
+                            continue
+                        # a partial fan-out abandoned on saturation is
+                        # benign: full-dict ingests are last-writer-wins,
+                        # so the retry's payload supersedes the orphan
+                        inners.append((hid, host.engine.submit_ingest(
+                            name, payload, block=False, **kw)))
+                except EngineSaturated as e:
+                    err, sat_host = e, self._hosts.get(hid)
+                else:
+                    rec.ingest_seq += 1
+                    by_host = dict(inners)
+                    fut = ClusterFuture(self, "ingest", name,
+                                        primary.host_id,
+                                        by_host[primary.host_id],
+                                        levels=tuple(new_np),
+                                        updates=merged,
+                                        updates_new=new_np,
+                                        seq=rec.ingest_seq)
+                    fut._secondaries = [x for x in inners
+                                        if x[0] != primary.host_id]
+                    self._inflight.add(fut)
+                    self._counters["ingests"] += 1
+                    return fut
+            if not self._rescue_saturated(sat_host):
+                raise err
+
+    def submit_query(self, name: str, points, **kw) -> ClusterFuture:
+        """Route a point-evaluation batch to ``name``'s primary owner.
+        Accepts the engine scheduling keywords (``deadline_ms=``,
+        ``priority=``).  Queries are idempotent, so on host failure the
+        cluster resubmits this future to the new primary transparently."""
+        kw.pop("block", None), kw.pop("timeout", None)
+        while True:
+            with self._lock:
+                rec = self._record(name)
+                primary = self._primary(rec)
+                try:
+                    inner = primary.engine.submit_query(
+                        name, points, block=False, **kw)
+                except EngineSaturated as e:
+                    err = e
+                else:
+                    fut = ClusterFuture(self, "query", name,
+                                        primary.host_id, inner,
+                                        points=points, query_kwargs=kw)
+                    self._inflight.add(fut)
+                    self._counters["queries"] += 1
+                    return fut
+            if not self._rescue_saturated(primary):
+                raise err
+
+    def query(self, name: str, points) -> np.ndarray:
+        return self.submit_query(name, points).result(_SYNC_TIMEOUT_S)
+
+    def update(self, name: str, nodal_grids):
+        return self.submit_ingest(name, nodal_grids).result(_SYNC_TIMEOUT_S)
+
+    def surplus(self, name: str):
+        with self._lock:
+            rec = self._record(name)
+            primary = self._primary(rec)
+        return primary.engine.surplus(name)
+
+    # -- lifecycle (fanned out to every live owner) -------------------------
+
+    def refit(self, name: str, scheme: SchemeLike, nodal_grids) -> None:
+        """Swap the tenant onto a (refined) scheme on every live owner
+        through the engines' incremental ``extend_plan`` path; the
+        retained record follows."""
+        with self._lock:
+            rec = self._record(name)
+            new_np = {tuple(ell): np.asarray(v)
+                      for ell, v in nodal_grids.items()}
+            merged = dict(rec.grids)
+            merged.update(new_np)
+            primary = self._primary(rec)
+            for hid in rec.owners:
+                host = self._hosts.get(hid)
+                if host is not None and host.alive:
+                    host.engine.refit(name, scheme, merged)
+            rec.scheme = scheme
+            rec.grids = merged
+            rec.plan = primary.engine.plan(name)
+            rec.plan_spec = self._host_exec_spec(primary, rec.spec)
+            rec.dropped = ()
+            rec.committed_seq = rec.ingest_seq
+
+    def drop_grid(self, name: str, failed, nodal_grids=None) -> None:
+        """Coefficient-only fault recombination (lost SOLVER grids, as
+        opposed to a lost serving host) on every live owner."""
+        with self._lock:
+            rec = self._record(name)
+            merged = dict(rec.grids)
+            if nodal_grids is not None:
+                merged.update({tuple(ell): np.asarray(v)
+                               for ell, v in nodal_grids.items()})
+            primary = self._primary(rec)
+            for hid in rec.owners:
+                host = self._hosts.get(hid)
+                if host is not None and host.alive:
+                    host.engine.drop_grid(name, failed, merged)
+            rec.scheme = primary.engine.scheme(name)
+            rec.plan = primary.engine.plan(name)
+            rec.grids = merged
+            rec.dropped = rec.dropped + tuple(tuple(f) for f in failed)
+
+    # -- future progression (called by ClusterFuture, no lock held) ---------
+
+    def _poll(self, fut: ClusterFuture) -> None:
+        """Finalize ``fut`` if its inner engine future resolved."""
+        if fut._done or not fut._inner.done():
+            return
+        with self._lock:
+            self._finalize_from_inner_locked(fut)
+
+    def _finalize_from_inner_locked(self, fut: ClusterFuture) -> None:
+        if fut._done or not fut._inner.done():
+            return
+        err = fut._inner.error()
+        if err is None:
+            fut._finalize_locked(value=fut._inner.result())
+            if fut.kind == "ingest":
+                rec = self._records.get(fut.name)
+                # newest-wins: a later ingest's ack may finalize first —
+                # never let an older payload overwrite it
+                if rec is not None and fut._seq > rec.committed_seq:
+                    rec.grids = dict(fut._updates)
+                    rec.committed_seq = fut._seq
+        else:
+            # per-request engine error (validation, NaN check, ...):
+            # already named, already isolated — surface as-is
+            fut._finalize_locked(error=err)
+        self._inflight.discard(fut)
+
+    def _progress(self, fut: ClusterFuture) -> None:
+        """Keep a wait on ``fut`` live: drive an un-started healthy host
+        the way ``CTFuture.result`` would, and drive DETECTION (not the
+        work) when the owner is failing and no monitor thread runs."""
+        with self._lock:
+            host = self._hosts.get(fut._host_id)
+            monitor = (self._monitor_thread is not None
+                       and self._monitor_thread.is_alive())
+        if host is None or not host.alive:
+            return                      # failover in progress will retarget
+        if host.killed or host.stalled:
+            if not monitor:
+                self.check_health(probe=False)
+            return
+        hb = host.engine.heartbeat()
+        if not hb["scheduler_alive"]:
+            host.engine.flush()
+
+    # -- health -------------------------------------------------------------
+
+    def check_health(self, *, probe: bool = True) -> List[str]:
+        """One monitor pass: heartbeat + (optionally) a deadline-bounded
+        probe query per live host, strike accounting via
+        ``HostHealthTracker``, and ``fail_host`` for every host that
+        crossed the threshold.  Returns the host ids failed by this
+        pass.  Heartbeat/probe checks only arm once ``start()`` runs
+        the schedulers — before that, nobody is SUPPOSED to pump, and
+        only an injected kill is a failure."""
+        with self._lock:
+            hosts = [h for h in self._hosts.values() if h.alive]
+            started = self._started
+        failed: List[str] = []
+        cfg = self._health.cfg
+        for host in hosts:
+            if host.killed:
+                if self._health.observe(host.host_id, killed=True):
+                    failed.append(host.host_id)
+                continue
+            if not started:
+                continue
+            hb = host.engine.heartbeat()
+            probe_ok: Optional[bool] = None
+            if probe:
+                t0 = time.monotonic()
+                try:
+                    pf = host.engine.submit_query(
+                        PROBE_TENANT, np.array([[0.5, 0.5]]),
+                        deadline_ms=0.0, priority=1_000_000,
+                        block=False)
+                except EngineSaturated:
+                    # a full queue the scheduler isn't draining IS the
+                    # failure the probe exists to catch
+                    probe_ok = False
+                else:
+                    probe_ok = pf.wait(cfg.probe_deadline_s)
+                    if probe_ok:
+                        probe_ok = (time.monotonic() - t0
+                                    <= cfg.probe_deadline_s)
+            if self._health.observe(host.host_id,
+                                    heartbeat_age_s=hb["age_s"],
+                                    probe_ok=probe_ok):
+                failed.append(host.host_id)
+        for hid in failed:
+            self.fail_host(hid, reason=self._health.events[-1]
+                           if self._health.events else "health check")
+        return failed
+
+    def start(self) -> "CTCluster":
+        """Start every live host's scheduler thread and the health
+        monitor (idempotent)."""
+        with self._lock:
+            hosts = [h for h in self._hosts.values() if h.alive]
+            self._started = True
+            if self._monitor_thread is not None \
+                    and self._monitor_thread.is_alive():
+                return self
+            stop_evt = threading.Event()
+            t = threading.Thread(target=self._monitor_loop,
+                                 args=(stop_evt,), name="ct-cluster-health",
+                                 daemon=True)
+            self._monitor_stop, self._monitor_thread = stop_evt, t
+        for host in hosts:
+            host.engine.start()
+        t.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop the monitor, then every live host (draining queues)."""
+        with self._lock:
+            t, evt = self._monitor_thread, self._monitor_stop
+            self._monitor_thread = self._monitor_stop = None
+            self._started = False
+            hosts = [h for h in self._hosts.values() if h.alive]
+        if evt is not None:
+            evt.set()
+        if t is not None:
+            t.join(timeout=30.0)
+        for host in hosts:
+            host.engine.stop(drain=True)
+
+    def __enter__(self) -> "CTCluster":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _monitor_loop(self, stop_evt: threading.Event) -> None:
+        while not stop_evt.is_set():
+            try:
+                self.check_health(probe=True)
+            except Exception:       # noqa: BLE001 — monitor must survive
+                pass
+            stop_evt.wait(self._monitor_interval_s)
+
+    # -- failover -----------------------------------------------------------
+
+    def fail_host(self, host_id: str, reason: str = "manual") -> Dict[str, str]:
+        """Remove ``host_id`` from the ring and migrate its tenants to
+        their new consistent-hash owners (see the module docstring for
+        the replica-adoption vs recombination decision).  In-flight
+        requests routed at the host are retried or resolved with
+        ``HostFailed`` — never dropped.  Returns ``{tenant: outcome}``
+        (``"replica"``, ``"retained"``, ``"recombined"``)."""
+        with self._lock:
+            host = self._hosts.get(host_id)
+            if host is None or not host.alive:
+                return {}
+        host.engine.stop(drain=False)       # outside the cluster lock
+        t0 = time.monotonic()
+        with self._lock:
+            if not host.alive:              # lost a fail race
+                return {}
+            host.alive = False
+            host.fail_reason = reason
+            self._health.forget(host_id)
+            if not any(h.alive for h in self._hosts.values()):
+                raise HostFailed(
+                    f"host {host_id!r} was the last live host — no "
+                    f"survivors to fail over to", host_id)
+            self._ring = self._build_ring()
+            # requests that RESOLVED before the failure but were never
+            # polled: commit them first, so migration re-registers from
+            # the true last-acked state
+            for fut in list(self._inflight):
+                if fut._inner.done() and not fut._done:
+                    self._finalize_from_inner_locked(fut)
+            outcomes: Dict[str, str] = {}
+            for rec in self._records.values():
+                if host_id in rec.owners:
+                    # one tenant's migration failing must not strand the
+                    # rest (or the in-flight retarget below) half-done —
+                    # that would hang every future routed at this host
+                    try:
+                        outcomes[rec.name] = self._migrate_record(
+                            rec, host_id)
+                    except Exception as e:      # noqa: BLE001
+                        outcomes[rec.name] = f"error: {e!r}"
+            retried = promoted = lost = 0
+            for fut in list(self._inflight):
+                if fut._done or fut._host_id != host_id:
+                    continue
+                if fut.kind == "query":
+                    rec = self._records.get(fut.name)
+                    if rec is None:
+                        fut._finalize_locked(error=KeyError(
+                            f"tenant {fut.name!r} gone during failover"))
+                        self._inflight.discard(fut)
+                        continue
+                    try:
+                        new_primary = self._primary(rec)
+                        inner = new_primary.engine.submit_query(
+                            fut.name, fut._points, block=False,
+                            **fut._query_kwargs)
+                    except Exception as e:      # noqa: BLE001
+                        # the heir is drowning (EngineSaturated) or the
+                        # resubmission failed outright: resolve with the
+                        # named error rather than block failover or
+                        # leave the future hanging
+                        fut._finalize_locked(error=e)
+                        self._inflight.discard(fut)
+                        continue
+                    fut._retarget_locked(new_primary.host_id, inner)
+                    retried += 1
+                else:
+                    live_sec = next(
+                        ((hid, f) for hid, f in fut._secondaries
+                         if self._hosts[hid].alive), None)
+                    if live_sec is not None:
+                        fut._retarget_locked(*live_sec)
+                        promoted += 1
+                    else:
+                        recombined = outcomes.get(fut.name) == "recombined"
+                        fut._finalize_locked(error=HostFailed(
+                            f"ingest for tenant {fut.name!r} was in "
+                            f"flight on failed host {host_id!r} with no "
+                            f"replica; its component grid(s) "
+                            f"{list(fut.levels)} were dropped and "
+                            + ("the scheme recombined without them"
+                               if recombined else
+                               "the tenant serves its last-acked "
+                               "pre-failure state"), host_id))
+                        self._inflight.discard(fut)
+                        lost += 1
+            self._counters["retried_queries"] += retried
+            self._counters["promoted_ingests"] += promoted
+            self._counters["host_failed"] += lost
+            self._failovers.append({
+                "host": host_id, "reason": reason,
+                "tenants": len(outcomes), "outcomes": dict(outcomes),
+                "retried_queries": retried, "promoted_ingests": promoted,
+                "host_failed_ingests": lost,
+                "recovery_ms": (time.monotonic() - t0) * 1e3,
+            })
+            return outcomes
+
+    def _index_set(self, scheme: SchemeLike) -> set:
+        return {tuple(ell) for ell, _ in scheme.grids}
+
+    def _migrate_record(self, rec: _TenantRecord, dead_hid: str) -> str:
+        """Move one tenant off a dead owner; caller holds the lock."""
+        survivors = [o for o in rec.owners
+                     if o != dead_hid and self._hosts[o].alive]
+        outcome = "replica" if survivors else "retained"
+        if not survivors:
+            # the only serving copy died: grids acked before the kill
+            # are retained; grids IN FLIGHT on the dead host are lost —
+            # drop them and recombine (Harding-style), coefficient-only
+            lost = sorted({lvl for fut in self._inflight
+                           if not fut._done and fut.kind == "ingest"
+                           and fut.name == rec.name
+                           and fut._host_id == dead_hid
+                           and not fut._inner.done()
+                           for lvl in fut.levels})
+            if lost and set(lost) < self._index_set(rec.scheme):
+                try:
+                    scheme2, plan2, _ = recombine_after_fault(
+                        rec.scheme, lost, plan=rec.plan)
+                except ValueError:
+                    # the downward-closed drop (lost vectors AND every
+                    # dominating member) would empty the index set — a
+                    # LOW lost level dominates everything above it; fall
+                    # back to serving the retained last-acked state
+                    # unreduced, same as a whole-index-set loss
+                    pass
+                else:
+                    rec.scheme, rec.plan = scheme2, plan2
+                    rec.dropped = rec.dropped + tuple(lost)
+                    outcome = "recombined"
+        new_owners = self._ring.owners(rec.name, rec.replication)
+        donor = self._hosts[survivors[0]].engine if survivors else None
+        for hid in new_owners:
+            host = self._hosts[hid]
+            if rec.name in host.engine:
+                continue
+            hspec = self._host_exec_spec(host, rec.spec)
+            plan = rec.plan if hspec == rec.plan_spec else None
+            if donor is not None:
+                surplus = donor._tenants[rec.name].surplus
+                host.engine.register(rec.name, rec.scheme, spec=hspec,
+                                     plan=plan, surplus=surplus,
+                                     deadline_ms=rec.deadline_ms,
+                                     priority=rec.priority)
+            else:
+                host.engine.register(rec.name, rec.scheme,
+                                     rec.grids if rec.grids else None,
+                                     spec=hspec, plan=plan,
+                                     deadline_ms=rec.deadline_ms,
+                                     priority=rec.priority)
+        # drop serving copies on live ex-owners the ring walked past
+        for hid in rec.owners:
+            h = self._hosts.get(hid)
+            if h is not None and h.alive and hid not in new_owners \
+                    and rec.name in h.engine:
+                h.engine.unregister(rec.name)
+        rec.owners = new_owners
+        primary = self._hosts[new_owners[0]]
+        rec.plan_spec = self._host_exec_spec(primary, rec.spec)
+        if rec.plan is None or outcome != "recombined":
+            rec.plan = primary.engine.plan(rec.name)
+        return outcome
+
+    def add_host(self, host_id: Optional[str] = None,
+                 spec: Optional[ExecSpec] = None) -> str:
+        """Join a fresh host and rebalance tenant placement onto the new
+        ring (``repro.runtime.elastic.rebalance_cluster``)."""
+        from repro.runtime.elastic import rebalance_cluster
+        with self._lock:
+            hid = host_id or f"host{len(self._hosts)}"
+            if hid in self._hosts:
+                raise ValueError(f"host {hid!r} already exists")
+            hspec = spec or ExecSpec()
+            ekw = {"check_finite": True}
+            engine = CTEngine(hspec, host_id=hid, **ekw)
+            self._add_probe_tenant(engine)
+            self._hosts[hid] = _Host(host_id=hid, engine=engine, spec=hspec)
+            self._ring = self._build_ring()
+            started = self._started
+        if started:
+            engine.start()
+        rebalance_cluster(self)
+        return hid
+
+    def reconcile(self, name: str) -> str:
+        """Re-spread one tenant onto its CURRENT ring owners (the
+        ``rebalance_cluster`` work item): new owners adopt the primary's
+        plan + surplus, ex-owners are unregistered.  Returns ``"kept"``
+        or ``"moved"``."""
+        with self._lock:
+            rec = self._record(name)
+            desired = self._ring.owners(name, rec.replication)
+            if desired == rec.owners:
+                return "kept"
+            donor = self._primary(rec).engine
+            surplus = donor._tenants[name].surplus
+            for hid in desired:
+                host = self._hosts[hid]
+                if name in host.engine:
+                    continue
+                hspec = self._host_exec_spec(host, rec.spec)
+                plan = rec.plan if hspec == rec.plan_spec else None
+                host.engine.register(name, rec.scheme, spec=hspec,
+                                     plan=plan, surplus=surplus,
+                                     deadline_ms=rec.deadline_ms,
+                                     priority=rec.priority)
+            for hid in rec.owners:
+                host = self._hosts.get(hid)
+                if host is not None and host.alive \
+                        and hid not in desired and name in host.engine:
+                    host.engine.unregister(name)
+            rec.owners = desired
+            primary = self._hosts[desired[0]]
+            rec.plan_spec = self._host_exec_spec(primary, rec.spec)
+            rec.plan = primary.engine.plan(name)
+            return "moved"
+
+    # -- accounting ---------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        """Cluster-wide serving statistics: per-host queue depth /
+        compile-cache / scheduler counters (each host's
+        ``CTEngine.stats()``), the tenant placement map, ring
+        parameters, failover history and routing counters."""
+        with self._lock:
+            hosts = dict(self._hosts)
+            records = dict(self._records)
+            counters = dict(self._counters)
+            failovers = list(self._failovers)
+            inflight = sum(1 for f in self._inflight if not f._done)
+        per_host: Dict[str, Any] = {}
+        for hid, host in hosts.items():
+            hb = host.engine.heartbeat()
+            entry: Dict[str, Any] = {
+                "alive": host.alive, "killed": host.killed,
+                "stalled": host.stalled, "fail_reason": host.fail_reason,
+                "pending": hb["pending"],
+                "heartbeat_age_s": hb["age_s"],
+                "tenants": sorted(n for n in host.engine.names()
+                                  if n != PROBE_TENANT),
+            }
+            if host.alive:
+                es = host.engine.stats()
+                entry["ingest_cache"] = es["ingest_cache"]
+                entry["scheduler"] = es["scheduler"]
+                entry["ingests"] = es["ingests"]
+                entry["eval"] = es["eval"]
+            per_host[hid] = entry
+        return {
+            "hosts": per_host,
+            "live_hosts": sorted(h.host_id for h in hosts.values()
+                                 if h.alive),
+            "tenants": len(records),
+            "placement": {n: list(r.owners) for n, r in records.items()},
+            "replication": self.replication,
+            "ring": {"vnodes": self.vnodes, "seed": self.seed},
+            "inflight": inflight,
+            "failovers": failovers,
+            **counters,
+        }

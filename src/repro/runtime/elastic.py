@@ -24,7 +24,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
-__all__ = ["MeshPlan", "plan_mesh", "rebalance_engine"]
+__all__ = ["MeshPlan", "plan_mesh", "rebalance_cluster", "rebalance_engine"]
 
 
 @dataclass(frozen=True)
@@ -95,4 +95,25 @@ def rebalance_engine(engine, mesh=None, *, axis_name: str = "slab",
             outcomes[name] = engine.rebind(name, mesh=mesh,
                                            axis_name=axis_name,
                                            n_slabs=None)
+    return outcomes
+
+
+def rebalance_cluster(cluster, *, names=None) -> Dict[str, str]:
+    """Re-spread a ``CTCluster``'s tenants onto the CURRENT consistent-
+    hash ring — the cluster-level sibling of ``rebalance_engine``, run
+    after membership changes (``add_host``, or a manual ring rebuild).
+
+    Tenants whose ring owners are unchanged are untouched (``"kept"``,
+    the consistent-hashing guarantee that joining one of N hosts
+    relocates ~1/N of the tenants); moved tenants' new owners ADOPT the
+    live primary's plan and surplus (``CTEngine.register(plan=,
+    surplus=)`` — no re-ingest, and no recompile for signature-shared
+    executables), then stale ex-owners are unregistered.  Returns
+    ``{name: "kept" | "moved"}``.  Safe with live submitters: each
+    tenant moves atomically under the cluster lock, and routing always
+    reads the record's current owner list.
+    """
+    outcomes: Dict[str, str] = {}
+    for name in (cluster.names() if names is None else tuple(names)):
+        outcomes[name] = cluster.reconcile(name)
     return outcomes

@@ -20,6 +20,14 @@ The driver loop (``launch/train.py``) delegates health policy here:
   executor plan is updated in place (coefficient-only when possible,
   incremental bucket rebuild otherwise) instead of being rebuilt from
   scratch.
+* **Serving-host loss** — ``HostHealthTracker`` is the strike-counting
+  policy behind ``repro.runtime.cluster.CTCluster``'s health monitor:
+  each observation combines the host's pump-liveness heartbeat age and
+  the outcome of a deadline-bounded probe query; ``max_strikes``
+  consecutive bad observations (or an explicit kill) fail the host,
+  which triggers tenant migration — recovery by replica adoption or by
+  the ``recombine_after_fault`` coefficient path above, never by
+  recomputing lost solves.
 """
 
 from __future__ import annotations
@@ -27,9 +35,10 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 __all__ = ["HealthConfig", "HealthMonitor", "StepVerdict",
+           "HostHealthConfig", "HostHealthTracker",
            "recombine_after_fault"]
 
 
@@ -87,6 +96,67 @@ class HealthMonitor:
             self.time_ewma = step_time if self.time_ewma is None else \
                 dt_ * self.time_ewma + (1 - dt_) * step_time
         return verdict
+
+
+# ---------------------------------------------------------------------------
+# Serving-host health (cluster failover policy)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HostHealthConfig:
+    """Thresholds of the cluster health monitor (pure policy)."""
+
+    #: heartbeat older than this marks the observation bad (the host's
+    #: scheduler has not pumped — stalled dispatch or a dead thread)
+    heartbeat_timeout_s: float = 2.0
+    #: how long a probe query may take before the observation is bad
+    probe_deadline_s: float = 0.5
+    #: consecutive bad observations before the host is declared failed
+    #: (>1 absorbs a single slow pump under CPU contention)
+    max_strikes: int = 2
+
+
+@dataclass
+class HostHealthTracker:
+    """Per-host strike accounting over (heartbeat age, probe outcome)
+    observations.  ``observe`` returns ``True`` when the host crossed
+    the failure threshold; a good observation resets its strikes.  An
+    explicit ``killed=True`` observation fails immediately (the fault
+    injector's kill seam — no reason to wait out strikes on a host that
+    reported its own death)."""
+
+    cfg: HostHealthConfig = field(default_factory=HostHealthConfig)
+    strikes: Dict[str, int] = field(default_factory=dict)
+    events: List[str] = field(default_factory=list)
+
+    def observe(self, host_id: str, *,
+                heartbeat_age_s: Optional[float] = None,
+                probe_ok: Optional[bool] = None,
+                killed: bool = False) -> bool:
+        if killed:
+            self.events.append(f"{host_id}: killed")
+            self.strikes[host_id] = self.cfg.max_strikes
+            return True
+        bad = []
+        if heartbeat_age_s is not None \
+                and heartbeat_age_s > self.cfg.heartbeat_timeout_s:
+            bad.append(f"heartbeat stale {heartbeat_age_s:.2f}s "
+                       f"(> {self.cfg.heartbeat_timeout_s:.2f}s)")
+        if probe_ok is False:
+            bad.append(f"probe missed its "
+                       f"{self.cfg.probe_deadline_s:.2f}s deadline")
+        if not bad:
+            self.strikes[host_id] = 0
+            return False
+        n = self.strikes.get(host_id, 0) + 1
+        self.strikes[host_id] = n
+        self.events.append(f"{host_id}: strike {n}/"
+                           f"{self.cfg.max_strikes}: {'; '.join(bad)}")
+        return n >= self.cfg.max_strikes
+
+    def forget(self, host_id: str) -> None:
+        """Drop a failed/removed host's accounting."""
+        self.strikes.pop(host_id, None)
 
 
 # ---------------------------------------------------------------------------

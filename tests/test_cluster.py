@@ -1,0 +1,379 @@
+"""CTCluster: consistent-hash placement (determinism + bounded
+relocation), kill/stall/poison failover through the health monitor,
+bit-identity of failed-over serving against fresh single engines, and
+the threaded stress tier (8 submitters, mid-run host kill, zero hung or
+silently dropped futures).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from proptest import cases, integers, seeds
+
+from repro.core.engine import (CTEngine, EngineSaturated, ExecSpec,
+                               clear_compile_cache)
+from repro.core.executor import build_plan
+from repro.core.levels import CombinationScheme, grid_shape
+from repro.runtime.cluster import (CTCluster, HashRing, HostFailed,
+                                   PROBE_TENANT)
+from repro.runtime.elastic import rebalance_cluster
+from repro.runtime.fault_tolerance import HostHealthConfig
+
+pytestmark = pytest.mark.cluster
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    clear_compile_cache()
+    yield
+
+
+def _grids(scheme, seed):
+    rng = np.random.default_rng(seed)
+    return {ell: rng.standard_normal(grid_shape(ell))
+            for ell, _ in scheme.grids}
+
+
+def _wait_for(cond, timeout=30.0, interval=0.02):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(interval)
+    return cond()
+
+
+SCHEME = CombinationScheme(3, 3)
+
+
+def _cluster_with_tenants(n_tenants=6, **kw):
+    kw.setdefault("seed", 11)
+    cl = CTCluster(4, **kw)
+    for i in range(n_tenants):
+        cl.register(f"t{i}", SCHEME, _grids(SCHEME, i))
+    return cl
+
+
+# ---------------------------------------------------------------------------
+# Placement: determinism + bounded relocation (satellite property test)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "seed,n", cases(lambda r: (seeds(r), integers(r, 3, 8)), n=10))
+def test_ring_placement_deterministic_and_bounded_relocation(seed, n):
+    """Same (hosts, vnodes, seed) -> identical owner lists; removing one
+    of N hosts relocates only the keys it owned (~T/N), never reshuffles
+    the rest; adding it back restores the original map exactly."""
+    hosts = [f"host{i}" for i in range(n)]
+    keys = [f"tenant-{k}" for k in range(200)]
+    r1 = HashRing(hosts, seed=seed)
+    r2 = HashRing(hosts, seed=seed)
+    assert all(r1.owners(k, 2) == r2.owners(k, 2) for k in keys)
+
+    shrunk = HashRing(hosts[:-1], seed=seed)
+    gone = hosts[-1]
+    moved = sum(1 for k in keys
+                if r1.owners(k)[0] != gone
+                and r1.owners(k) != shrunk.owners(k))
+    assert moved == 0          # survivors' primaries never move
+    relocated = sum(1 for k in keys if r1.owners(k)[0] == gone)
+    # vnodes keep per-host load near T/N: allow 2x slack for hash noise
+    assert relocated <= 2 * len(keys) // n
+
+    grown = HashRing(hosts, seed=seed)   # "restart" after re-adding
+    assert all(grown.owners(k, 2) == r1.owners(k, 2) for k in keys)
+
+
+def test_cluster_restart_recomputes_identical_placement():
+    """A rebuilt cluster (same host count, vnodes, seed) places every
+    tenant on the same owners — placement is a pure function of the
+    ring, not of registration order or process state."""
+    a = _cluster_with_tenants(8, replication=2)
+    b = CTCluster(4, replication=2, seed=11)
+    for i in reversed(range(8)):         # opposite registration order
+        b.register(f"t{i}", SCHEME, _grids(SCHEME, i))
+    assert {n: a.owners_of(n) for n in a.names()} \
+        == {n: b.owners_of(n) for n in b.names()}
+
+
+def test_add_host_rebalances_bounded_and_stays_correct():
+    """Joining host N+1 relocates ~tenants/(N+1) tenants (moved owners
+    adopt plan + surplus, no re-ingest) and every answer is unchanged."""
+    cl = _cluster_with_tenants(8)
+    pts = np.random.default_rng(1).random((16, 3))
+    want = {n: cl.query(n, pts) for n in cl.names()}
+    before = {n: cl.owners_of(n) for n in cl.names()}
+    cl.add_host()
+    moved = [n for n in cl.names() if cl.owners_of(n) != before[n]]
+    assert len(moved) <= 2 * 8 // 5 + 1
+    out = rebalance_cluster(cl)          # idempotent: already reconciled
+    assert set(out.values()) <= {"kept"}
+    for n in cl.names():
+        np.testing.assert_array_equal(cl.query(n, pts), want[n])
+
+
+# ---------------------------------------------------------------------------
+# Failover: kill one of 4 hosts (acceptance)
+# ---------------------------------------------------------------------------
+
+def _fresh_oracle(cl, name, pts):
+    """A FRESH single engine serving ``name``'s post-fault scheme from
+    the cluster's retained grids, on the same fine grid (full_levels) —
+    the bit-identity oracle for failed-over serving."""
+    rec = cl._records[name]
+    eng = CTEngine()
+    plan = build_plan(rec.scheme, cl.plan(name).full_levels)
+    eng.register(name, rec.scheme, rec.grids, plan=plan)
+    return eng.query(name, pts)
+
+
+def test_kill_one_of_four_hosts_every_tenant_stays_queryable():
+    """The headline failover path: kill a host with live tenants and
+    in-flight work.  Every tenant remains queryable with answers
+    bit-identical to a fresh single engine serving the same post-fault
+    scheme; queries in flight on the victim are transparently retried;
+    an unreplicated in-flight ingest resolves with the named
+    ``HostFailed`` and its component grid is recombined away."""
+    cl = _cluster_with_tenants(6, replication=1)
+    pts = np.random.default_rng(2).random((32, 3))
+    want = {n: cl.query(n, pts) for n in cl.names()}
+
+    victim = cl.owners_of("t0")[0]
+    victim_tenants = [n for n in cl.names()
+                      if cl.owners_of(n)[0] == victim]
+    # in-flight on the victim at kill time: one query (idempotent ->
+    # retried) and one PARTIAL ingest (unreplicated -> lost -> the
+    # carried component grid is dropped and the scheme recombined)
+    q_inflight = cl.submit_query("t0", pts)
+    lost_level = next(ell for ell, c in cl.scheme("t0").grids if c != 0)
+    i_inflight = cl.submit_ingest(
+        "t0", {lost_level: np.full(grid_shape(lost_level), 2.0)})
+
+    cl.injector.kill(victim)
+    failed = cl.check_health()           # manual monitor pass
+    assert failed == [victim]
+    assert victim not in cl.live_hosts()
+
+    # the in-flight query retried transparently and answers the POST-
+    # fault state (the lost grid left the combination, so the serving
+    # function legitimately changed — but the future resolved, unasked)
+    assert q_inflight.retargeted == 1
+    np.testing.assert_array_equal(q_inflight.result(30),
+                                  cl.query("t0", pts))
+    # the unreplicated in-flight ingest fails NAMED, never hangs
+    with pytest.raises(HostFailed, match="t0.*no replica") as ei:
+        i_inflight.result(30)
+    assert ei.value.host_id == victim
+
+    # its component grid was recombined away, Harding-style
+    assert lost_level in cl._records["t0"].dropped
+    assert lost_level not in {ell for ell, _ in cl.scheme("t0").grids}
+
+    st = cl.stats()
+    assert st["failovers"] and st["failovers"][0]["recovery_ms"] > 0
+    assert st["failovers"][0]["outcomes"]["t0"] == "recombined"
+    for n in cl.names():
+        assert victim not in cl.owners_of(n)
+        np.testing.assert_array_equal(cl.query(n, pts),
+                                      _fresh_oracle(cl, n, pts))
+    # tenants the victim did not own are bitwise untouched
+    for n in set(cl.names()) - set(victim_tenants):
+        np.testing.assert_array_equal(cl.query(n, pts), want[n])
+
+
+def test_replicated_tenant_survives_primary_kill_without_data_loss():
+    """With R=2 the replica absorbs everything: an ingest in flight on
+    the dying primary re-points at the replica's acknowledgement (no
+    ``HostFailed``), and the new data serves after failover."""
+    cl = _cluster_with_tenants(6, replication=2)
+    cl.start()
+    try:
+        pts = np.random.default_rng(3).random((16, 3))
+        base = cl.query("t1", pts)
+        victim = cl.owners_of("t1")[0]
+        f_new = cl.submit_ingest("t1", _grids(SCHEME, 99))
+        cl.injector.kill(victim)
+        surplus = f_new.result(60)       # replica ack resolves it
+        assert np.all(np.isfinite(np.asarray(surplus)))
+        assert _wait_for(lambda: victim not in cl.live_hosts(), 30)
+        after = cl.query("t1", pts)
+        assert not np.array_equal(after, base)      # new data serves
+        np.testing.assert_array_equal(after, _fresh_oracle(cl, "t1", pts))
+        assert cl.stats()["host_failed"] == 0
+    finally:
+        cl.stop()
+
+
+def test_stall_detection_via_heartbeat_and_probe_deadline():
+    """A stalled host never admits death — only the monitor's heartbeat
+    age + missed probe deadlines catch it (strike accounting), after
+    which its tenants fail over exactly like a kill."""
+    cl = _cluster_with_tenants(
+        4, health=HostHealthConfig(heartbeat_timeout_s=0.3,
+                                   probe_deadline_s=0.3, max_strikes=2),
+        monitor_interval_s=0.1)
+    cl.start()
+    try:
+        pts = np.random.default_rng(4).random((16, 3))
+        want = {n: cl.query(n, pts) for n in cl.names()}
+        victim = cl.owners_of("t0")[0]
+        cl.injector.stall(victim)
+        assert _wait_for(lambda: victim not in cl.live_hosts(), 30)
+        reason = cl.stats()["failovers"][0]["reason"]
+        assert "strike" in reason or "heartbeat" in reason \
+            or "probe" in reason
+        for n in cl.names():
+            np.testing.assert_array_equal(cl.query(n, pts), want[n])
+    finally:
+        cl.stop()
+
+
+def test_poisoned_ingest_fails_only_its_future_host_stays_up():
+    """The NaN-poison seam is a DATA fault, not a host fault: the
+    poisoned ingest's future resolves with ``FloatingPointError``, the
+    host keeps serving, siblings and the tenant's retained state are
+    untouched, and no failover fires."""
+    cl = _cluster_with_tenants(4)
+    pts = np.random.default_rng(5).random((16, 3))
+    want = {n: cl.query(n, pts) for n in cl.names()}
+    cl.injector.poison_next_ingest("t2")
+    bad = cl.submit_ingest("t2", _grids(SCHEME, 42))
+    ok = cl.submit_query("t3", pts)
+    with pytest.raises(FloatingPointError, match="non-finite"):
+        bad.result(60)
+    np.testing.assert_array_equal(ok.result(60), want["t3"])
+    assert len(cl.live_hosts()) == 4
+    assert cl.stats()["failovers"] == []
+    np.testing.assert_array_equal(cl.query("t2", pts), want["t2"])
+    # the poisoned payload never committed into the retained grids
+    clean = cl.submit_ingest("t2", _grids(SCHEME, 42))
+    assert np.all(np.isfinite(np.asarray(clean.result(60))))
+
+
+def test_unregister_and_saturated_routing_errors_are_named():
+    cl = _cluster_with_tenants(2)
+    with pytest.raises(KeyError, match="no tenant 'nope'"):
+        cl.submit_query("nope", np.zeros((1, 3)))
+    with pytest.raises(ValueError, match="reserved"):
+        cl.register(PROBE_TENANT, SCHEME, _grids(SCHEME, 0))
+    cl.unregister("t0")
+    assert "t0" not in cl.names()
+    with pytest.raises(KeyError, match="t0"):
+        cl.query("t0", np.zeros((1, 3)))
+
+
+def test_surrogate_rides_the_cluster_unchanged():
+    """``CTSurrogate(cluster=)``: the one-tenant convenience API routes
+    through placement/health/failover with identical answers."""
+    from repro.launch.serve import CTSurrogate
+    cl = CTCluster(3, seed=5)
+    g = _grids(SCHEME, 7)
+    sur = CTSurrogate(SCHEME, g, cluster=cl)
+    eng = CTEngine()
+    eng.register("oracle", SCHEME, g)
+    pts = np.random.default_rng(6).random((24, 3))
+    np.testing.assert_array_equal(sur.query(pts), eng.query("oracle", pts))
+    g2 = _grids(SCHEME, 8)
+    sur.update(g2)
+    eng.update("oracle", g2)
+    np.testing.assert_array_equal(sur.query(pts), eng.query("oracle", pts))
+    with pytest.raises(ValueError, match="not both"):
+        CTSurrogate(SCHEME, g, engine=eng, cluster=cl)
+
+
+@pytest.mark.multidevice
+def test_meshed_hosts_over_disjoint_device_slices():
+    """Hosts over disjoint slices of the 8 fake devices: each tenant
+    runs slab-sharded on its owner's slice, answers match an unmeshed
+    oracle engine."""
+    import jax
+    if len(jax.devices()) < 8:
+        pytest.skip("needs the 8 fake host devices")
+    cl = CTCluster.over_device_slices(4, seed=11)
+    g = _grids(SCHEME, 1)
+    cl.register("t", SCHEME, g)
+    eng = CTEngine()
+    eng.register("t", SCHEME, g)
+    pts = np.random.default_rng(7).random((16, 3))
+    np.testing.assert_array_equal(cl.query("t", pts), eng.query("t", pts))
+    victim = cl.owners_of("t")[0]
+    cl.injector.kill(victim)
+    cl.check_health()
+    np.testing.assert_array_equal(cl.query("t", pts), eng.query("t", pts))
+
+
+# ---------------------------------------------------------------------------
+# Threaded stress: 8 submitters, mid-run kill, zero hung/dropped futures
+# ---------------------------------------------------------------------------
+
+def test_stress_eight_submitters_mid_run_kill_no_dropped_futures():
+    """Acceptance stress tier: 8 threads hammer queries + ingests while
+    one of 4 hosts is killed mid-run.  EVERY future must resolve — to a
+    value or to a named error (``HostFailed`` for unreplicated in-flight
+    ingests) — within the drain timeout; zero hangs, zero silent drops,
+    and every tenant stays queryable afterwards."""
+    cl = _cluster_with_tenants(6, replication=1)
+    cl.start()
+    futures, flock = [], threading.Lock()
+    stop_evt = threading.Event()
+    pts = np.random.default_rng(8).random((8, 3))
+    errors = []
+
+    def submitter(tid):
+        rng = np.random.default_rng(100 + tid)
+        k = 0
+        while not stop_evt.is_set():
+            name = f"t{int(rng.integers(6))}"
+            try:
+                if tid < 2 and k % 3 == 0:
+                    ell = SCHEME.grids[int(rng.integers(
+                        len(SCHEME.grids)))][0]
+                    f = cl.submit_ingest(name, {
+                        ell: rng.standard_normal(grid_shape(ell))})
+                else:
+                    f = cl.submit_query(name, pts)
+                with flock:
+                    futures.append(f)
+            except (KeyError, HostFailed,
+                    EngineSaturated) as e:         # named routing errors
+                errors.append(e)
+            k += 1
+            time.sleep(0.002)
+
+    threads = [threading.Thread(target=submitter, args=(i,))
+               for i in range(8)]
+    try:
+        for t in threads:
+            t.start()
+        time.sleep(0.6)
+        victim = cl.owners_of("t0")[0]
+        cl.injector.kill(victim)               # mid-run host loss
+        assert _wait_for(lambda: victim not in cl.live_hosts(), 30)
+        time.sleep(0.6)
+    finally:
+        stop_evt.set()
+        for t in threads:
+            t.join(timeout=30)
+        assert not any(t.is_alive() for t in threads)
+
+    hung = dropped = 0
+    for f in futures:
+        if not f.wait(60):
+            hung += 1
+            continue
+        err = f.error()
+        if err is not None and not isinstance(
+                err, (HostFailed, FloatingPointError, KeyError,
+                      EngineSaturated)):
+            dropped += 1                      # unnamed error = a drop
+    assert hung == 0 and dropped == 0
+    assert len(futures) > 50                  # the stress actually ran
+    cl.stop()
+    for n in cl.names():
+        assert victim not in cl.owners_of(n)
+        out = cl.query(n, pts)
+        assert np.all(np.isfinite(out))
+        np.testing.assert_array_equal(out, _fresh_oracle(cl, n, pts))

@@ -724,6 +724,9 @@ def test_priority_orders_dispatch_within_a_pump():
 
 
 def test_backpressure_bounded_queue():
+    """Admission control rejects with an ACTIONABLE message: the
+    rejected tenant's name, the live queue depth and ``max_pending``
+    (satellite: greppable in cluster logs)."""
     from repro.core.engine import EngineSaturated
     scheme = CombinationScheme(2, 3)
     eng = CTEngine(max_pending=2)
@@ -731,9 +734,11 @@ def test_backpressure_bounded_queue():
     pts = np.random.default_rng(240).random((4, 2))
     eng.submit_query("t", pts)
     eng.submit_query("t", pts)
-    with pytest.raises(EngineSaturated, match="full"):
+    with pytest.raises(EngineSaturated,
+                       match=r"tenant 't'.*depth 2 >= max_pending=2"):
         eng.submit_query("t", pts, block=False)
-    with pytest.raises(EngineSaturated, match="full"):
+    with pytest.raises(EngineSaturated,
+                       match=r"tenant 't'.*max_pending=2"):
         eng.submit_query("t", pts, block=True, timeout=0.05)
     assert eng.stats()["scheduler"]["rejected"] == 2
     eng.flush()                                     # frees the queue
@@ -847,3 +852,148 @@ def test_plan_cache_contract_and_explicit_clear():
     clear_plan_cache()
     assert len(_PLAN_CACHE) == 0
     assert build_plan(scheme) is not p1             # genuinely rebuilt
+
+
+# ---------------------------------------------------------------------------
+# Host plumbing, HOL fairness, zero-copy ingest (PR 7)
+# ---------------------------------------------------------------------------
+
+def test_hol_oversized_low_priority_backlog_does_not_block_high():
+    """Satellite regression: one oversized prio-0 backlog (12 queries,
+    max_batch=4) plus one prio-10 query in the SAME pump — the
+    high-priority query is promoted and dispatches FIRST, and the pump
+    caps the low-priority group at max_batch instead of draining it."""
+    scheme = CombinationScheme(2, 3)
+    eng = CTEngine(max_batch=4, deadline_ms=10_000.0)
+    eng.register("t", scheme, _random_grids(scheme, np.random.default_rng(27)))
+    pts = np.random.default_rng(270).random((4, 2))
+    want = eng.query("t", pts)
+
+    lows = [eng.submit_query("t", pts, priority=0) for _ in range(12)]
+    high = eng.submit_query("t", pts, priority=10)
+    n = eng.pump()                              # batch-full -> due now
+    assert high.done()                          # promoted into this pump
+    assert n <= 1 + eng.stats()["scheduler"]["max_batch"]
+    done_lows = [f for f in lows if f.done()]
+    assert 0 < len(done_lows) <= 4              # capped, not drained
+    assert all(high.done_at <= f.done_at for f in done_lows)
+    eng.flush()
+    for f in lows + [high]:
+        np.testing.assert_array_equal(f.result(), want)
+
+    # cross-tenant promotion: a prio-10 query on ANOTHER tenant, inside
+    # its own deadline budget, rides along when prio-0 work dispatches
+    eng.register("u", scheme, _random_grids(scheme,
+                                            np.random.default_rng(271)))
+    lows2 = [eng.submit_query("t", pts, priority=0) for _ in range(4)]
+    high2 = eng.submit_query("u", pts, priority=10)
+    eng.pump()                                  # "t" batch-full -> due
+    assert high2.done()                         # promoted, not expired
+    assert all(high2.done_at <= f.done_at for f in lows2 if f.done())
+    assert eng.stats()["scheduler"]["promoted"] >= 1
+
+
+def test_high_priority_never_pads_into_low_priority_chunk():
+    """Chunks split at priority boundaries: with both priorities due in
+    one pump, the prio-5 group dispatches as its own chunk before any
+    prio-0 work (completion order is the observable)."""
+    scheme = CombinationScheme(2, 3)
+    eng = CTEngine(max_batch=64)
+    eng.register("t", scheme, _random_grids(scheme, np.random.default_rng(28)))
+    pts = np.random.default_rng(280).random((4, 2))
+    f_low = [eng.submit_query("t", pts, priority=0) for _ in range(3)]
+    f_high = eng.submit_query("t", pts, priority=5)
+    assert eng.pump(now=1e18) == 4
+    assert all(f_high.done_at <= f.done_at for f in f_low)
+
+
+def test_donated_ingest_bit_identical_and_donation_threaded():
+    """Satellite: ``ExecSpec(donate=True)`` changes nothing about the
+    results (bit-identical surplus and queries) while the donation is
+    genuinely handed to XLA — on backends that can alias it the input
+    buffers are retired (``is_deleted``); where the backend cannot use
+    it, jax's donation warning proves it was requested."""
+    scheme = CombinationScheme(2, 4)
+    rng = np.random.default_rng(29)
+    host_grids = {ell: rng.standard_normal(grid_shape(ell))
+                  for ell, _ in scheme.grids}
+    e_plain = CTEngine()
+    e_plain.register("t", scheme, host_grids)
+    want = np.asarray(e_plain.surplus("t"))
+
+    staged = {ell: jnp.asarray(g) for ell, g in host_grids.items()}
+    e_don = CTEngine(ExecSpec(donate=True))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        e_don.register("t", scheme, staged)
+    np.testing.assert_array_equal(np.asarray(e_don.surplus("t")), want)
+
+    donation_warned = any("donated" in str(w.message).lower()
+                          for w in caught)
+    buffers_retired = any(getattr(g, "is_deleted", lambda: False)()
+                          for g in staged.values())
+    assert donation_warned or buffers_retired
+
+    # donate is part of the plan signature: no cache collision with the
+    # non-donating executable of the same plan shape
+    from repro.core.engine import plan_signature
+    assert plan_signature(e_plain.plan("t"), e_plain.spec("t")) \
+        != plan_signature(e_don.plan("t"), e_don.spec("t"))
+
+    # numpy inputs are staged fresh per call: always safe to re-ingest
+    pts = np.random.default_rng(290).random((8, 2))
+    e_don.update("t", host_grids)
+    np.testing.assert_array_equal(e_don.query("t", pts),
+                                  e_plain.query("t", pts))
+
+
+def test_heartbeat_and_probe_ride_the_scheduler():
+    """Host plumbing for the cluster health monitor: ``heartbeat()``
+    reports pump liveness, and ``submit_probe`` resolves ONLY when a
+    pump/flush/scheduler pass actually runs (``CTFuture.wait`` never
+    drives the engine from the prober's thread)."""
+    eng = CTEngine(host_id="h7")
+    hb = eng.heartbeat()
+    assert hb["host_id"] == "h7" and not hb["scheduler_alive"]
+    assert hb["age_s"] >= 0.0 and hb["pending"] == 0
+
+    probe = eng.submit_probe()
+    assert not probe.wait(0.05)         # nobody pumps -> must NOT resolve
+    assert eng.pump() >= 1
+    assert probe.wait(0.0) and probe.result() is True
+    assert eng.heartbeat()["age_s"] < eng._deadline_ms  # pump refreshed it
+
+    # saturated-engine errors carry the host prefix
+    from repro.core.engine import EngineSaturated
+    scheme = CombinationScheme(2, 3)
+    eng2 = CTEngine(max_pending=1, host_id="h9")
+    eng2.register("t", scheme, _random_grids(scheme,
+                                             np.random.default_rng(30)))
+    pts = np.random.default_rng(300).random((4, 2))
+    eng2.submit_query("t", pts)
+    with pytest.raises(EngineSaturated, match=r"engine\[h9\].*tenant 't'"):
+        eng2.submit_query("t", pts, block=False)
+
+
+def test_register_adoption_fast_lane_plan_and_surplus():
+    """Cluster failover seam: ``register(plan=, surplus=)`` adopts a
+    donor's plan and served state verbatim — no plan rebuild, no
+    re-ingest — and queries answer from the adopted surplus at once."""
+    scheme = CombinationScheme(2, 4)
+    rng = np.random.default_rng(31)
+    donor = CTEngine()
+    donor.register("t", scheme, _random_grids(scheme, rng))
+    pts = np.random.default_rng(310).random((8, 2))
+    want = donor.query("t", pts)
+
+    heir = CTEngine()
+    heir.register("t", scheme, plan=donor.plan("t"),
+                  surplus=donor._tenant("t").surplus)
+    assert heir.plan("t") is donor.plan("t")
+    np.testing.assert_array_equal(np.asarray(heir.surplus("t")),
+                                  np.asarray(donor.surplus("t")))
+    np.testing.assert_array_equal(heir.query("t", pts), want)
+    with pytest.raises(ValueError, match="surplus"):
+        CTEngine().register("u", scheme,
+                            _random_grids(scheme, rng),
+                            surplus=donor._tenant("t").surplus)
