@@ -20,10 +20,19 @@ For each (scheme, n_groups) this benchmark
     devices; wall time on one physical CPU is a smoke signal, the memory
     accounting is the point).
 
+``--mesh-2d`` adds the fully distributed section: the 2-D
+(member x slab) mesh ingest (``ct_transform_sharded(member_axis=...)``),
+where the HIERARCHIZATION itself is compute-sharded — each device
+transforms only its ``ceil(G_b / n_groups)`` member shard of every
+compact stack and ships surpluses to slab owners.  Those rows carry the
+plan-derived PER-DEVICE ingest FLOPs and bytes (``plan_ingest_stats``);
+CI asserts both shrink strictly as the slab axis grows 1 -> 2 -> 4 (no
+device ever materializes the full compact surplus stack).
+
 Emits ``BENCH_executor_sharded.json`` (``--json-out`` overrides, empty
 string disables).
 
-  PYTHONPATH=src python benchmarks/executor_sharded.py
+  PYTHONPATH=src python benchmarks/executor_sharded.py [--mesh-2d]
 """
 
 from __future__ import annotations
@@ -49,12 +58,15 @@ from repro.compat import AxisType, make_mesh  # noqa: E402
 from repro.core.distributed import (ct_transform_psum,  # noqa: E402
                                     ct_transform_sharded)
 from repro.core.executor import (build_plan, ct_transform,  # noqa: E402
-                                 shard_plan)
+                                 plan_ingest_stats, shard_plan)
 from repro.core.levels import (CombinationScheme, grid_shape,  # noqa: E402
                                scheme_total_points)
 
 SCHEMES = [(2, 7), (3, 5), (4, 4)]
 GROUPS = [1, 2, 4, 8]
+#: 2-D section configs: (members, slabs).  The (1, s) series over
+#: s = 1, 2, 4 is the one CI asserts strict per-device scaling on.
+MESH2D = [(1, 1), (1, 2), (1, 4), (2, 2), (2, 4)]
 DTYPE = np.float64
 
 
@@ -63,9 +75,18 @@ def _mesh(n):
                      axis_types=(AxisType.Auto,))
 
 
+def _mesh2d(m, s):
+    return make_mesh((m, s), ("member", "slab"),
+                     devices=np.array(jax.devices()[:m * s]),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--mesh-2d", action="store_true",
+                    help="also run the 2-D (member x slab) compute-"
+                         "sharded ingest section")
     ap.add_argument("--json-out", default="BENCH_executor_sharded.json",
                     help="machine-readable results path ('' disables)")
     args = ap.parse_args(argv)
@@ -122,6 +143,7 @@ def main(argv=None):
                   f"{psum_dev / slab_dev:>8.1f}x {t_psum * 1e3:>9.2f} "
                   f"{t_slab * 1e3:>9.2f}")
             rows.append({
+                "mode": "1d",
                 "dim": dim, "level": level, "grids": g,
                 "points": scheme_total_points(scheme),
                 "fine_size": plan.fine_size, "n_groups": n,
@@ -135,6 +157,54 @@ def main(argv=None):
                 "compiled_peak_temp_bytes_sharded": peak_slab,
                 "psum_s": t_psum, "sharded_s": t_slab,
             })
+
+    if args.mesh_2d:
+        print(f"\n{'scheme':>8} {'mesh':>8} {'groups':>6} "
+              f"{'dev_GFLOP':>10} {'dev_MB':>8} {'stack_MB':>9} "
+              f"{'ship_MB':>8} {'t_ms':>9}")
+        for dim, level in SCHEMES:
+            scheme = CombinationScheme(dim, level)
+            plan = build_plan(scheme)
+            rng = np.random.default_rng(dim * 100 + level)
+            grids = {ell: jnp.asarray(rng.standard_normal(grid_shape(ell)),
+                                      DTYPE)
+                     for ell, _ in scheme.grids}
+            want = np.asarray(ct_transform(grids, scheme))
+            for m, s in MESH2D:
+                mesh = _mesh2d(m, s)
+                splan = shard_plan(plan, s, n_groups=m * s)
+                f_2d = jax.jit(lambda gr, ms=mesh, sp=splan:
+                               ct_transform_sharded(
+                                   gr, scheme, ms, "slab",
+                                   member_axis="member", plan=sp))
+                got = np.asarray(f_2d(grids))
+                # the tentpole's acceptance bar: BIT-identical to the
+                # single-device transform, not merely close
+                np.testing.assert_array_equal(got, want)
+                st = plan_ingest_stats(splan,
+                                       dtype_bytes=np.dtype(DTYPE).itemsize)
+                t_2d = time_call(f_2d, grids, reps=args.reps)
+                print(f"{f'd={dim} n={level}':>8} {f'{m}x{s}':>8} "
+                      f"{m * s:>6} {st['ingest_flops'] / 1e9:>10.4f} "
+                      f"{st['ingest_bytes'] / 2**20:>8.3f} "
+                      f"{st['stack_bytes'] / 2**20:>9.3f} "
+                      f"{st['ship_bytes'] / 2**20:>8.3f} "
+                      f"{t_2d * 1e3:>9.2f}")
+                rows.append({
+                    "mode": "2d",
+                    "dim": dim, "level": level,
+                    "grids": plan.num_grids,
+                    "points": scheme_total_points(scheme),
+                    "members": m, "slabs": s, "n_groups": m * s,
+                    "dtype_bytes": np.dtype(DTYPE).itemsize,
+                    "per_device_ingest_flops": st["ingest_flops"],
+                    "per_device_ingest_bytes": st["ingest_bytes"],
+                    "per_device_stack_bytes": st["stack_bytes"],
+                    "per_device_ship_bytes": st["ship_bytes"],
+                    "per_device_out_bytes": st["out_bytes"],
+                    "sharded_2d_s": t_2d,
+                })
+
     if args.json_out:
         payload = {"bench": "executor_sharded", "reps": args.reps,
                    "backend": jax.default_backend(),

@@ -34,6 +34,44 @@ Parallelism layers (DESIGN.md Sect. 4):
       replicated and each device's axis-0 transform + coefficient
       weighting + scatter-add run in one kernel against its slab-LOCAL
       index map (the finished compact surpluses never land in HBM).
+    - 2-D (member x slab) mesh (``gather_slab_scatter_2d``): the
+      hierarchization ITSELF is sharded too.  The mesh's two axes play
+      different roles — flattening them member-major yields
+      ``n_groups = members * slabs`` COMPUTE groups, and device
+      ``(m, s)`` is compute group ``m * slabs + s`` while also being
+      slab ``s``'s scatter owner (replicated over the member
+      coordinate).  Each group assembles/hierarchizes only its
+      contiguous ``ceil(G_b / n_groups)`` member shard of every compact
+      stack and applies the combination coefficients at the source, so
+      per-device ingest FLOPs AND stack memory scale with total device
+      count; no device ever materializes a full ``(G_b, P_b)`` stack.
+
+Surplus shipping contract of the 2-D path (the flat realization of the
+``row_ranges`` metadata ``ShardedPlan`` records per member):
+
+  * ``SlabBucket.ship_src[i, s]`` gathers, from group i's local
+    flattened weighted stack, the payload it owes slab ``s`` — member
+    rows cut at the slab boundaries ``row_ranges`` describes, ordered by
+    (member, position); ``SlabBucket.ship_idx[s, i]`` holds the matching
+    slab-LOCAL scatter targets on the receiving side.  Pad entries read
+    an appended zero slot / write the slab dump slot.
+  * the wire step is one tiled ``all_to_all`` over the SLAB axis (each
+    device ships S payload rows, one per destination slab) followed by a
+    tiled ``all_gather`` over the MEMBER axis, which lands the payloads
+    on the slab owner ordered by source compute group — exactly global
+    member-major order, so the owner's single ordered scatter-add over
+    all groups' payloads replays the dense gather's per-slot left fold
+    bit-for-bit.  (Summing per-group PARTIAL slab buffers instead would
+    reassociate floating-point addition and break bit-identity — hence
+    ship-then-fold, never fold-then-sum.)
+  * overlap schedule: the per-bucket pipeline issues bucket ``b+1``'s
+    hierarchize + all_to_all + all_gather BEFORE bucket ``b``'s
+    scatter-add in program order, so the collectives overlap with the
+    scatter work instead of serializing in front of it.
+  * the fused scatter epilogue cannot apply here (shipping sits between
+    the axis-0 transform and the scatter), so the 2-D path is unfused by
+    construction; its win is compute/memory scaling, not stack-HBM
+    avoidance.
 
 Slab partitioning invariants (``repro.core.executor.ShardedPlan``):
 
@@ -46,7 +84,10 @@ Slab partitioning invariants (``repro.core.executor.ShardedPlan``):
     the base map) points at the slab dump slot ``slab_size``, so each
     global index lands in exactly one slab and the per-slot addition
     order of the dense gather is preserved — the sharded result is
-    bit-identical, not just allclose.
+    bit-identical, not just allclose.  The 2-D shipping maps inherit
+    exactly-one-ownership from the per-slab maps they are cut from:
+    every real (member, position) entry appears in exactly one
+    ``(slab, group)`` payload.
   * ``SlabBucket.row_ranges[s, g]`` records which contiguous range of
     member ``g``'s original-leading-axis nodes embeds into slab ``s`` —
     what a multi-controller run ships to group ``s`` instead of
@@ -74,7 +115,8 @@ from repro.kernels.ops import hierarchize as hier_local
 
 __all__ = ["plan_grid_groups", "hierarchize_sharded", "gather_full_psum",
            "gather_slab_scatter", "gather_slab_scatter_fused",
-           "comm_phase_sharded", "ct_transform_psum", "ct_transform_sharded"]
+           "gather_slab_scatter_2d", "comm_phase_sharded",
+           "ct_transform_psum", "ct_transform_sharded"]
 
 
 def plan_grid_groups(scheme: SchemeLike, num_groups: int
@@ -312,13 +354,153 @@ def gather_slab_scatter_fused(tails, sharded_plan, mesh: Mesh,
     return _finish_slab_gather(out, splan, mesh, axis_name, gather)
 
 
+def gather_slab_scatter_2d(stacks, sharded_plan, mesh: Mesh,
+                           member_axis: str, axis_name: str, *,
+                           gather: bool = True,
+                           interpret: bool | None = None,
+                           idx_arrays=None, coeff_arrays=None,
+                           dtype=None) -> jnp.ndarray:
+    """2-D (member x slab) mesh gather: the hierarchization itself is
+    sharded.  Consumes per-bucket NODAL compact stacks
+    (``repro.core.executor.bucket_nodal_stacks``, one ``(G_b, P_b)``
+    array per bucket) and runs, per device = compute group
+    ``m * n_slabs + s`` (member-major mesh flattening):
+
+    1. batched hierarchization of ONLY its contiguous member shard
+       (``hierarchize_batched_data`` — the per-member predecessor data
+       rides along as G-sharded arrays), coefficients applied at the
+       source;
+    2. the surplus all-to-all: gather the per-destination-slab payloads
+       through ``SlabBucket.ship_src``, one tiled ``all_to_all`` over
+       the slab axis + one tiled ``all_gather`` over the member axis
+       lands every group's payload on the slab owner in global group
+       order;
+    3. the slab owner's SINGLE ordered scatter-add of all payloads
+       through ``SlabBucket.ship_idx`` — the same per-slot left fold as
+       the dense gather, so the result is BIT-identical (partial-sum
+       combining across groups would reassociate; see the module notes).
+
+    The per-bucket pipeline is overlap-scheduled: bucket ``b+1``'s
+    transform + collectives are issued before bucket ``b``'s scatter in
+    program order.  Per-device ingest flops and stack bytes are
+    ``1 / n_groups`` of the replicated path's
+    (``repro.core.executor.plan_ingest_stats``).
+
+    ``idx_arrays`` overrides the plan's shipping maps with (possibly
+    traced) ``(ship_src, ship_idx)`` pairs and ``coeff_arrays`` the
+    coefficients — the signature-shared-executable hook, as in
+    ``gather_slab_scatter``.  Same ``gather`` semantics as the 1-D
+    gathers.  The fused epilogue cannot apply here (shipping sits
+    between transform and scatter), so this path is unfused by
+    construction.
+    """
+    from repro.kernels.hierarchize import (hierarchize_batched_data,
+                                           member_pred_arrays)
+    splan = sharded_plan
+    nb = len(stacks)
+    _check_slab_gather_args(splan, mesh, axis_name, nb, "nodal-stack")
+    if member_axis not in mesh.shape:
+        raise ValueError(
+            f"member_axis {member_axis!r} is not an axis of the mesh "
+            f"(axes: {tuple(mesh.shape)})")
+    if member_axis == axis_name:
+        raise ValueError(
+            f"member_axis and axis_name must differ, both {axis_name!r}")
+    n_members = int(mesh.shape[member_axis])
+    n_slabs = splan.n_slabs
+    n_groups = n_members * n_slabs
+    if splan.n_groups != n_groups:
+        raise ValueError(
+            f"plan is compute-sharded for {splan.n_groups} group(s) but "
+            f"the (member x slab) mesh has {n_groups}; rebuild with "
+            f"shard_plan(plan, {n_slabs}, n_groups={n_groups})")
+    if dtype is None:
+        dtype = jnp.result_type(*(a.dtype for a in stacks))
+    slab_size = splan.slab_size
+    buckets = splan.plan.buckets
+    if idx_arrays is None:
+        idx_arrays = [(sb.ship_src, sb.ship_idx)
+                      for sb in splan.slab_buckets]
+    srcs = [jnp.asarray(a) for a, _ in idx_arrays]
+    dsts = [jnp.asarray(d) for _, d in idx_arrays]
+    coeffs = [jnp.asarray(c) for c in (
+        coeff_arrays if coeff_arrays is not None
+        else [b.coeffs for b in buckets])]
+    gsizes = [sb.group_size for sb in splan.slab_buckets]
+    shapes = [b.shape for b in buckets]
+    # per-member predecessor data, padded and G-sharded like the stacks;
+    # signature-determined (bucket levels), so baked as trace constants
+    preds = []
+    xs, cs = [], []
+    for b, a, c, gs in zip(buckets, stacks, coeffs, gsizes):
+        g, p = a.shape
+        pad = n_groups * gs - g
+        xs.append(jnp.pad(a, ((0, pad), (0, 0))))
+        cs.append(jnp.pad(c.astype(dtype), (0, pad)))
+        # pad members get all-False masks -> their (zero) rows transform
+        # to zeros; their payload entries are never gathered anyway
+        preds.append(tuple(
+            jnp.asarray(np.pad(arr, ((0, pad), (0, 0))))
+            for arr in member_pred_arrays(b.levels, b.shape)))
+    npred = [len(pr) for pr in preds]
+
+    def local_fn(*args):
+        src = args[:nb]                  # (1, S, L) this group's gathers
+        dst = args[nb:2 * nb]            # (1, n_groups, L) this slab's map
+        x = args[2 * nb:3 * nb]          # (gloc, P) this group's members
+        cl = args[3 * nb:4 * nb]         # (gloc,) their coefficients
+        pred = args[4 * nb:]             # G-sharded predecessor data
+
+        off = np.cumsum([0] + npred)
+
+        def ship(i):
+            gloc = x[i].shape[0]
+            xg = x[i].reshape((gloc,) + shapes[i])
+            alpha = hierarchize_batched_data(
+                xg, pred[off[i]:off[i + 1]], interpret=interpret)
+            w = cl[i][:, None] * alpha.reshape(gloc, -1).astype(dtype)
+            flat = jnp.concatenate([w.reshape(-1),
+                                    jnp.zeros((1,), dtype)])
+            payload = flat[src[i][0]]                       # (S, L)
+            payload = jax.lax.all_to_all(payload, axis_name, 0, 0,
+                                         tiled=True)
+            return jax.lax.all_gather(payload, member_axis, axis=0,
+                                      tiled=True)           # (n_groups, L)
+
+        buf = jnp.zeros(slab_size + 1, dtype)               # +1: dump slot
+        pending = ship(0)
+        for i in range(nb):
+            # overlap: issue bucket i+1's transform + collectives before
+            # bucket i's scatter-add
+            nxt = ship(i + 1) if i + 1 < nb else None
+            buf = buf.at[dst[i][0].reshape(-1)].add(pending.reshape(-1))
+            pending = nxt
+        buf = buf[:slab_size]
+        if gather:
+            return jax.lax.all_gather(buf, axis_name, tiled=True)
+        return buf[None]
+
+    both = (member_axis, axis_name)      # member-major group flattening
+    in_specs = tuple([P(both, None, None)] * nb       # ship_src by group
+                     + [P(axis_name, None, None)] * nb  # ship_idx by slab
+                     + [P(both, None)] * nb           # stacks by member rows
+                     + [P(both)] * nb                 # coefficients
+                     + [P(both, None)] * sum(npred))  # predecessor data
+    out_specs = P(None) if gather else P(axis_name, None)
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    out = fn(*srcs, *dsts, *xs, *cs, *(a for pr in preds for a in pr))
+    return _finish_slab_gather(out, splan, mesh, axis_name, gather)
+
+
 def ct_transform_sharded(nodal_grids, scheme: SchemeLike, mesh: Mesh,
                          axis_name: str, *,
                          full_levels: Sequence[int] | None = None,
                          plan=None, sharded_plan=None, gather: bool = True,
                          fused: bool | None = None,
                          interpret: bool | None = None,
-                         spec=None) -> jnp.ndarray:
+                         spec=None, member_axis: str | None = None
+                         ) -> jnp.ndarray:
     """Memory-scaling distributed gather: bucket-batched hierarchization,
     then the slab-sharded scatter-add — the multi-device ``ct_transform``
     whose per-device embedded memory is ``fine_size / n_groups``, not
@@ -333,6 +515,12 @@ def ct_transform_sharded(nodal_grids, scheme: SchemeLike, mesh: Mesh,
     kwargs and the old ``sharded_plan=`` spelling of ``plan=`` remain as
     deprecation shims.
 
+    ``member_axis`` (or ``spec.member_axis``) names the SECOND axis of a
+    2-D (member x slab) mesh: the ingest then also compute-shards the
+    hierarchization over ``members * slabs`` groups and routes through
+    ``gather_slab_scatter_2d`` (bit-identical; unfused by construction —
+    see the module notes).
+
     ``fused=None`` picks the fused scatter-add epilogue automatically
     when EVERY bucket runs the Pallas path and the per-device slab buffer
     fits the epilogue's VMEM budget (``repro.core.executor.
@@ -340,7 +528,8 @@ def ct_transform_sharded(nodal_grids, scheme: SchemeLike, mesh: Mesh,
     replicated and the axis-0 transform + weighted scatter run fused on
     each device.  Fused and unfused sharded gathers are bit-identical.
     """
-    from repro.core.executor import (build_plan, bucket_surpluses,
+    from repro.core.executor import (build_plan, bucket_nodal_stacks,
+                                     bucket_surpluses,
                                      bucket_tail_surpluses, plan_fused_ok,
                                      resolve_spec, shard_plan,
                                      warn_legacy_kwargs)
@@ -353,16 +542,32 @@ def ct_transform_sharded(nodal_grids, scheme: SchemeLike, mesh: Mesh,
     spec = resolve_spec("ct_transform_sharded", spec,
                         fused=fused, interpret=interpret)
     fused, interpret = spec.fused, spec.interpret
+    if member_axis is None:
+        member_axis = spec.member_axis
+    n_groups = 1
+    if member_axis is not None:
+        n_groups = (int(mesh.shape[member_axis])
+                    * int(mesh.shape[axis_name]))
     sharded_plan = plan
     if sharded_plan is None:
         sharded_plan = shard_plan(build_plan(scheme, full_levels,
                                              merge=spec.merge),
-                                  mesh.shape[axis_name])
+                                  mesh.shape[axis_name],
+                                  n_groups=n_groups)
     elif full_levels is not None and sharded_plan.full_levels != \
             tuple(int(l) for l in full_levels):
         raise ValueError(
             f"sharded_plan embeds into {sharded_plan.full_levels}, caller "
             f"asked for {tuple(int(l) for l in full_levels)}")
+    if member_axis is not None and n_groups > 1:
+        # 2-D compute-sharded route; the fused epilogue cannot apply here
+        # (shipping sits between the axis-0 transform and the scatter).
+        # A degenerate 1x1 mesh has nothing to compute-shard and falls
+        # through to the classic slab path.
+        stacks = bucket_nodal_stacks(nodal_grids, sharded_plan.plan)
+        return gather_slab_scatter_2d(stacks, sharded_plan, mesh,
+                                      member_axis, axis_name,
+                                      gather=gather, interpret=interpret)
     if fused is None:
         dtypes = [jnp.asarray(nodal_grids[ell]).dtype
                   for b in sharded_plan.buckets for ell in b.ells

@@ -191,6 +191,7 @@ from repro.kernels.hierarchize import (batched_method, hierarchize_batched,
                                        interpret_default)
 
 __all__ = ["ExecSpec", "CTEngine", "CTFuture", "EngineSaturated",
+           "IngestBuffersDonated",
            "reset_deprecation_warnings", "clear_compile_cache"]
 
 
@@ -201,6 +202,16 @@ def reset_deprecation_warnings() -> None:
 
 class EngineSaturated(RuntimeError):
     """The engine's bounded request queue is full (admission control)."""
+
+
+class IngestBuffersDonated(RuntimeError):
+    """An ingest under ``ExecSpec(donate=True)`` failed (or lost a rebind
+    race) AFTER its input buffers were donated to the executable: the
+    device buffers are deleted, so the ingest can neither be retried
+    in-place nor resubmitted elsewhere.  The owning future resolves with
+    this error instead of redispatching dead buffers — resubmit from
+    host copies (``np.asarray`` snapshots, as ``CTCluster`` takes at
+    admission) to recover."""
 
 
 @dataclass(frozen=True)
@@ -240,6 +251,14 @@ class ExecSpec:
     #: always safe); backends that cannot use a donation silently keep
     #: the copying behavior (jax warns once at compile time).
     donate: bool = False
+    #: SECOND mesh axis of the 2-D (member x slab) ingest: when set (and
+    #: the mesh carries it), the hierarchization itself is compute-
+    #: sharded over ``members * slabs`` groups and ingest routes through
+    #: ``repro.core.distributed.gather_slab_scatter_2d`` (bit-identical;
+    #: unfused by construction).  ``None`` = classic slab-only sharding
+    #: with replicated compute.  Inert without a mesh (so
+    #: ``dataclasses.replace(spec, mesh=None)`` de-meshings stay valid).
+    member_axis: Optional[str] = None
 
     def __post_init__(self):
         if self.dtype is not None:
@@ -257,6 +276,15 @@ class ExecSpec:
                     f"n_slabs={self.n_slabs} conflicts with mesh axis "
                     f"{self.axis_name!r} of {extent} device(s); set ONE of "
                     f"them (precedence rule 1: conflicts raise)")
+            if self.member_axis is not None:
+                if self.member_axis == self.axis_name:
+                    raise ValueError(
+                        f"member_axis and axis_name must differ, both "
+                        f"{self.axis_name!r}")
+                if self.member_axis not in self.mesh.shape:
+                    raise ValueError(
+                        f"member_axis {self.member_axis!r} is not an axis "
+                        f"of the mesh (axes: {tuple(self.mesh.shape)})")
 
     @property
     def slabs(self) -> int:
@@ -266,6 +294,24 @@ class ExecSpec:
             return self.n_slabs
         if self.mesh is not None:
             return int(self.mesh.shape[self.axis_name])
+        return 1
+
+    @property
+    def members(self) -> int:
+        """Member-axis extent of the 2-D mesh (1 when not member-meshed)."""
+        if self.member_axis is not None and self.mesh is not None \
+                and self.member_axis in self.mesh.shape:
+            return int(self.mesh.shape[self.member_axis])
+        return 1
+
+    @property
+    def groups(self) -> int:
+        """Compute-shard group count of the 2-D ingest:
+        ``members * slabs`` when a member axis is meshed, else 1
+        (hierarchization replicated)."""
+        if self.member_axis is not None and self.mesh is not None \
+                and self.member_axis in self.mesh.shape:
+            return self.members * self.slabs
         return 1
 
     def resolve_interpret(self) -> bool:
@@ -303,11 +349,12 @@ def plan_signature(plan, spec: ExecSpec) -> Tuple:
     sharded = isinstance(plan, ShardedPlan)
     base = plan.plan if sharded else plan
     buckets = tuple((b.levels, b.perms) for b in base.buckets)
-    shard = (plan.n_slabs,) if sharded else None
+    shard = (plan.n_slabs, plan.n_groups) if sharded else None
     return (base.full_levels, buckets, shard,
             spec.fused, spec.interpret, spec.dtype, spec.donate,
             spec.mesh if sharded else None,
-            spec.axis_name if sharded else None)
+            spec.axis_name if sharded else None,
+            spec.member_axis if sharded else None)
 
 
 #: Process-global executable cache: signature -> jitted ingest fn.  Shared
@@ -385,6 +432,25 @@ def _build_ingest_executable(plan, spec: ExecSpec) -> Callable:
             "to execute; n_slabs alone only shapes the plan")
     mesh, axis_name = spec.mesh, spec.axis_name
     splan = plan
+
+    if spec.member_axis is not None and splan.n_groups > 1:
+        member_axis = spec.member_axis
+
+        def ingest_2d(parts, idxs, coeffs):
+            # 2-D (member x slab) compute-sharded ingest: assembly only
+            # here; hierarchization runs per member group INSIDE the
+            # gather's shard_map.  ``idxs`` carries per-bucket
+            # (ship_src, ship_idx) pairs (see _tenant_arrays).
+            from repro.core.distributed import gather_slab_scatter_2d
+            dtype = _acc_dtype(parts)
+            stacks = [x.reshape(x.shape[0], -1) for x in _assembled(parts)]
+            cs = [c.astype(dtype) for c in coeffs]
+            return gather_slab_scatter_2d(
+                stacks, splan, mesh, member_axis, axis_name,
+                interpret=interpret, idx_arrays=idxs, coeff_arrays=cs,
+                dtype=dtype)
+
+        return jax.jit(ingest_2d, donate_argnums=donate)
 
     def ingest_sharded(parts, idxs, coeffs):
         from repro.core.distributed import (gather_slab_scatter,
@@ -583,7 +649,13 @@ def _tenant_arrays(plan) -> Tuple[Tuple[jnp.ndarray, ...],
     """Upload a plan's index maps + coefficients once per (re)bind — the
     runtime arguments that distinguish tenants sharing one executable."""
     if isinstance(plan, ShardedPlan):
-        idxs = tuple(jnp.asarray(sb.index) for sb in plan.slab_buckets)
+        if plan.n_groups > 1:
+            # 2-D compute-sharded plan: the executable consumes the
+            # shipping maps, not the per-slab scatter maps
+            idxs = tuple((jnp.asarray(sb.ship_src), jnp.asarray(sb.ship_idx))
+                         for sb in plan.slab_buckets)
+        else:
+            idxs = tuple(jnp.asarray(sb.index) for sb in plan.slab_buckets)
         buckets = plan.plan.buckets
     else:
         idxs = tuple(jnp.asarray(b.index) for b in plan.buckets)
@@ -825,6 +897,20 @@ class CTEngine:
         return _Tenant(name=name, scheme=scheme, spec=spec, plan=plan,
                        signature=signature, executable=executable,
                        idxs=idxs, coeffs=coeffs)
+
+    def _check_not_donated(self, name: str, nodal_grids) -> None:
+        """Raise the named ``IngestBuffersDonated`` error if any grid in
+        the payload is a jax array whose buffer has already been deleted
+        (i.e. donated to a previous dispatch of this same request)."""
+        dead = [ell for ell, v in nodal_grids.items()
+                if isinstance(v, jax.Array) and v.is_deleted()]
+        if dead:
+            raise IngestBuffersDonated(
+                f"{self._host()}: ingest for tenant {name!r} cannot be "
+                f"redispatched: {len(dead)} input grid(s) (first: "
+                f"{dead[0]}) were donated to a previous attempt and "
+                f"their device buffers are deleted — resubmit from host "
+                f"copies")
 
     def _dispatch_ingest(self, tenant: _Tenant, nodal_grids) -> jnp.ndarray:
         base = tenant.base_plan
@@ -1206,11 +1292,24 @@ class CTEngine:
             if tenant is None:
                 raise KeyError(f"tenant {name!r} was unregistered before "
                                f"its queued ingest ran")
+            if tenant.spec.donate:
+                # donated buffers are deleted once the executable has
+                # consumed them — redispatching them (rebind-race retry,
+                # or a failover resubmission) would hand XLA dead
+                # buffers.  Fail the owning future with the NAMED error
+                # instead.
+                self._check_not_donated(name, nodal_grids)
             surplus = self._dispatch_ingest(tenant, nodal_grids)
             # device-side failures surface HERE, on the owning request —
             # never from a sibling's flush
             jax.block_until_ready(surplus)
             if check_finite and not bool(_FINITE_CHECK(surplus)):
+                if tenant.spec.donate:
+                    raise IngestBuffersDonated(
+                        f"ingest for tenant {name!r} produced non-finite "
+                        f"surplus values and its input buffers were "
+                        f"donated — cannot retry; resubmit from host "
+                        f"copies")
                 raise FloatingPointError(
                     f"ingest for tenant {name!r} produced non-finite "
                     f"surplus values")
@@ -1411,7 +1510,8 @@ class CTEngine:
         self._commit(tenant, scheme, plan, nodal_grids)
 
     def rebind(self, name: str, *, mesh: Any = _UNSET,
-               axis_name: Any = _UNSET, n_slabs: Any = _UNSET) -> str:
+               axis_name: Any = _UNSET, n_slabs: Any = _UNSET,
+               member_axis: Any = _UNSET) -> str:
         """Elastic-rebalance fast lane: move tenant ``name`` onto a new
         mesh / slab layout WITHOUT recomputing its surplus.  The base
         plan is re-sharded incrementally (``shard_plan(..., old=)``
@@ -1428,15 +1528,18 @@ class CTEngine:
             changes["axis_name"] = axis_name
         if n_slabs is not _UNSET:
             changes["n_slabs"] = n_slabs
+        if member_axis is not _UNSET:
+            changes["member_axis"] = member_axis
         new_spec = dataclasses.replace(tenant.spec, **changes) \
             if changes else tenant.spec
         if new_spec == tenant.spec:
             return "kept"
         base = tenant.base_plan
         was_sharded = isinstance(tenant.plan, ShardedPlan)
-        if new_spec.slabs > 1:
+        if new_spec.slabs > 1 or new_spec.groups > 1:
             plan = shard_plan(base, new_spec.slabs,
-                              old=tenant.plan if was_sharded else None)
+                              old=tenant.plan if was_sharded else None,
+                              n_groups=new_spec.groups)
             outcome = "resharded" if was_sharded else "sharded"
         else:
             plan = base

@@ -107,8 +107,8 @@ __all__ = ["ExecutorPlan", "Bucket", "ShardedPlan", "SlabBucket",
            "update_plan_coefficients", "ct_transform", "ct_scatter",
            "ct_embedded", "ct_transform_with_plan", "ct_scatter_with_plan",
            "ct_embedded_with_plan", "bucket_surpluses",
-           "bucket_tail_surpluses", "plan_fused_ok", "plan_launch_stats",
-           "clear_plan_cache"]
+           "bucket_tail_surpluses", "bucket_nodal_stacks", "plan_fused_ok",
+           "plan_launch_stats", "plan_ingest_stats", "clear_plan_cache"]
 
 
 # ---------------------------------------------------------------------------
@@ -250,10 +250,34 @@ class SlabBucket:
       rows fall in slab ``s`` (embedding is monotone per axis, so the set
       is contiguous).  This is the metadata a multi-controller deployment
       uses to ship only the relevant surplus rows to each group.
+
+    When the plan is additionally COMPUTE-sharded over ``n_groups``
+    member groups (the 2-D (member x slab) mesh ingest,
+    ``repro.core.distributed.gather_slab_scatter_2d``), the bucket also
+    carries the row-range-derived surplus SHIPPING maps — the flat
+    realization of what ``row_ranges`` describes per member:
+
+    * ``group_size`` — members per group (``ceil(G / n_groups)``; the
+      stack is zero-padded at the tail to ``n_groups * group_size``
+      rows, pad members carrying coefficient 0).
+    * ``ship_src[i, s]`` — int32 gather indices into group i's LOCAL
+      flattened weighted-surplus buffer (``group_size * P`` values plus
+      one trailing zero slot): the payload group i ships to slab s,
+      ordered by (member, position).  Pad entries read the zero slot.
+    * ``ship_idx[s, i]`` — int32 slab-LOCAL scatter targets of exactly
+      those values on the receiving side; pad entries point at the slab
+      dump slot ``slab_size``.  Concatenating the payloads over i in
+      group order replays the base map's global (g, p) scatter order
+      restricted to slab s, so the slab owner's single ordered
+      scatter-add over ALL groups' payloads reproduces the dense
+      gather's per-slot left fold bit-for-bit.
     """
 
     index: np.ndarray        # (S, G, P) int32 slab-local indices
     row_ranges: np.ndarray   # (S, G, 2) int32 node ranges [start, stop)
+    ship_src: Optional[np.ndarray] = None   # (n_groups, S, L) int32
+    ship_idx: Optional[np.ndarray] = None   # (S, n_groups, L) int32
+    group_size: int = 0                     # members per group (padded)
 
 
 @dataclass(frozen=True)
@@ -273,6 +297,11 @@ class ShardedPlan:
     n_slabs: int
     slab_rows: int                        # ceil(fine_shape[0] / n_slabs)
     slab_buckets: Tuple[SlabBucket, ...]
+    #: compute-shard group count of the 2-D (member x slab) mesh ingest:
+    #: 1 = hierarchization replicated (the classic slab-only sharding);
+    #: > 1 = each of ``n_groups`` device groups hierarchizes only its
+    #: member shard and ships surpluses via the per-bucket ship maps.
+    n_groups: int = 1
 
     @property
     def row_size(self) -> int:
@@ -312,9 +341,43 @@ class ShardedPlan:
         return self.plan.num_grids
 
 
+def _group_ship_maps(index: np.ndarray, n_groups: int,
+                     slab_size: int) -> tuple:
+    """Surplus shipping maps of one bucket for the 2-D mesh ingest.
+
+    Group i owns the contiguous member rows ``[i*gs, (i+1)*gs)`` of the
+    bucket's compact ``(G, P)`` stack (``gs = ceil(G / n_groups)``).
+    From the per-slab local maps ``index`` (S, G, P), build for every
+    (destination slab s, source group i) the flat payload — group i's
+    surplus positions landing in slab s, ordered by (member, position) —
+    as a gather map into the group's local flattened stack plus the
+    matching slab-local scatter targets, both padded to the bucket-wide
+    max payload length (see ``SlabBucket`` for the full contract)."""
+    n_slabs, g_total, p = index.shape
+    gs = -(-g_total // n_groups)
+    srcs, dsts = {}, {}
+    pay_len = 1
+    for s in range(n_slabs):
+        for i in range(n_groups):
+            loc = index[s, i * gs:(i + 1) * gs]        # (<=gs, P)
+            gg, pp = np.nonzero(loc != slab_size)      # (member, pos) order
+            srcs[s, i] = gg.astype(np.int64) * p + pp
+            dsts[s, i] = loc[gg, pp]
+            pay_len = max(pay_len, gg.size)
+    zero_slot = gs * p
+    ship_src = np.full((n_groups, n_slabs, pay_len), zero_slot, np.int32)
+    ship_idx = np.full((n_slabs, n_groups, pay_len), slab_size, np.int32)
+    for (s, i), src in srcs.items():
+        ship_src[i, s, :src.size] = src
+        ship_idx[s, i, :src.size] = dsts[s, i]
+    return ship_src, ship_idx, gs
+
+
 def _shard_bucket(bucket: Bucket, full_levels: LevelVector, n_slabs: int,
-                  slab_rows: int, row_size: int) -> SlabBucket:
-    """Split one bucket's index map into per-slab local maps + row ranges."""
+                  slab_rows: int, row_size: int,
+                  n_groups: int = 1) -> SlabBucket:
+    """Split one bucket's index map into per-slab local maps + row ranges
+    (+ the member-group shipping maps when compute-sharded)."""
     n0 = (1 << full_levels[0]) - 1
     slab_size = slab_rows * row_size
     g = bucket.index.astype(np.int64)             # (G, P); dump == fine_size
@@ -333,46 +396,72 @@ def _shard_bucket(bucket: Bucket, full_levels: LevelVector, n_slabs: int,
             hit = np.nonzero((rows >= lo) & (rows < hi))[0]
             if hit.size:
                 ranges[s, gi] = (hit[0], hit[-1] + 1)
-    return SlabBucket(index=index, row_ranges=ranges)
+    if n_groups == 1:
+        return SlabBucket(index=index, row_ranges=ranges)
+    ship_src, ship_idx, gs = _group_ship_maps(index, n_groups, slab_size)
+    return SlabBucket(index=index, row_ranges=ranges, ship_src=ship_src,
+                      ship_idx=ship_idx, group_size=gs)
 
 
 def shard_plan(plan: ExecutorPlan, n_slabs: Optional[int] = None,
                old: Optional["ShardedPlan"] = None, *,
-               spec=None) -> ShardedPlan:
-    """Slab-shard a plan for ``n_slabs`` device groups.
+               spec=None, n_groups: Optional[int] = None) -> ShardedPlan:
+    """Slab-shard a plan for ``n_slabs`` device groups (and optionally
+    compute-shard it over ``n_groups`` member groups for the 2-D
+    (member x slab) mesh ingest).
 
     ``old`` (a prior sharding, e.g. before an incremental rebuild) lets
     buckets whose base ``index`` array survived BY IDENTITY reuse their
     slab split unchanged — the sharded analogue of ``extend_plan``'s
     bucket reuse.  ``n_slabs`` may instead come from a
     ``repro.core.engine.ExecSpec`` (``spec.slabs``: an explicit
-    ``n_slabs`` field, else the mesh axis extent).
+    ``n_slabs`` field, else the mesh axis extent; ``spec.groups``
+    supplies ``n_groups`` for a member-meshed spec).
     """
     if spec is not None:
         ensure_spec("shard_plan", spec)
         if n_slabs is not None:
             raise ValueError("shard_plan: pass n_slabs or spec, not both")
         n_slabs = spec.slabs
+        if n_groups is None:
+            n_groups = spec.groups
     if n_slabs is None:
         raise ValueError("shard_plan: n_slabs (or a sharded spec) required")
     if isinstance(plan, ShardedPlan):
         raise TypeError("shard_plan expects the unsharded base plan")
     if n_slabs < 1:
         raise ValueError(f"n_slabs must be >= 1, got {n_slabs}")
+    n_groups = 1 if n_groups is None else int(n_groups)
+    if n_groups < 1:
+        raise ValueError(f"n_groups must be >= 1, got {n_groups}")
     n0 = plan.fine_shape[0]
     row_size = int(np.prod(plan.fine_shape[1:], dtype=np.int64))
     slab_rows = -(-n0 // n_slabs)
     reuse = {}
-    if old is not None and old.n_slabs == n_slabs \
-            and old.plan.full_levels == plan.full_levels:
-        reuse = {id(b.index): sb
-                 for b, sb in zip(old.plan.buckets, old.slab_buckets)}
+    if old is not None:
+        # Identity reuse is only sound when the SLAB GEOMETRY (and the
+        # member-group count) is unchanged: a surviving base ``index``
+        # array proves the bucket's EMBED map did not change, but the
+        # per-slab local maps additionally bake in slab_rows/row_size
+        # (and ship maps bake in n_groups).  A refinement that grows
+        # fine_shape[0] past ``n_slabs * slab_rows`` — any full_levels
+        # change — moves the slab boundaries, so reusing the old split
+        # would scatter through STALE slab offsets; fall back to a full
+        # re-shard instead.
+        same_geometry = (old.n_slabs == n_slabs
+                         and old.n_groups == n_groups
+                         and old.slab_rows == slab_rows
+                         and old.row_size == row_size
+                         and old.plan.full_levels == plan.full_levels)
+        if same_geometry:
+            reuse = {id(b.index): sb
+                     for b, sb in zip(old.plan.buckets, old.slab_buckets)}
     slab_buckets = tuple(
         reuse.get(id(b.index)) or _shard_bucket(b, plan.full_levels, n_slabs,
-                                                slab_rows, row_size)
+                                                slab_rows, row_size, n_groups)
         for b in plan.buckets)
     return ShardedPlan(plan=plan, n_slabs=n_slabs, slab_rows=slab_rows,
-                       slab_buckets=slab_buckets)
+                       slab_buckets=slab_buckets, n_groups=n_groups)
 
 
 @dataclass(frozen=True)
@@ -586,8 +675,8 @@ def build_plan(scheme: SchemeLike,
         full_levels = fine_levels(scheme)
     plan = _build_plan_cached(scheme, tuple(int(l) for l in full_levels),
                               merge)
-    if spec is not None and spec.slabs > 1:
-        plan = shard_plan(plan, spec.slabs)
+    if spec is not None and (spec.slabs > 1 or spec.groups > 1):
+        plan = shard_plan(plan, spec.slabs, n_groups=spec.groups)
     return plan
 
 
@@ -723,7 +812,7 @@ def extend_plan(plan: ExecutorPlan, scheme: SchemeLike,
             plan = dataclasses.replace(plan, merge=spec.merge)
     if isinstance(plan, ShardedPlan):
         return shard_plan(extend_plan(plan.plan, scheme, full_levels),
-                          plan.n_slabs, old=plan)
+                          plan.n_slabs, old=plan, n_groups=plan.n_groups)
     if full_levels is None:
         full_levels = fine_levels(scheme)
     full_levels = tuple(int(l) for l in full_levels)
@@ -778,7 +867,7 @@ def update_plan_coefficients(plan: ExecutorPlan,
         # every base index map is kept, so the slab splits are reused
         # verbatim (shared by identity via shard_plan's id() lookup)
         return shard_plan(update_plan_coefficients(plan.plan, scheme),
-                          plan.n_slabs, old=plan)
+                          plan.n_slabs, old=plan, n_groups=plan.n_groups)
     coeff = {ell: float(c) for ell, c in scheme.grids}
     held = {ell for b in plan.buckets for ell in b.ells}
     missing = sorted(set(coeff) - held)
@@ -914,6 +1003,23 @@ def bucket_tail_surpluses(nodal_grids: Mapping[LevelVector, jnp.ndarray],
     return tuple(_tail_transform(_assemble_bucket(nodal_grids, b), b.levels,
                                  interpret)
                  for b in plan.buckets)
+
+
+def bucket_nodal_stacks(nodal_grids: Mapping[LevelVector, jnp.ndarray],
+                        plan: ExecutorPlan) -> Tuple[jnp.ndarray, ...]:
+    """Per-bucket assembled NODAL stacks ``[(G_b, P_b), ...]`` — assembly
+    only, NO hierarchization.  This is what the 2-D (member x slab) mesh
+    ingest feeds ``repro.core.distributed.gather_slab_scatter_2d``: the
+    transform runs per member group INSIDE shard_map, so only the
+    untransformed compact rows cross this boundary and no device ever
+    hierarchizes (or even holds) more than its ``G_b / n_groups`` member
+    shard of each stack."""
+    if isinstance(plan, ShardedPlan):
+        plan = plan.plan
+    _check_nodal_grids(nodal_grids, plan)
+    return tuple(
+        _assemble_bucket(nodal_grids, b).reshape(len(b.ells), -1)
+        for b in plan.buckets)
 
 
 #: Fine-buffer byte budget for the fused epilogue's VMEM-resident output
@@ -1194,3 +1300,66 @@ def plan_launch_stats(plan: ExecutorPlan, *, dtype_bytes: int = 8,
                          + stats["einsum_dispatches"]
                          + stats["scatter_dispatches"])
     return stats
+
+
+def plan_ingest_stats(plan, *, dtype_bytes: int = 8) -> Dict[str, int]:
+    """PER-DEVICE ingest compute and memory of the plan's execution mode —
+    the numbers that must SHRINK with device count for the distributed
+    ingest to scale (``benchmarks/executor_sharded.py`` asserts this):
+
+    * ``ingest_flops`` — hierarchization flops one device performs.  On
+      an unsharded or slab-only plan every device transforms the FULL
+      compact stack (replicated compute); on a 2-D compute-sharded plan
+      (``n_groups > 1``) each device transforms only its
+      ``ceil(G_b / n_groups)`` member shard, plus its slab column's
+      scatter-adds — 1 flop per REAL payload entry the busiest slab
+      receives (pad entries add zeros into the dump slot; they are
+      shipped, so they count toward ``ship_bytes``, but they are not
+      useful arithmetic, so they do not count here).
+    * ``ingest_bytes`` — the per-device ingest working set: the member
+      shard of every compact stack (FULL stacks when replicated), the
+      shipping payload sent + received + its scatter index map
+      (2-D only), and the device's scatter target (slab buffer, or the
+      full fine buffer when unsharded).
+
+    Sizes are plan-derived (static), priced at ``dtype_bytes`` per
+    surplus element and 4 bytes per int32 index entry."""
+    splan = plan if isinstance(plan, ShardedPlan) else None
+    base = splan.plan if splan is not None else plan
+    n_groups = splan.n_groups if splan is not None else 1
+    from repro.kernels.hierarchize import hier_flops
+    flops = 0
+    stack_bytes = 0
+    ship_bytes = 0
+    scatter_elems = 0
+    for i, b in enumerate(base.buckets):
+        g = len(b.ells)
+        p = int(np.prod(b.shape, dtype=np.int64))
+        gloc = -(-g // n_groups)
+        flops += hier_flops(b.shape, gloc)
+        stack_bytes += gloc * p * dtype_bytes
+        if n_groups > 1:
+            sb = splan.slab_buckets[i]
+            pay = int(sb.ship_src.shape[-1])
+            # sent (S rows) + received (n_groups rows) payload values
+            # plus the receiver's int32 scatter map
+            ship_bytes += (splan.n_slabs + n_groups) * pay * dtype_bytes
+            ship_bytes += n_groups * pay * 4
+            # real scatter-adds of the busiest slab: pads target the
+            # dump slot (ship_idx == slab_size) and contribute zeros
+            real = np.asarray(sb.ship_idx) != splan.slab_size
+            scatter_elems += int(real.sum(axis=(1, 2)).max())
+        else:
+            scatter_elems += g * p
+    if splan is not None:
+        out_elems = splan.slab_size + 1
+    else:
+        out_elems = base.fine_size + 1
+    return {"n_groups": n_groups,
+            "n_slabs": splan.n_slabs if splan is not None else 1,
+            "ingest_flops": flops + scatter_elems,
+            "ingest_bytes": (stack_bytes + ship_bytes
+                             + out_elems * dtype_bytes),
+            "stack_bytes": stack_bytes,
+            "ship_bytes": ship_bytes,
+            "out_bytes": out_elems * dtype_bytes}

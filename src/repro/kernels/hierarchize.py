@@ -61,11 +61,14 @@ __all__ = [
     "hier_axis0_scatter_batched_pallas",
     "hierarchize_batched",
     "hierarchize_batched_jnp",
+    "hierarchize_batched_data",
+    "member_pred_arrays",
     "dehierarchize_batched",
     "count_launches",
     "pad_blowup",
     "tile_volume",
     "batched_method",
+    "hier_flops",
 ]
 
 _LANE = 128
@@ -431,6 +434,46 @@ def _pred_stack(member_levels: Sequence[int], npad: int) -> tuple:
     return idx, mask
 
 
+def _pad_pred4(pred, npad: int) -> tuple:
+    """Extend one axis' ``(lp, rp, lm, rm)`` arrays from the true axis
+    extent to the kernel's padded extent.  Pad positions carry a False
+    mask and a self index — exactly what ``_pred_index_1d`` emits for
+    them, so a kernel fed padded-on-the-fly data computes bitwise the
+    same blocks as one fed ``_pred_stack(levels, npad)`` directly."""
+    lp, rp, lm, rm = (jnp.asarray(a) for a in pred)
+    g, n = lp.shape
+    if n == npad:
+        return lp, rp, lm, rm
+    extra = jnp.broadcast_to(jnp.arange(n, npad, dtype=lp.dtype),
+                             (g, npad - n))
+    pad_m = lambda m: jnp.pad(m, ((0, 0), (0, npad - n)))
+    return (jnp.concatenate([lp, extra], axis=1),
+            jnp.concatenate([rp, extra], axis=1), pad_m(lm), pad_m(rm))
+
+
+def member_pred_arrays(member_levels: Sequence[Sequence[int]],
+                       shape: Sequence[int]) -> tuple:
+    """Per-member forward-transform data of a bucket stack as ARRAYS.
+
+    Returns a flat tuple of ``4 * d`` numpy arrays — for each grid axis
+    ``k`` in order, ``lp, rp`` int32 and ``lm, rm`` bool of shape
+    ``(G, shape[k])`` (true extents): member g's left/right
+    hierarchical-predecessor gather indices and validity masks along that
+    axis.  This is the same data the batched kernels derive from
+    ``member_levels`` at trace time, exposed as runtime operands so it
+    can be SHARDED along G — ``hierarchize_batched_data`` consumes it
+    inside the 2-D sharded ingest's shard_map, where each device
+    transforms only its member shard and the member set therefore cannot
+    be a trace constant.  Slicing every array (and the stack) along G is
+    bitwise identical to the full-stack ``hierarchize_batched``."""
+    member_levels = [tuple(ml) for ml in member_levels]
+    out = []
+    for k, n in enumerate(shape):
+        idx, mask = _pred_stack([ml[k] for ml in member_levels], n)
+        out += [idx[0], idx[1], mask[0], mask[1]]
+    return tuple(out)
+
+
 def _hier3(x: jnp.ndarray, xl: jnp.ndarray, xr: jnp.ndarray,
            lm: jnp.ndarray, rm: jnp.ndarray) -> jnp.ndarray:
     """THE forward update, shared by every batched path (pallas tail,
@@ -485,12 +528,17 @@ def hier_tail_batched_pallas(x: jnp.ndarray,
                              inverse: bool = False,
                              row_tile: int | None = None,
                              vmem_budget_bytes: int = 4 * 1024 * 1024,
-                             interpret: bool | None = None) -> jnp.ndarray:
+                             interpret: bool | None = None,
+                             pred=None) -> jnp.ndarray:
     """(De)hierarchize grid axes 1..d-1 of a (G, N1, ..., Nd) bucket.
 
     ``member_levels[g]`` is member g's level vector in bucket axis order;
     members below the bucket target level get their own predecessor
-    indices (forward) or padded operator (inverse)."""
+    indices (forward) or padded operator (inverse).  ``pred`` (forward
+    only) supplies the per-member predecessor data as runtime arrays
+    instead — ``4 * (d-1)`` arrays at TRUE tail extents in axis order
+    (the tail slice of ``member_pred_arrays``), possibly traced/sharded;
+    ``member_levels`` is then ignored."""
     if interpret is None:
         interpret = _interpret_default()
     if x.ndim < 3:
@@ -519,8 +567,13 @@ def hier_tail_batched_pallas(x: jnp.ndarray,
     else:
         operands, op_specs = [], []
         for k, p in enumerate(pads[1:]):
-            idx, mask = _pred_stack([ml[1 + k] for ml in member_levels], p)
-            for side in (idx[0], idx[1], mask[0], mask[1]):
+            if pred is not None:
+                sides = _pad_pred4(pred[4 * k:4 * k + 4], p)
+            else:
+                idx, mask = _pred_stack([ml[1 + k] for ml in member_levels],
+                                        p)
+                sides = (idx[0], idx[1], mask[0], mask[1])
+            for side in sides:
                 operands.append(jnp.asarray(side))
                 op_specs.append(pl.BlockSpec((1, p), lambda gi, i: (gi, 0)))
         kernel = _batched_tail_fwd_kernel
@@ -557,11 +610,15 @@ def _batched_axis0_fwd_kernel(lp_ref, rp_ref, lm_ref, rm_ref, x_ref, o_ref):
 
 def hier_axis0_batched_pallas(x: jnp.ndarray, levels0: Sequence[int], *,
                               inverse: bool = False, lane_tile: int = 512,
-                              interpret: bool | None = None) -> jnp.ndarray:
+                              interpret: bool | None = None,
+                              pred=None) -> jnp.ndarray:
     """(De)hierarchize grid axis 0 of a (G, N, B) bucket: predecessor
     gathers (forward) or MXU matmuls (inverse).
 
-    ``levels0[g]`` is member g's level along the transformed axis."""
+    ``levels0[g]`` is member g's level along the transformed axis.
+    ``pred`` (forward only) supplies the ``(lp, rp, lm, rm)`` predecessor
+    arrays at the TRUE extent as runtime (possibly sharded) data instead;
+    ``levels0`` is then ignored."""
     if interpret is None:
         interpret = _interpret_default()
     g, n, b = x.shape
@@ -576,9 +633,12 @@ def hier_axis0_batched_pallas(x: jnp.ndarray, levels0: Sequence[int], *,
         op_specs = [pl.BlockSpec((1, npad, npad), lambda gi, i: (gi, 0, 0))]
         kernel = _batched_matmul_kernel
     else:
-        idx, mask = _pred_stack(levels0, npad)
-        operands = [jnp.asarray(a) for a in (idx[0], idx[1],
-                                             mask[0], mask[1])]
+        if pred is not None:
+            operands = list(_pad_pred4(pred, npad))
+        else:
+            idx, mask = _pred_stack(levels0, npad)
+            operands = [jnp.asarray(a) for a in (idx[0], idx[1],
+                                                 mask[0], mask[1])]
         op_specs = [pl.BlockSpec((1, npad), lambda gi, i: (gi, 0))] * 4
         kernel = _batched_axis0_fwd_kernel
     out = _pallas_call(
@@ -783,6 +843,62 @@ def hierarchize_batched(x: jnp.ndarray,
     flat = hier_axis0_batched_pallas(flat, [ml[0] for ml in member_levels],
                                      inverse=inverse, interpret=interpret)
     return flat.reshape((g,) + shape)
+
+
+def hierarchize_batched_data(x: jnp.ndarray, pred, *,
+                             interpret: bool | None = None,
+                             method: str = "auto") -> jnp.ndarray:
+    """FORWARD ``hierarchize_batched`` with the per-member transform data
+    passed as runtime arrays (``member_pred_arrays``) instead of rebuilt
+    from trace-time member levels — the member-sharded ingest spelling:
+    inside the 2-D sharded gather's shard_map every device transforms
+    only its own member shard, so the member set differs per device and
+    cannot be a trace constant, but the predecessor DATA can be sharded
+    along G like the stack itself.
+
+    BIT-identity contract: with ``pred = member_pred_arrays(levels,
+    shape)`` this equals ``hierarchize_batched(x, levels)`` bitwise —
+    the method rule (``batched_method``) depends only on the bucket
+    shape, both methods get the identical per-axis operand content, and
+    every member's blocks are computed independently of the rest of the
+    batch, so any G-slice of (stack, pred) yields the same per-member
+    bits as the full stack."""
+    if method == "auto":
+        method = batched_method(x.shape[1:])
+    if method == "jnp":
+        d = x.ndim - 1
+        for k in range(d):
+            _count("einsum")
+            lp, rp, lm, rm = pred[4 * k:4 * k + 4]
+            ishape = [1] * (d + 1)
+            ishape[0], ishape[k + 1] = x.shape[0], x.shape[k + 1]
+            xl = jnp.take_along_axis(x, lp.reshape(ishape), axis=k + 1)
+            xr = jnp.take_along_axis(x, rp.reshape(ishape), axis=k + 1)
+            x = _hier3(x, xl, xr, lm.reshape(ishape), rm.reshape(ishape))
+        return x
+    if method != "pallas":
+        raise ValueError(f"unknown method {method!r}")
+    if x.ndim == 2:
+        out = hier_axis0_batched_pallas(x[..., None], None, pred=pred[:4],
+                                        interpret=interpret)
+        return out[..., 0]
+    y = hier_tail_batched_pallas(x, None, pred=pred[4:],
+                                 interpret=interpret)
+    g = y.shape[0]
+    shape = y.shape[1:]
+    flat = y.reshape(g, shape[0], -1)
+    flat = hier_axis0_batched_pallas(flat, None, pred=pred[:4],
+                                     interpret=interpret)
+    return flat.reshape((g,) + shape)
+
+
+def hier_flops(shape: Sequence[int], g: int = 1) -> int:
+    """Forward-hierarchization flop count of a ``(g, *shape)`` bucket
+    stack: the 3-term update does 4 flops per point per axis (two
+    halvings, two subtracts), and every axis sweeps every point once.
+    The 2-D sharded ingest's per-device accounting is priced with this
+    (``repro.core.executor.plan_ingest_stats``)."""
+    return 4 * g * len(shape) * int(np.prod(shape, dtype=np.int64))
 
 
 def dehierarchize_batched(a: jnp.ndarray,

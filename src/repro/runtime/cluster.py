@@ -235,25 +235,46 @@ class ClusterFuture:
         self.retargeted = 0
         self.submitted_at = time.monotonic()
         self.done_at: Optional[float] = None
+        #: per-future leaf lock making retarget-vs-resolve ATOMIC.
+        #: ``done_at``/``retargeted``/``_inner`` are written from the
+        #: monitor thread (failover retarget) and from whichever waiter
+        #: thread polls the inner future first; without this lock a
+        #: future retargeted while resolving could double-resolve or
+        #: stamp ``done_at`` from the WRONG inner.  Lock order is
+        #: strictly ``cluster -> future`` and nothing is called while
+        #: holding it, so it cannot deadlock.
+        self._flock = threading.Lock()
 
-    # -- state transitions (cluster lock held by callers in CTCluster) ----
+    # -- state transitions (cluster lock held by callers in CTCluster; the
+    #    per-future lock serializes them against each other regardless) ----
 
     def _finalize_locked(self, value=None,
                          error: Optional[BaseException] = None) -> None:
-        if self._done:
-            return
-        self._done = True
-        self._value, self._error = value, error
-        # resolution time = when the ENGINE resolved the inner future
-        # (the wrapper may be polled much later); failover-resolved
-        # wrappers (named error, no inner resolution) stamp now
-        inner_t = getattr(self._inner, "done_at", None)
-        self.done_at = inner_t if inner_t is not None else time.monotonic()
+        with self._flock:
+            if self._done:
+                return
+            self._value, self._error = value, error
+            # resolution time = when the ENGINE resolved the inner
+            # future (the wrapper may be polled much later); failover-
+            # resolved wrappers (named error, no inner resolution)
+            # stamp now.  Stamped BEFORE ``_done`` flips so no reader
+            # can observe a done future without its ``done_at``.
+            inner_t = getattr(self._inner, "done_at", None)
+            self.done_at = inner_t if inner_t is not None else \
+                time.monotonic()
+            self._done = True
 
-    def _retarget_locked(self, host_id: str, inner: CTFuture) -> None:
-        self._host_id = host_id
-        self._inner = inner
-        self.retargeted += 1
+    def _retarget_locked(self, host_id: str, inner: CTFuture) -> bool:
+        """Re-point this handle at a new owner; a no-op returning False
+        when the future already resolved (retarget-after-done must not
+        clobber ``_inner``/``done_at`` or count as a retarget)."""
+        with self._flock:
+            if self._done:
+                return False
+            self._host_id = host_id
+            self._inner = inner
+            self.retargeted += 1
+            return True
 
     # -- waiting (no cluster lock held while blocked) ---------------------
 
@@ -276,7 +297,9 @@ class ClusterFuture:
             if deadline is not None and time.monotonic() >= deadline:
                 return False
             self._cluster._progress(self)
-            self._inner.wait(0.02)
+            with self._flock:      # snapshot: retarget may swap _inner
+                inner = self._inner
+            inner.wait(0.02)
 
     def result(self, timeout: Optional[float] = None):
         if not self.wait(timeout):
@@ -401,12 +424,16 @@ class CTCluster:
     @classmethod
     def over_device_slices(cls, n_hosts: int = 4, *,
                            devices=None, axis_name: str = "slab",
+                           members: int = 1, member_axis: str = "member",
                            **kwargs) -> "CTCluster":
         """Build a cluster whose hosts mesh DISJOINT slices of the
         local device set (the ``tests/conftest.py`` 8-fake-device
         trick): ``n_hosts`` hosts x ``len(devices)//n_hosts`` devices
         each, every host running its tenants slab-sharded over its own
-        slice."""
+        slice.  With ``members > 1`` each host's slice is folded into a
+        2-D (member x slab) mesh instead, so tenants run the fully
+        distributed 2-D ingest (hierarchization itself sharded) on
+        their host."""
         import jax
 
         from repro.compat import make_mesh
@@ -415,12 +442,22 @@ class CTCluster:
         if per < 1:
             raise ValueError(
                 f"{len(devices)} devices cannot back {n_hosts} hosts")
+        if members < 1 or per % members:
+            raise ValueError(
+                f"members={members} must divide the {per} devices of "
+                f"each host slice")
         specs = []
         for i in range(n_hosts):
             sl = np.array(devices[i * per:(i + 1) * per])
-            specs.append(ExecSpec(
-                mesh=make_mesh((len(sl),), (axis_name,), devices=sl),
-                axis_name=axis_name))
+            if members > 1:
+                mesh = make_mesh((members, per // members),
+                                 (member_axis, axis_name), devices=sl)
+                specs.append(ExecSpec(mesh=mesh, axis_name=axis_name,
+                                      member_axis=member_axis))
+            else:
+                specs.append(ExecSpec(
+                    mesh=make_mesh((len(sl),), (axis_name,), devices=sl),
+                    axis_name=axis_name))
         return cls(host_specs=specs, **kwargs)
 
     # -- construction helpers ---------------------------------------------
@@ -447,8 +484,10 @@ class CTCluster:
         if host.spec.mesh is not None:
             return dataclasses.replace(tspec, mesh=host.spec.mesh,
                                        axis_name=host.spec.axis_name,
+                                       member_axis=host.spec.member_axis,
                                        n_slabs=None)
-        return dataclasses.replace(tspec, mesh=None, n_slabs=None)
+        return dataclasses.replace(tspec, mesh=None, member_axis=None,
+                                   n_slabs=None)
 
     # -- introspection ------------------------------------------------------
 
@@ -935,15 +974,15 @@ class CTCluster:
                         fut._finalize_locked(error=e)
                         self._inflight.discard(fut)
                         continue
-                    fut._retarget_locked(new_primary.host_id, inner)
-                    retried += 1
+                    if fut._retarget_locked(new_primary.host_id, inner):
+                        retried += 1
                 else:
                     live_sec = next(
                         ((hid, f) for hid, f in fut._secondaries
                          if self._hosts[hid].alive), None)
                     if live_sec is not None:
-                        fut._retarget_locked(*live_sec)
-                        promoted += 1
+                        if fut._retarget_locked(*live_sec):
+                            promoted += 1
                     else:
                         recombined = outcomes.get(fut.name) == "recombined"
                         fut._finalize_locked(error=HostFailed(

@@ -74,11 +74,17 @@ def plan_mesh(num_chips: int, *, chips_per_pod: int = 256,
 
 
 def rebalance_engine(engine, mesh=None, *, axis_name: str = "slab",
+                     member_axis: Optional[str] = None,
                      names=None) -> Dict[str, str]:
     """Move engine tenants onto ``mesh`` (or OFF any mesh when ``None``)
     through ``CTEngine.rebind`` — the coefficient-preserving fast lane:
     no surplus recompute, incremental plan re-shard, executable re-bound
     from the shared signature cache.
+
+    ``member_axis`` names the second (member) axis of a 2-D
+    (member x slab) mesh; tenants then re-shard onto the full 2-D ingest
+    layout.  It is cleared automatically on the ``mesh=None`` path so
+    de-meshed tenants fall back to the single-device ingest.
 
     ``names`` restricts the sweep (default: every tenant).  Returns
     ``{name: outcome}`` with the per-tenant ``rebind`` outcome
@@ -90,10 +96,12 @@ def rebalance_engine(engine, mesh=None, *, axis_name: str = "slab",
     outcomes: Dict[str, str] = {}
     for name in (engine.names() if names is None else tuple(names)):
         if mesh is None:
-            outcomes[name] = engine.rebind(name, mesh=None, n_slabs=None)
+            outcomes[name] = engine.rebind(name, mesh=None, n_slabs=None,
+                                           member_axis=None)
         else:
             outcomes[name] = engine.rebind(name, mesh=mesh,
                                            axis_name=axis_name,
+                                           member_axis=member_axis,
                                            n_slabs=None)
     return outcomes
 

@@ -377,3 +377,65 @@ def test_stress_eight_submitters_mid_run_kill_no_dropped_futures():
         out = cl.query(n, pts)
         assert np.all(np.isfinite(out))
         np.testing.assert_array_equal(out, _fresh_oracle(cl, n, pts))
+
+
+# ---------------------------------------------------------------------------
+# ClusterFuture: retarget-vs-resolve atomicity (bugfix regression)
+# ---------------------------------------------------------------------------
+
+class _FakeInner:
+    """Stand-in engine future with a controllable ``done_at`` stamp."""
+
+    def __init__(self, done_at=None):
+        self.done_at = done_at
+
+    def done(self):
+        return False
+
+    def wait(self, timeout=None):
+        return False
+
+
+def test_cluster_future_retarget_vs_resolve_atomic():
+    """``done_at``/``retargeted``/``_inner`` are written from the
+    monitor thread (failover retarget) and a resolving waiter thread;
+    the per-future lock must serialize them: a future retargeted while
+    resolving can neither double-resolve, nor lose its ``done_at``
+    stamp, nor end up done-but-pointing-at-the-new-inner."""
+    from repro.runtime.cluster import ClusterFuture
+
+    for trial in range(200):
+        fut = ClusterFuture(None, "ingest", "t", "h0",
+                            _FakeInner(done_at=123.0))
+        barrier = threading.Barrier(3)
+        new_inner = _FakeInner(done_at=None)
+
+        def resolve():
+            barrier.wait()
+            fut._finalize_locked(value="v")
+
+        def retarget():
+            barrier.wait()
+            fut._retarget_locked("h1", new_inner)
+
+        threads = [threading.Thread(target=resolve),
+                   threading.Thread(target=retarget)]
+        for t in threads:
+            t.start()
+        barrier.wait()
+        for t in threads:
+            t.join(timeout=30)
+
+        assert fut._done and fut._value == "v" and fut._error is None
+        assert fut.done_at is not None          # the stamp never lost
+        if fut.retargeted == 0:
+            # resolve won: retarget-after-done was a clean no-op
+            assert fut._host_id == "h0" and fut._inner.done_at == 123.0
+            assert fut.done_at == 123.0
+        else:
+            # retarget won: resolution stamped against the NEW inner
+            assert fut.retargeted == 1 and fut._host_id == "h1"
+
+        # a second resolution is always a no-op (no double-resolve)
+        fut._finalize_locked(error=RuntimeError("late"))
+        assert fut._value == "v" and fut._error is None

@@ -1,0 +1,129 @@
+"""``ExecSpec(donate=True)`` x failure paths: a donated-then-failed
+ingest must never resubmit or retain deleted device buffers — the owning
+future resolves with the named ``IngestBuffersDonated`` error instead.
+Covers the ``check_finite`` NaN spelling, the rebind-race retry
+spelling, and the cluster failover spelling (whose ``np.asarray``
+snapshots make resubmission donation-safe by construction)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.engine import (CTEngine, ExecSpec, IngestBuffersDonated,
+                               clear_compile_cache)
+from repro.core.levels import CombinationScheme, grid_shape
+
+SCHEME = CombinationScheme(2, 3)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    clear_compile_cache()
+    yield
+
+
+def _host_grids(seed):
+    rng = np.random.default_rng(seed)
+    return {ell: rng.standard_normal(grid_shape(ell))
+            for ell, _ in SCHEME.grids}
+
+
+def test_nan_ingest_with_donation_resolves_named_error():
+    """check_finite catches the NaN only AFTER the executable consumed
+    (and possibly donated) the inputs — with ``donate=True`` the failure
+    is unretryable, so it surfaces as ``IngestBuffersDonated``, not the
+    retryable ``FloatingPointError``.  The tenant keeps serving its
+    last good surplus and the engine stays healthy."""
+    eng = CTEngine(ExecSpec(donate=True), check_finite=True)
+    eng.register("t", SCHEME, _host_grids(0))
+    good = np.asarray(eng.surplus("t"))
+
+    bad = _host_grids(1)
+    ell = next(iter(bad))
+    bad[ell] = bad[ell].copy()
+    bad[ell].flat[0] = np.nan
+    with pytest.raises(IngestBuffersDonated, match="non-finite.*donated"):
+        eng.update("t", bad)
+    np.testing.assert_array_equal(np.asarray(eng.surplus("t")), good)
+
+    # without donation the same fault stays the retryable named error
+    eng2 = CTEngine(check_finite=True)
+    eng2.register("t", SCHEME, _host_grids(0))
+    with pytest.raises(FloatingPointError, match="non-finite"):
+        eng2.update("t", bad)
+
+
+def test_rebind_race_retry_never_redispatches_donated_buffers():
+    """The CAS retry loop in ``_ingest_one``: when a concurrent rebind
+    swaps the tenant record mid-flight AND the first attempt's staged
+    device buffers were donated (deleted), the retry must raise the
+    named error instead of handing XLA dead buffers."""
+    eng = CTEngine(ExecSpec(donate=True))
+    eng.register("t", SCHEME, _host_grids(2))
+
+    staged = {ell: jnp.asarray(v) for ell, v in _host_grids(3).items()}
+    orig = eng._dispatch_ingest
+    fired = []
+
+    def racy(tenant, nodal_grids):
+        out = orig(tenant, nodal_grids)
+        if not fired:
+            fired.append(True)
+            jax.block_until_ready(out)
+            # simulate a backend that honored the donation (CPU may
+            # only warn): the staged inputs are gone after dispatch
+            for v in staged.values():
+                if not v.is_deleted():
+                    v.delete()
+            # concurrent rebind swaps the record -> the commit CAS
+            # fails and _ingest_one loops for a retry
+            eng.rebind("t", axis_name="row")
+        return out
+
+    eng._dispatch_ingest = racy
+    with pytest.raises(IngestBuffersDonated, match="donated.*deleted"):
+        eng.update("t", staged)
+    assert fired     # the race actually happened
+
+
+def test_explicitly_deleted_payload_fails_named_not_xla():
+    """Even the FIRST attempt guards: a donated-spec ingest handed
+    already-deleted device buffers resolves with the named error, not
+    an XLA crash."""
+    eng = CTEngine(ExecSpec(donate=True))
+    eng.register("t", SCHEME, _host_grids(4))
+    staged = {ell: jnp.asarray(v) for ell, v in _host_grids(5).items()}
+    for v in staged.values():
+        jax.block_until_ready(v)
+        if not v.is_deleted():
+            v.delete()
+    with pytest.raises(IngestBuffersDonated, match="donated"):
+        eng.update("t", staged)
+
+
+@pytest.mark.cluster
+def test_cluster_failover_retry_is_donation_safe():
+    """The PR-7 host-kill retry spelling: the cluster snapshots every
+    payload host-side (``np.asarray``), so each engine stages FRESH
+    device buffers per dispatch and a failover resubmission after a
+    donated ingest never touches deleted memory — the promoted future
+    resolves with a value, not ``IngestBuffersDonated``."""
+    from repro.runtime.cluster import CTCluster
+    cl = CTCluster(4, replication=2, seed=11,
+                   spec=ExecSpec(donate=True))
+    cl.register("t", SCHEME, _host_grids(6))
+    pts = np.random.default_rng(60).random((8, 2))
+    base = cl.query("t", pts)
+    cl.start()
+    try:
+        victim = cl.owners_of("t")[0]
+        fut = cl.submit_ingest("t", _host_grids(7))
+        cl.injector.kill(victim)
+        surplus = fut.result(60)         # replica ack resolves it
+        assert np.all(np.isfinite(np.asarray(surplus)))
+        after = cl.query("t", pts)
+        assert not np.array_equal(after, base)
+        assert cl.stats()["host_failed"] == 0
+    finally:
+        cl.stop()
