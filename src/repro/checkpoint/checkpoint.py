@@ -12,6 +12,12 @@ Production posture (DESIGN.md Sect. 4):
   tensorstore; the manifest/layout logic is identical.
 * **Self-describing** — MANIFEST.json carries the tree structure, shapes,
   dtypes and user metadata (step, config name, data position).
+* **Self-verifying** — MANIFEST.json carries a crc32 per stored array;
+  restore recomputes them and raises the named ``CheckpointCorrupt`` on
+  any mismatch (or on an unreadable payload) instead of returning a
+  garbage tree.  Model checkpoints and the surplus snapshots of
+  ``repro.runtime.durability`` share this layer, so both get the same
+  torn/corrupt-payload detection.
 """
 
 from __future__ import annotations
@@ -19,6 +25,8 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import zipfile
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -26,10 +34,22 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "list_steps"]
+           "list_steps", "CheckpointCorrupt"]
 
 _MANIFEST = "MANIFEST.json"
 _PAYLOAD = "arrays.npz"
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint payload is torn or corrupt: the npz is unreadable, a
+    manifest-listed array is missing, or a stored array fails its
+    manifest crc32.  Restore raises this instead of returning garbage;
+    callers with older checkpoints to fall back to (e.g. the durable
+    surplus snapshots) catch it and try the previous step."""
+
+
+def _crc32(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
 
 
 def _flatten_with_keys(tree) -> Dict[str, Any]:
@@ -54,7 +74,8 @@ def save_checkpoint(directory: str, step: int, tree, *,
     np.savez(os.path.join(tmp, _PAYLOAD), **arrays)
     manifest = {
         "step": step,
-        "keys": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+        "keys": {k: {"shape": list(a.shape), "dtype": str(a.dtype),
+                     "crc32": _crc32(a)}
                  for k, a in arrays.items()},
         "metadata": metadata or {},
     }
@@ -82,24 +103,60 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def restore_checkpoint(directory: str, step: int, template,
+def _load_verified(path: str) -> Tuple[Dict[str, np.ndarray],
+                                       Dict[str, Any]]:
+    """Load + checksum-verify a checkpoint directory's payload."""
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    try:
+        with np.load(os.path.join(path, _PAYLOAD)) as payload:
+            arrays = {k: np.array(payload[k]) for k in payload.files}
+    except (OSError, ValueError, KeyError, zlib.error,
+            zipfile.BadZipFile) as e:
+        raise CheckpointCorrupt(
+            f"{path}: payload unreadable ({e})") from e
+    for key, info in manifest["keys"].items():
+        if key not in arrays:
+            raise CheckpointCorrupt(
+                f"{path}: manifest lists array {key!r} but the payload "
+                f"does not contain it")
+        want = info.get("crc32")
+        if want is not None and _crc32(arrays[key]) != int(want):
+            raise CheckpointCorrupt(
+                f"{path}: array {key!r} failed its manifest crc32 — "
+                f"payload is torn or corrupt")
+    return arrays, manifest
+
+
+def restore_checkpoint(directory: str, step: int, template=None,
                        shardings=None) -> Tuple[Any, Dict[str, Any]]:
     """Restore into the structure of ``template`` (shapes must match).
+
+    ``template=None`` restores manifest-driven instead: the first return
+    value is the flat ``{key: np.ndarray}`` dict of every stored array
+    (how the durable surplus snapshots restore without knowing the tree
+    structure up front).
 
     ``shardings``: optional pytree of NamedSharding matching ``template`` —
     leaves are placed with jax.device_put onto the *current* mesh, which is
     how a checkpoint from one mesh restores onto another (elastic resize).
+
+    Every stored array is verified against its manifest crc32; a torn or
+    corrupt payload raises ``CheckpointCorrupt`` (manifests from before
+    checksums restore unverified).
     """
     path = os.path.join(directory, f"step_{step:010d}")
-    with open(os.path.join(path, _MANIFEST)) as f:
-        manifest = json.load(f)
-    payload = np.load(os.path.join(path, _PAYLOAD))
+    arrays, manifest = _load_verified(path)
+    if template is None:
+        if shardings is not None:
+            arrays = jax.device_put(arrays, shardings)
+        return arrays, manifest["metadata"]
     flat_keys = _flatten_with_keys(template)
     leaves_new = []
     for key, tmpl_leaf in flat_keys.items():
-        if key not in payload:
+        if key not in arrays:
             raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = payload[key]
+        arr = arrays[key]
         want = tuple(np.shape(tmpl_leaf))
         if tuple(arr.shape) != want:
             raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} "

@@ -189,9 +189,10 @@ from repro.core.interpolation import interpolate_hierarchical
 from repro.core.levels import SchemeLike
 from repro.kernels.hierarchize import (batched_method, hierarchize_batched,
                                        interpret_default)
+from repro.runtime.durability import DurableStore, RetryPolicy
 
 __all__ = ["ExecSpec", "CTEngine", "CTFuture", "EngineSaturated",
-           "IngestBuffersDonated",
+           "IngestBuffersDonated", "RestoreInfo",
            "reset_deprecation_warnings", "clear_compile_cache"]
 
 
@@ -202,6 +203,27 @@ def reset_deprecation_warnings() -> None:
 
 class EngineSaturated(RuntimeError):
     """The engine's bounded request queue is full (admission control)."""
+
+
+class _RebindRace(RuntimeError):
+    """Internal: an ingest commit lost the CAS against a concurrent
+    refit/rebind record swap — retried under the engine's RetryPolicy."""
+
+
+@dataclass(frozen=True)
+class RestoreInfo:
+    """What ``CTEngine.restore`` recovered for one tenant."""
+
+    name: str
+    snapshot_seq: int           # watermark of the adopted snapshot (0 none)
+    base_seq: int               # highest journaled seq (snapshot + WAL)
+    tag: int                    # newest caller ordering tag recovered; -1
+    snapshot_tag: int           # caller tag of the adopted snapshot; -1
+    pending: int                # WAL entries newer than the snapshot
+    replayed: int               # entries already applied (replay=True)
+    restore_s: float
+    replay_s: float
+    events: Tuple[str, ...]     # tolerated anomalies (torn tails, ...)
 
 
 class IngestBuffersDonated(RuntimeError):
@@ -710,7 +732,10 @@ class CTEngine:
                  deadline_ms: float = 10.0,
                  ingest_workers: Optional[int] = None,
                  check_finite: bool = False,
-                 host_id: Optional[str] = None):
+                 host_id: Optional[str] = None,
+                 store: Optional[DurableStore] = None,
+                 snapshot_interval: int = 16,
+                 retry: Optional[RetryPolicy] = None):
         if spec is not None and not isinstance(spec, ExecSpec):
             raise TypeError(f"CTEngine: spec must be an ExecSpec, got "
                             f"{type(spec).__name__}")
@@ -723,6 +748,17 @@ class CTEngine:
         self._max_pending = max_pending
         self._deadline_ms = deadline_ms
         self._check_finite = check_finite
+        #: durable tenant store (``repro.runtime.durability``): admitted
+        #: ingests are journaled BEFORE they enqueue, the served surplus
+        #: is snapshotted every ``snapshot_interval`` acked ingests, and
+        #: ``restore()`` rebuilds every tenant after a crash.  ``None``
+        #: keeps the engine pure in-memory (the default).
+        self._store = store
+        self._snapshot_interval = snapshot_interval
+        self._retry = retry or RetryPolicy(attempts=5, base_delay_s=0.0)
+        self._snap_seq: Dict[str, int] = {}     # last snapshotted watermark
+        self._last_tag: Dict[str, int] = {}     # newest caller ordering tag
+        self._replay_pending: Dict[str, List[Any]] = {}
         #: name of this engine in a multi-host deployment (cluster logs,
         #: error messages, stats); None = a standalone engine
         self.host_id = host_id
@@ -759,7 +795,9 @@ class CTEngine:
     def register(self, name: str, scheme: SchemeLike, nodal_grids=None, *,
                  spec: Optional[ExecSpec] = None,
                  deadline_ms: Optional[float] = None,
-                 priority: int = 0, plan=None, surplus=None) -> "CTEngine":
+                 priority: int = 0, plan=None, surplus=None,
+                 tag: Optional[int] = None,
+                 durable: bool = True) -> "CTEngine":
         """Admit tenant ``name``: build its plan under ``spec`` (engine
         default when omitted), bind the signature-shared executable, and
         — when ``nodal_grids`` is given — ingest immediately.
@@ -773,7 +811,17 @@ class CTEngine:
         retained surplus installs the served state directly, skipping
         the ingest entirely.  The caller owns the consistency of an
         adopted (scheme, plan, surplus) triple.  ``surplus=`` and
-        ``nodal_grids=`` are mutually exclusive."""
+        ``nodal_grids=`` are mutually exclusive.
+
+        With a durable store attached (and ``durable=True``) the tenant's
+        identity is registered in the store, an initial ``nodal_grids``
+        ingest is journaled at admission, and an adopted ``surplus`` is
+        snapshotted immediately — so a host crash right after a failover
+        adoption still restores the adopted state.  ``tag`` is the
+        caller's own ordering tag (the cluster's per-tenant seq)
+        journaled alongside the engine watermark; ``durable=False`` is
+        for tenants that must never persist (probes) and for
+        ``restore()`` itself (whose state is already on disk)."""
         if spec is not None and not isinstance(spec, ExecSpec):
             raise TypeError(f"register: spec must be an ExecSpec, got "
                             f"{type(spec).__name__}")
@@ -792,6 +840,14 @@ class CTEngine:
         tenant.deadline_ms, tenant.priority = deadline_ms, priority
         if surplus is not None:
             tenant.surplus = surplus
+        durable = durable and self._store is not None
+        if durable:
+            # identity first (atomic meta.json), so a crash between here
+            # and the first journal append restores an EMPTY tenant, not
+            # an unknown one
+            self._store.register(
+                name, scheme, full_levels=tenant.base_plan.full_levels,
+                deadline_ms=deadline_ms, priority=priority)
         with self._work:
             if name in self._tenants:
                 raise ValueError(f"tenant {name!r} already registered "
@@ -802,10 +858,33 @@ class CTEngine:
                 # query submitted between this insert and the surplus
                 # commit below WAITS for it instead of observing the
                 # still-empty tenant ("no ingested state to query")
-                self._ingest_submitted[name] = \
-                    self._ingest_submitted.get(name, 0) + 1
+                seq0 = self._ingest_submitted.get(name, 0) + 1
+                self._ingest_submitted[name] = seq0
+                if durable:
+                    try:
+                        # journal at admission: a crash after this append
+                        # replays the initial ingest; a crash during it
+                        # fails the registration (nothing was admitted)
+                        self._store.append(name, seq0, nodal_grids,
+                                           tag=tag)
+                    except Exception:
+                        del self._tenants[name]
+                        self._ingest_submitted[name] = seq0 - 1
+                        raise
+                if tag is not None:
+                    self._last_tag[name] = tag
             self._work_seq += 1
             self._work.notify_all()
+        if durable and surplus is not None:
+            # adopted state never flows through submit_ingest, so make it
+            # durable NOW via an immediate snapshot (also rotates away
+            # any stale journal of a previous incarnation of the name)
+            seq0 = self._ingest_submitted.get(name, 0)
+            if tag is not None:
+                self._last_tag[name] = tag
+            self._snapshot_now(name, seq0, tag, surplus,
+                               scheme=scheme,
+                               full_levels=tenant.base_plan.full_levels)
         if nodal_grids is not None:
             try:
                 surplus = self._dispatch_ingest(tenant, nodal_grids)
@@ -831,11 +910,17 @@ class CTEngine:
         """Remove tenant ``name``.  Work already queued for the name
         fails its future with a named ``KeyError`` at dispatch time
         (never hangs); the per-name ingest watermark stays monotonic so
-        a later re-register is race-free against stragglers."""
+        a later re-register is race-free against stragglers.  Durable
+        state is discarded: an unregister is a deliberate handoff (or
+        retirement), not a crash — a later ``restore()`` must not
+        resurrect a tenant this host no longer owns."""
         with self._work:
             del self._tenants[name]
+            self._replay_pending.pop(name, None)
             self._work_seq += 1
             self._work.notify_all()
+        if self._store is not None:
+            self._store.discard(name)
 
     def __contains__(self, name: str) -> bool:
         return name in self._tenants
@@ -957,12 +1042,23 @@ class CTEngine:
 
     def submit_ingest(self, name: str, nodal_grids, *, priority: int = 0,
                       check_finite: Optional[bool] = None, block: bool = True,
-                      timeout: Optional[float] = None) -> CTFuture:
+                      timeout: Optional[float] = None,
+                      tag: Optional[int] = None) -> CTFuture:
         """Enqueue new solver output for ``name`` (callable from any
         thread); the future resolves to the new surplus buffer once the
         ingest pool commits it.  Ingests of one tenant apply in
         submission order; queries of the same tenant submitted later
-        observe this ingest."""
+        observe this ingest.
+
+        With a durable store attached the payload is JOURNALED here, at
+        admission, keyed by the per-tenant watermark seq — before the
+        request can be acknowledged, so every acked ingest is on disk.
+        A failed append (e.g. a crash torn mid-record) fails the
+        admission itself: the caller sees the error, nothing was acked,
+        and replay stops cleanly before the torn tail.  ``tag`` is the
+        caller's own ordering tag (the cluster's per-tenant seq) stored
+        alongside the engine seq — what ``restart_host`` compares
+        against the cluster's committed seq to arbitrate freshness."""
         self._tenant(name)                      # raise early on a bad name
         check = self._check_finite if check_finite is None else check_finite
         fut = CTFuture(self)
@@ -973,8 +1069,16 @@ class CTEngine:
                                f"{sorted(self._tenants)})")
             seq = self._ingest_submitted.get(name, 0) + 1
             self._ingest_submitted[name] = seq
+            if self._store is not None:
+                try:
+                    self._store.append(name, seq, nodal_grids, tag=tag)
+                except Exception:
+                    self._ingest_submitted[name] = seq - 1
+                    raise
+            if tag is not None:
+                self._last_tag[name] = tag
             self._pending.append(
-                _Request("ingest", name, (nodal_grids, check), fut,
+                _Request("ingest", name, (nodal_grids, check, tag), fut,
                          ingest_seq=seq, priority=priority,
                          deadline=time.monotonic()))
             self._work_seq += 1
@@ -984,12 +1088,19 @@ class CTEngine:
     def submit_query(self, name: str, points, *,
                      deadline_ms: Optional[float] = None,
                      priority: Optional[int] = None, block: bool = True,
-                     timeout: Optional[float] = None) -> CTFuture:
+                     timeout: Optional[float] = None,
+                     stale_ok: bool = False) -> CTFuture:
         """Enqueue a point-evaluation batch against ``name``'s surplus
         (callable from any thread); the future resolves to the (Q,)
         values once the scheduler dispatches its signature group —
         batch-full, deadline expiry, or any ``flush``.  Same-signature
-        queries across tenants coalesce into one batched dispatch."""
+        queries across tenants coalesce into one batched dispatch.
+
+        ``stale_ok=True`` waits only for the ingests already COMMITTED
+        (the done watermark), not for every ingest already admitted —
+        the graceful-degradation mode a cluster uses against a tenant
+        mid-recovery: the query serves the restored-snapshot state
+        immediately instead of blocking behind the WAL replay."""
         tenant = self._tenant(name)
         points = _validate_points(points, tenant.base_plan.dim, name)
         q = points.shape[0]
@@ -1006,9 +1117,11 @@ class CTEngine:
             if name not in self._tenants:
                 raise KeyError(f"no tenant {name!r} (registered: "
                                f"{sorted(self._tenants)})")
+            watermark = (self._ingest_done if stale_ok
+                         else self._ingest_submitted).get(name, 0)
             self._pending.append(
                 _Request("query", name, (points, q, _qpad(q)), fut,
-                         ingest_seq=self._ingest_submitted.get(name, 0),
+                         ingest_seq=watermark,
                          priority=prio, deadline=dl))
             self._work_seq += 1
             self._work.notify_all()
@@ -1111,10 +1224,17 @@ class CTEngine:
 
     def close(self) -> None:
         """Stop the scheduler, drain the queue, shut down a private
-        ingest pool.  The shared pool stays up for other engines."""
+        ingest pool.  The shared pool stays up for other engines; an
+        attached durable store gets a final fsync (the store itself
+        belongs to the host, so it is flushed, not closed)."""
         self.stop(drain=True)
         if self._private_pool is not None:
             self._private_pool.shutdown(wait=True)
+        if self._store is not None:
+            try:
+                self._store.flush()
+            except OSError:
+                pass        # a closed/unlinked store at shutdown is moot
 
     def __enter__(self) -> "CTEngine":
         return self.start()
@@ -1261,7 +1381,8 @@ class CTEngine:
         unblocks the queries that waited on it (they see the previous
         surplus, or its error semantics via their own checks)."""
         for req in reqs:
-            grids, check = req.payload
+            grids, check, tag = req.payload
+            committed = None
             try:
                 surplus = self._ingest_one(req.name, grids, check,
                                            req.ingest_seq)
@@ -1269,12 +1390,20 @@ class CTEngine:
                 req.future._set_error(exc)
             else:
                 req.future._set(surplus)
+                committed = surplus
             finally:
                 with self._work:
                     if req.ingest_seq > self._ingest_done.get(req.name, 0):
                         self._ingest_done[req.name] = req.ingest_seq
                     self._work_seq += 1
                     self._work.notify_all()
+            if committed is not None:
+                # AFTER the ack and the watermark advance: a snapshot is
+                # an optimization of future recovery, never on the ack
+                # critical path — and never a reason to fail an ingest
+                # that already succeeded
+                self._maybe_snapshot(req.name, req.ingest_seq, tag,
+                                     committed)
 
     def _ingest_one(self, name: str, nodal_grids, check_finite: bool,
                     seq: int = 0):
@@ -1285,8 +1414,11 @@ class CTEngine:
         same-tenant chains taken by DIFFERENT pump passes run on the
         pool concurrently, so an older ingest finishing last must not
         clobber a newer one's committed surplus (its future still
-        resolves with its own computed value)."""
-        for _ in range(5):
+        resolves with its own computed value).  The retry budget comes
+        from the engine's ``RetryPolicy`` (no sleeping: losing the CAS
+        means the record ALREADY changed, there is nothing to wait
+        for)."""
+        def attempt():
             with self._lock:
                 tenant = self._tenants.get(name)
             if tenant is None:
@@ -1325,8 +1457,14 @@ class CTEngine:
                     self._counters["ingests"] += 1
                     return surplus
                 self._sched["ingest_retries"] += 1
-        raise RuntimeError(f"ingest for tenant {name!r} kept losing the "
-                           f"rebind race (5 attempts) — engine bug")
+                raise _RebindRace(name)
+        try:
+            return self._retry.run(attempt, retry_on=(_RebindRace,),
+                                   sleep=False)
+        except _RebindRace:
+            raise RuntimeError(
+                f"ingest for tenant {name!r} kept losing the rebind race "
+                f"({self._retry.attempts} attempts) — engine bug") from None
 
     def _run_queries(self, queries: List[_Request], drain: bool) -> int:
         """Resolve query requests: group the watermark-eligible ones by
@@ -1576,6 +1714,222 @@ class CTEngine:
             self._tenants[tenant.name] = nxt
             self._work_seq += 1
             self._work.notify_all()
+        if self._store is not None:
+            # the scheme identity changed: refresh the durable meta and
+            # snapshot immediately, superseding every WAL entry journaled
+            # against the OLD scheme (replaying those through the new
+            # plan would fail its grid validation)
+            name = tenant.name
+            self._store.register(
+                name, scheme, full_levels=nxt.base_plan.full_levels,
+                deadline_ms=nxt.deadline_ms, priority=nxt.priority)
+            with self._lock:
+                seq = self._ingest_submitted.get(name, 0)
+                tag = self._last_tag.get(name)
+            self._snapshot_now(name, seq, tag, surplus, scheme=scheme,
+                               full_levels=nxt.base_plan.full_levels)
+
+    # -- durability: snapshot / restore / replay ----------------------------
+
+    def _snapshot_now(self, name: str, seq: int, tag: Optional[int],
+                      surplus, *, scheme: SchemeLike,
+                      full_levels) -> Optional[str]:
+        """Best-effort durable snapshot.  A snapshot that fails (disk
+        trouble, the injected crash-mid-snapshot) must never fail the
+        serving path: the previous snapshot + the WAL already cover
+        every acked ingest, so the failure is recorded and swallowed."""
+        if self._store is None:
+            return None
+        try:
+            path = self._store.snapshot(
+                name, seq, np.asarray(surplus),
+                tag=-1 if tag is None else int(tag),
+                scheme=scheme, full_levels=full_levels)
+        except Exception as exc:
+            self._store.events.append(
+                f"{self._host()}: snapshot of tenant {name!r} at seq "
+                f"{seq} failed ({exc!r}); previous snapshot + WAL still "
+                f"cover all acked ingests")
+            return None
+        with self._lock:
+            if seq > self._snap_seq.get(name, 0):
+                self._snap_seq[name] = seq
+        return path
+
+    def _maybe_snapshot(self, name: str, seq: int, tag: Optional[int],
+                        surplus) -> None:
+        """Snapshot when the done watermark advanced ``snapshot_interval``
+        past the last snapshot (called by the ingest chain after the
+        ack).  The claim on ``_snap_seq`` is taken under the lock so
+        concurrent chains of one tenant snapshot once, not once each."""
+        if self._store is None or self._snapshot_interval <= 0:
+            return
+        with self._lock:
+            last = self._snap_seq.get(name, 0)
+            tenant = self._tenants.get(name)
+            if tenant is None or seq - last < self._snapshot_interval:
+                return
+            self._snap_seq[name] = seq          # claim before the IO
+            scheme = tenant.scheme
+            full_levels = tenant.base_plan.full_levels
+        if self._snapshot_now(name, seq, tag, surplus, scheme=scheme,
+                              full_levels=full_levels) is None:
+            with self._lock:
+                if self._snap_seq.get(name, 0) == seq:
+                    self._snap_seq[name] = last     # un-claim: retry later
+
+    def snapshot_tenant(self, name: str, *,
+                        tag: Optional[int] = None) -> Optional[str]:
+        """Force a durable snapshot of ``name``'s served surplus at the
+        current watermark (``None`` without a store / without state).
+        The cluster calls this after a failover adoption so the adopting
+        host's store covers the adopted state before any new ingest."""
+        if self._store is None:
+            return None
+        with self._lock:
+            tenant = self._tenants.get(name)
+            if tenant is None or tenant.surplus is None:
+                return None
+            seq = self._ingest_submitted.get(name, 0)
+            if tag is None:
+                tag = self._last_tag.get(name)
+            scheme = tenant.scheme
+            full_levels = tenant.base_plan.full_levels
+            surplus = tenant.surplus
+        return self._snapshot_now(name, seq, tag, surplus, scheme=scheme,
+                                  full_levels=full_levels)
+
+    def restore(self, store: Optional[DurableStore] = None, *,
+                specs=None, names=None,
+                replay: bool = True) -> Dict[str, RestoreInfo]:
+        """Rebuild tenants from a durable store: adopt each tenant's
+        newest intact snapshot, then replay the WAL entries newer than
+        it through the NORMAL ingest executable — so the restored
+        surplus is bit-identical to an engine that never crashed (full-
+        dict ingests are last-writer-wins).
+
+        ``specs`` maps tenant name -> ExecSpec (a dict or a callable;
+        engine default otherwise) — how a cluster restores each tenant
+        onto the host's own device slice.  ``replay=False`` defers the
+        WAL replay (phase B) to an explicit ``replay()`` call: the
+        cluster uses this to rejoin the ring after the fast snapshot
+        adoption and serve stale-marked queries DURING the replay.
+        Until ``replay()`` runs, non-stale queries wait on the admitted
+        watermark, exactly as they would behind a long ingest queue."""
+        store = store if store is not None else self._store
+        if store is None:
+            raise ValueError("restore: no store attached and none given")
+        out: Dict[str, RestoreInfo] = {}
+        for name in store.tenants():
+            if names is not None and name not in names:
+                continue
+            t0 = time.monotonic()
+            state = store.load(name)
+            if callable(specs):
+                spec = specs(name)
+            elif isinstance(specs, dict):
+                spec = specs.get(name)
+            else:
+                spec = None
+            spec = spec or self._default_spec
+            plan = build_plan(state.scheme, state.full_levels, spec=spec)
+            self.register(
+                name, state.scheme, spec=spec, plan=plan,
+                surplus=(None if state.surplus is None
+                         else jnp.asarray(state.surplus)),
+                deadline_ms=state.deadline_ms, priority=state.priority,
+                durable=False)      # its durable state IS this store
+            with self._work:
+                base = max(state.max_seq,
+                           self._ingest_submitted.get(name, 0))
+                self._ingest_submitted[name] = base
+                self._ingest_done[name] = \
+                    max(state.snapshot_seq, self._ingest_done.get(name, 0))
+                self._snap_seq[name] = state.snapshot_seq
+                if state.max_tag >= 0:
+                    self._last_tag[name] = state.max_tag
+                tenant = self._tenants[name]
+                tenant.surplus_seq = state.snapshot_seq
+                if state.entries:
+                    self._replay_pending[name] = list(state.entries)
+                self._work_seq += 1
+                self._work.notify_all()
+            restore_s = time.monotonic() - t0
+            out[name] = RestoreInfo(
+                name=name, snapshot_seq=state.snapshot_seq,
+                base_seq=state.max_seq, tag=state.max_tag,
+                snapshot_tag=state.snapshot_tag,
+                pending=len(state.entries), replayed=0,
+                restore_s=restore_s, replay_s=0.0,
+                events=tuple(state.events))
+        if replay:
+            replayed = self.replay(
+                names=list(out) if names is None else list(names))
+            for name, r in replayed.items():
+                if name in out:
+                    out[name] = dataclasses.replace(
+                        out[name], replayed=r["replayed"],
+                        replay_s=r["seconds"])
+        return out
+
+    def replay(self, names=None) -> Dict[str, Dict[str, Any]]:
+        """Apply the deferred WAL entries of ``restore(replay=False)``
+        through the normal ingest executable, advancing the done
+        watermark per entry (newest-seq-wins against any LIVE ingest
+        submitted after the rejoin — replay never clobbers newer
+        state)."""
+        if names is None:
+            with self._lock:
+                names = list(self._replay_pending)
+        out: Dict[str, Dict[str, Any]] = {}
+        for name in names:
+            with self._lock:
+                entries = self._replay_pending.pop(name, [])
+            t0 = time.monotonic()
+            applied, skipped, last_tag = 0, 0, None
+            for e in entries:
+                with self._lock:
+                    tenant = self._tenants.get(name)
+                if tenant is None:
+                    break               # unregistered mid-replay: moot
+                surplus = self._dispatch_ingest(tenant, e.grids)
+                jax.block_until_ready(surplus)
+                if self._check_finite and not bool(_FINITE_CHECK(surplus)):
+                    # a poisoned ingest journaled at admission (the crash
+                    # raced the device-side finiteness check): its live
+                    # submission would have FAILED, so replay must not
+                    # commit it either — skip, advance the watermark so
+                    # waiters don't hang, keep the previous surplus
+                    with self._work:
+                        if e.seq > self._ingest_done.get(name, 0):
+                            self._ingest_done[name] = e.seq
+                        self._work_seq += 1
+                        self._work.notify_all()
+                    skipped += 1
+                    continue
+                with self._work:
+                    cur = self._tenants.get(name)
+                    if cur is not None and e.seq >= cur.surplus_seq:
+                        cur.surplus = surplus
+                        cur.surplus_seq = e.seq
+                    if e.seq > self._ingest_done.get(name, 0):
+                        self._ingest_done[name] = e.seq
+                    if e.tag >= 0:
+                        self._last_tag[name] = e.tag
+                    self._counters["ingests"] += 1
+                    self._work_seq += 1
+                    self._work.notify_all()
+                applied += 1
+                if e.tag >= 0:
+                    last_tag = e.tag
+            out[name] = {"replayed": applied, "skipped": skipped,
+                         "seconds": time.monotonic() - t0,
+                         "last_tag": last_tag}
+        return out
+
+    @property
+    def store(self) -> Optional[DurableStore]:
+        return self._store
 
     # -- accounting ---------------------------------------------------------
 
@@ -1632,4 +1986,10 @@ class CTEngine:
                 "deadline_ms": self._deadline_ms,
                 **sched,
             },
+            "durability": (None if self._store is None else {
+                "snapshot_interval": self._snapshot_interval,
+                "replay_pending": {n: len(v) for n, v
+                                   in self._replay_pending.items()},
+                **self._store.stats(),
+            }),
         }

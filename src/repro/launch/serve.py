@@ -134,24 +134,64 @@ class CTSurrogate:
     by consistent-hash placement, with health-checked failover
     underneath — the API here does not change at all.  (In that mode
     the spec must be mesh-free; meshes belong to the cluster's hosts.)
+
+    ``store=`` (a ``repro.runtime.durability.DurableStore``) makes the
+    surrogate's OWN engine durable: every admitted update is journaled
+    to a write-ahead log at admission and the served surplus is
+    snapshotted every ``snapshot_interval`` acked updates, so a crashed
+    process rebuilds this tenant bit-identically with
+    ``CTSurrogate.restore(store, ...)`` (snapshot adopt + WAL replay —
+    see the ``repro.runtime.durability`` docstring).  Only meaningful
+    when the surrogate constructs its own engine; with ``engine=`` /
+    ``cluster=`` durability is the backing deployment's property
+    (``CTEngine(store=...)`` / ``CTCluster(durability_dir=...)``), and
+    passing ``store=`` too raises.
     """
 
     def __init__(self, scheme, nodal_grids, spec=None, *,
                  engine=None, cluster=None, name: str = "surrogate",
+                 store=None, snapshot_interval: int = 16,
                  interpret: Optional[bool] = None,
                  mesh=None, axis_name: Optional[str] = None, merge=None):
         from repro.core.engine import CTEngine
         from repro.core.executor import resolve_spec
         if engine is not None and cluster is not None:
             raise ValueError("pass engine= or cluster=, not both")
+        if store is not None and (engine is not None or cluster is not None):
+            raise ValueError(
+                "store= applies to the surrogate's own engine; a shared "
+                "engine= / cluster= carries its own durability "
+                "(CTEngine(store=...) / CTCluster(durability_dir=...))")
         spec = resolve_spec("CTSurrogate", spec, interpret=interpret,
                             mesh=mesh, axis_name=axis_name, merge=merge)
         if cluster is not None:
             self._engine = cluster      # duck-typed CTEngine surface
         else:
-            self._engine = engine if engine is not None else CTEngine()
+            self._engine = engine if engine is not None else CTEngine(
+                store=store, snapshot_interval=snapshot_interval)
         self._name = name
         self._engine.register(name, scheme, nodal_grids, spec=spec)
+
+    @classmethod
+    def restore(cls, store, *, name: str = "surrogate", spec=None,
+                snapshot_interval: int = 16) -> "CTSurrogate":
+        """Rebuild a durable surrogate after a crash: adopt tenant
+        ``name``'s newest intact surplus snapshot from ``store`` and
+        replay the WAL entries newer than it through the normal ingest
+        path, so the restored surrogate answers BIT-identically to one
+        that never crashed.  Raises ``KeyError`` when the store holds no
+        tenant ``name``."""
+        from repro.core.engine import CTEngine
+        from repro.core.executor import resolve_spec
+        engine = CTEngine(store=store, snapshot_interval=snapshot_interval)
+        specs = None if spec is None \
+            else {name: resolve_spec("CTSurrogate", spec)}
+        if engine.restore(store, names=[name], specs=specs).get(name) is None:
+            raise KeyError(f"durable store holds no tenant {name!r}")
+        self = cls.__new__(cls)
+        self._engine = engine
+        self._name = name
+        return self
 
     @property
     def engine(self):

@@ -81,7 +81,55 @@ only the engines in its current owner list serve it, the PRIMARY alone
 answers queries, and the cluster's retained record (scheme + last-acked
 grids + plan) is the source of truth a migration rebuilds from.
 ``FaultInjector`` provides the failure seams (kill host, stall
-dispatch, NaN-poison one ingest) that make all of the above testable.
+dispatch, NaN-poison one ingest, crash-mid-snapshot, torn WAL record)
+that make all of the above testable, and ``FaultSchedule`` composes
+them into seeded, deterministic fault timelines for the ``chaos`` test
+tier.
+
+Durability and recovery: restartable hosts
+------------------------------------------
+
+With ``durability_dir=`` every host carries a ``repro.runtime.
+durability.DurableStore``, and the failure story above gains its
+complementary half — recovering the lost state itself, not just
+routing around it.  The per-tenant, per-host state machine:
+
+    admitted --journal--> journaled --device--> acked --N--> snapshotted
+        |                                         |
+        |                         every acked ingest is on disk (WAL
+        |                         append at admission, fsync-batched);
+        |                         every ``snapshot_interval``-th ack
+        |                         rotates the WAL behind an atomic
+        |                         manifest snapshot of the surplus
+        |
+        crash before the journal append returns = the ingest was never
+        admitted: the submitter sees the error, nothing acked is lost
+
+    restart --> restore --> replay --> rejoin
+        ``restart_host`` builds a fresh engine over the SAME store:
+        (1) **restore** — adopt each tenant's newest intact snapshot
+        (corrupt payloads raise ``CheckpointCorrupt`` and fall back to
+        the previous snapshot); (2) **rejoin** — re-enter the ring
+        under the same seeded vnodes, so placement returns EXACTLY to
+        the pre-failure assignment and relocation is bounded to the
+        restarted host's tenants in both directions; tenants whose
+        store state is newer than the cluster's committed seq serve
+        from the store (outcome ``restored``), tenants that advanced
+        on survivors during the outage adopt back from a live donor
+        (outcome ``adopted``); (3) **replay** — WAL entries newer than
+        the snapshot re-run through the NORMAL ingest executable, so
+        the recovered surplus is bit-identical to a host that never
+        crashed.  While a tenant is mid-replay its queries serve the
+        last-snapshot state with ``ClusterFuture.stale_seq`` set
+        (graceful degradation) instead of blocking on the replay.
+
+With durability on, ``fail_host`` replays a victim's journaled
+in-flight ingests onto the new owners from the WAL (per-tenant outcome
+``restored``) instead of dropping them: the futures that would have
+resolved ``HostFailed`` retarget at the replayed submissions and
+resolve with real acknowledgements.  All ad-hoc retry loops (ingest
+fan-out, query routing, the engines' commit CAS) share one
+``repro.runtime.durability.RetryPolicy``.
 """
 
 from __future__ import annotations
@@ -99,12 +147,14 @@ import numpy as np
 from repro.core.engine import (CTEngine, CTFuture, EngineSaturated,
                                ExecSpec)
 from repro.core.levels import CombinationScheme, SchemeLike, grid_shape
+from repro.runtime.durability import (DurableStore, RetryPolicy, WALCorrupt,
+                                      WALEntry)
 from repro.runtime.fault_tolerance import (HostHealthConfig,
                                            HostHealthTracker,
                                            recombine_after_fault)
 
-__all__ = ["CTCluster", "ClusterFuture", "FaultInjector", "HashRing",
-           "HostFailed"]
+__all__ = ["CTCluster", "ClusterFuture", "FaultInjector", "FaultEvent",
+           "FaultSchedule", "HashRing", "HostFailed"]
 
 #: per-host liveness tenant (registered directly on each engine, never
 #: placed on the ring); its probe query is the health monitor's signal
@@ -123,6 +173,30 @@ class HostFailed(RuntimeError):
     def __init__(self, message: str, host_id: Optional[str] = None):
         super().__init__(message)
         self.host_id = host_id
+
+
+def _json_safe(obj: Any) -> Any:
+    """Recursively coerce a stats tree to plain JSON types: numpy
+    scalars -> Python scalars, ndarrays -> lists, tuples/sets -> lists,
+    non-string keys -> strings, anything else -> ``repr``.  The
+    contract ``json.dumps(cluster.stats())`` never raises is what lets
+    the benchmarks and the chaos CI job upload stats verbatim."""
+    if isinstance(obj, dict):
+        return {(k if isinstance(k, str) else str(k)): _json_safe(v)
+                for k, v in obj.items()}
+    if isinstance(obj, (list, tuple, set, frozenset)):
+        return [_json_safe(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    return repr(obj)
 
 
 def _stable_hash(s: str) -> int:
@@ -178,6 +252,9 @@ class _Host:
     killed: bool = False               # fault injector: reported dead
     stalled: bool = False              # fault injector: dispatch wedged
     fail_reason: str = ""
+    #: the host's durable tenant store — SURVIVES the engine: a restart
+    #: builds a fresh engine over the same store and restores from it
+    store: Optional[DurableStore] = None
 
 
 @dataclass
@@ -200,6 +277,10 @@ class _TenantRecord:
     dropped: Tuple[Tuple[int, ...], ...] = ()   # grids lost to failovers
     ingest_seq: int = 0                # cluster-side submission counter
     committed_seq: int = 0             # newest ack folded into ``grids``
+    #: restart-in-progress: the primary serves its restored-snapshot
+    #: state while the WAL replay catches up; queries get stale_seq
+    recovering: bool = False
+    stale_seq: Optional[int] = None    # committed seq of the served state
 
 
 class ClusterFuture:
@@ -233,6 +314,9 @@ class ClusterFuture:
         self._value = None
         self._error: Optional[BaseException] = None
         self.retargeted = 0
+        #: queries against a tenant mid-recovery: the cluster committed
+        #: seq of the (older) state this answer reflects; None = fresh
+        self.stale_seq: Optional[int] = None
         self.submitted_at = time.monotonic()
         self.done_at: Optional[float] = None
         #: per-future leaf lock making retarget-vs-resolve ATOMIC.
@@ -326,6 +410,13 @@ class FaultInjector:
       NaN-poisoned data (a device/data fault): with the cluster's
       ``check_finite`` engines it must resolve ONLY its own future with
       ``FloatingPointError`` and leave host and siblings healthy.
+    * ``crash_next_snapshot(host)`` — the host's next durable snapshot
+      dies mid-write, AFTER the payload but BEFORE the atomic rename:
+      the previous snapshot must stay intact and restorable.
+    * ``tear_next_wal(host)`` — the host's next WAL append writes a
+      torn record (header + half the payload) and raises: the
+      submission must FAIL (nothing was admitted), and a later restore
+      must tolerate the torn tail.
     """
 
     def __init__(self, cluster: "CTCluster"):
@@ -350,6 +441,20 @@ class FaultInjector:
         with self._cluster._lock:
             self._poison = tenant if tenant is not None else "*"
 
+    def crash_next_snapshot(self, host_id: str) -> None:
+        with self._cluster._lock:
+            store = self._cluster._hosts[host_id].store
+        if store is None:
+            raise ValueError(f"host {host_id!r} has no durable store")
+        store.fail_next_snapshot()
+
+    def tear_next_wal(self, host_id: str) -> None:
+        with self._cluster._lock:
+            store = self._cluster._hosts[host_id].store
+        if store is None:
+            raise ValueError(f"host {host_id!r} has no durable store")
+        store.tear_next_append()
+
     def _maybe_poison(self, name: str, grids: Dict) -> Dict:
         """Caller holds the cluster lock."""
         if self._poison is None or self._poison not in ("*", name):
@@ -361,6 +466,135 @@ class FaultInjector:
         bad.flat[0] = np.nan
         poisoned[ell] = bad
         return poisoned
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: ``kind`` fires at ``at_s`` (seconds from the
+    schedule's start) against ``target`` — a host id for host faults, a
+    tenant name for ``poison`` (empty string = any tenant)."""
+
+    at_s: float
+    kind: str       # kill | restart | stall | poison | crash_snapshot | tear_wal
+    target: str
+
+
+class FaultSchedule:
+    """Seeded, deterministic fault timeline for the ``chaos`` test tier.
+
+    ``seeded`` grows a schedule from an explicit ``np.random.
+    default_rng(seed)`` — same seed, same faults, same order, so a chaos
+    failure reproduces from its seed alone.  Structural invariants the
+    generator maintains: every ``kill`` is paired with a ``restart`` of
+    the same host ``restart_delay_s`` later, and at most ONE host is
+    down at a time (a kill drawn inside another kill's outage window is
+    downgraded to a ``poison``), so the schedule never asks an R=1
+    cluster to survive simultaneous failures it was not sized for.
+
+    The driver polls ``due(elapsed_s)`` and feeds each event to
+    ``apply(cluster, event)``, which dispatches to the cluster's
+    ``FaultInjector`` / ``restart_host`` with guards: an event that no
+    longer applies (host already dead, no durable store) is recorded in
+    ``skipped`` rather than raised — chaos runs must keep going."""
+
+    #: kinds ``seeded`` draws from by default (``stall`` is excluded:
+    #: it has no paired recovery and would eat the rest of the run)
+    KINDS = ("kill", "poison", "crash_snapshot", "tear_wal")
+
+    def __init__(self, events: Sequence[FaultEvent]):
+        self.events: Tuple[FaultEvent, ...] = tuple(
+            sorted(events, key=lambda e: e.at_s))
+        self._idx = 0
+        self.applied: List[FaultEvent] = []
+        self.skipped: List[Tuple[FaultEvent, str]] = []
+
+    @classmethod
+    def seeded(cls, seed: int, *, hosts: Sequence[str],
+               tenants: Sequence[str], duration_s: float,
+               n_events: int = 6, restart_delay_s: float = 0.75,
+               kinds: Optional[Sequence[str]] = None) -> "FaultSchedule":
+        rng = np.random.default_rng(seed)
+        kinds = tuple(kinds) if kinds is not None else cls.KINDS
+        hosts, tenants = list(hosts), list(tenants)
+        events: List[FaultEvent] = []
+        busy_until = 0.0
+        # leave the tail of the run fault-free so every recovery (and
+        # the paired restart) completes inside the schedule's window
+        times = sorted(rng.uniform(0.05 * duration_s, 0.8 * duration_s,
+                                   size=n_events))
+        for t in times:
+            kind = kinds[int(rng.integers(len(kinds)))]
+            if kind == "kill" and t < busy_until:
+                kind = "poison"         # one dead host at a time
+            if kind == "kill":
+                hid = hosts[int(rng.integers(len(hosts)))]
+                events.append(FaultEvent(float(t), "kill", hid))
+                events.append(FaultEvent(float(t + restart_delay_s),
+                                         "restart", hid))
+                busy_until = t + restart_delay_s
+            elif kind == "poison":
+                tgt = (tenants[int(rng.integers(len(tenants)))]
+                       if tenants else "")
+                events.append(FaultEvent(float(t), "poison", tgt))
+            else:
+                hid = hosts[int(rng.integers(len(hosts)))]
+                events.append(FaultEvent(float(t), kind, hid))
+        return cls(events)
+
+    @property
+    def exhausted(self) -> bool:
+        return self._idx >= len(self.events)
+
+    def due(self, elapsed_s: float) -> List[FaultEvent]:
+        """Pop (consume) every not-yet-delivered event scheduled at or
+        before ``elapsed_s``, in schedule order."""
+        out: List[FaultEvent] = []
+        while self._idx < len(self.events) \
+                and self.events[self._idx].at_s <= elapsed_s:
+            out.append(self.events[self._idx])
+            self._idx += 1
+        return out
+
+    def apply(self, cluster: "CTCluster", event: FaultEvent) -> bool:
+        """Fire one event against ``cluster``; returns True when it
+        actually fired, False when a guard skipped it (recorded in
+        ``skipped`` with the reason)."""
+        try:
+            if event.kind == "kill":
+                with cluster._lock:
+                    host = cluster._hosts.get(event.target)
+                    ok = (host is not None and host.alive
+                          and not host.killed)
+                    live = sum(1 for h in cluster._hosts.values()
+                               if h.alive and not h.killed)
+                if not ok or live <= 1:
+                    self.skipped.append((event, "host not killable"))
+                    return False
+                cluster.injector.kill(event.target)
+            elif event.kind == "restart":
+                with cluster._lock:
+                    host = cluster._hosts.get(event.target)
+                    ok = host is not None and host.store is not None
+                if not ok:
+                    self.skipped.append((event, "no durable store"))
+                    return False
+                cluster.restart_host(event.target)
+            elif event.kind == "stall":
+                cluster.injector.stall(event.target)
+            elif event.kind == "poison":
+                cluster.injector.poison_next_ingest(event.target or None)
+            elif event.kind == "crash_snapshot":
+                cluster.injector.crash_next_snapshot(event.target)
+            elif event.kind == "tear_wal":
+                cluster.injector.tear_next_wal(event.target)
+            else:
+                self.skipped.append((event, f"unknown kind {event.kind!r}"))
+                return False
+        except Exception as e:          # noqa: BLE001 — chaos must go on
+            self.skipped.append((event, repr(e)))
+            return False
+        self.applied.append(event)
+        return True
 
 
 class CTCluster:
@@ -382,6 +616,10 @@ class CTCluster:
                  vnodes: int = 64, seed: int = 0,
                  health: Optional[HostHealthConfig] = None,
                  monitor_interval_s: float = 0.25,
+                 durability_dir: Optional[str] = None,
+                 snapshot_interval: int = 16,
+                 fsync_every: int = 8,
+                 retry: Optional[RetryPolicy] = None,
                  engine_kwargs: Optional[Dict[str, Any]] = None):
         if host_specs is not None:
             n_hosts = len(host_specs)
@@ -404,20 +642,33 @@ class CTCluster:
         self._records: Dict[str, _TenantRecord] = {}
         self._inflight: set = set()
         self._failovers: List[Dict[str, Any]] = []
+        self._restarts: List[Dict[str, Any]] = []
         self._counters = {"queries": 0, "ingests": 0, "retried_queries": 0,
-                          "promoted_ingests": 0, "host_failed": 0}
+                          "promoted_ingests": 0, "host_failed": 0,
+                          "replayed_ingests": 0}
         self._started = False
         self._monitor_thread: Optional[threading.Thread] = None
         self._monitor_stop: Optional[threading.Event] = None
+        self._durability_dir = durability_dir
+        self._snapshot_interval = snapshot_interval
+        self._fsync_every = fsync_every
+        #: one policy for every cluster-side retry loop (ingest fan-out
+        #: re-route, query re-route) — bounded attempts, not while True
+        self._retry = retry or RetryPolicy(attempts=8, base_delay_s=0.005,
+                                           max_delay_s=0.1)
         ekw = dict(engine_kwargs or {})
         ekw.setdefault("check_finite", True)
+        self._engine_kwargs = dict(ekw)     # restart_host rebuilds from it
         for i in range(n_hosts):
             hid = f"host{i}"
             hspec = (host_specs[i] if host_specs is not None
                      else ExecSpec())
-            engine = CTEngine(hspec, host_id=hid, **ekw)
+            engine = CTEngine(hspec, host_id=hid,
+                              **self._engine_with_store_kwargs(
+                                  self._make_store(hid)))
             self._add_probe_tenant(engine)
-            self._hosts[hid] = _Host(host_id=hid, engine=engine, spec=hspec)
+            self._hosts[hid] = _Host(host_id=hid, engine=engine, spec=hspec,
+                                     store=engine.store)
         self._ring = self._build_ring()
         self.injector = FaultInjector(self)
 
@@ -462,15 +713,32 @@ class CTCluster:
 
     # -- construction helpers ---------------------------------------------
 
+    def _make_store(self, host_id: str) -> Optional[DurableStore]:
+        """Per-host durable store under the cluster's durability root
+        (None when durability is off)."""
+        if self._durability_dir is None:
+            return None
+        return DurableStore(self._durability_dir, host_id,
+                            fsync_every=self._fsync_every)
+
+    def _engine_with_store_kwargs(
+            self, store: Optional[DurableStore]) -> Dict[str, Any]:
+        ekw = dict(self._engine_kwargs)
+        if store is not None:
+            ekw["store"] = store
+            ekw["snapshot_interval"] = self._snapshot_interval
+        return ekw
+
     def _add_probe_tenant(self, engine: CTEngine) -> None:
         """Per-host liveness tenant: a tiny d=2 scheme whose query is
         the health monitor's probe.  Registered directly on the engine
         (never placed on the ring) and warmed here so the first real
-        probe measures the scheduler, not a compile."""
+        probe measures the scheduler, not a compile.  Never durable:
+        probe state is worthless across a restart."""
         probe_scheme = CombinationScheme(2, 2)
         grids = {ell: np.zeros(grid_shape(ell))
                  for ell, _ in probe_scheme.grids}
-        engine.register(PROBE_TENANT, probe_scheme, grids)
+        engine.register(PROBE_TENANT, probe_scheme, grids, durable=False)
         engine.query(PROBE_TENANT, np.array([[0.5, 0.5]]))
 
     def _build_ring(self) -> HashRing:
@@ -587,10 +855,12 @@ class CTCluster:
             for hid in owners:
                 host = self._hosts[hid]
                 hspec = self._host_exec_spec(host, tspec)
+                # tag 0 = the tenant's initial state (committed_seq 0):
+                # durable hosts journal the admission under it
                 host.engine.register(
                     name, scheme, grids_np if nodal_grids is not None
                     else None, spec=hspec, deadline_ms=deadline_ms,
-                    priority=priority)
+                    priority=priority, tag=0)
             primary = self._hosts[owners[0]]
             rec.plan = primary.engine.plan(name)
             rec.plan_spec = self._host_exec_spec(primary, tspec)
@@ -632,12 +902,20 @@ class CTCluster:
         last-acked grids before handing each engine the full dict.  The
         future tracks the PRIMARY's acknowledgement; replicas ingest the
         same merged payload, which is what makes primary failover
-        transparent for replicated tenants."""
+        transparent for replicated tenants.
+
+        A ``WALTorn`` append failure on a durable host propagates to the
+        caller as a NAMED admission failure (nothing was acked); the
+        partially fanned-out submissions it may leave behind are benign —
+        full-dict ingests are last-writer-wins, so a retry's payload
+        supersedes the orphans."""
         kw.pop("block", None), kw.pop("timeout", None)
         new_np = {tuple(ell): np.asarray(v)
                   for ell, v in nodal_grids.items()}
-        while True:
-            err: Optional[EngineSaturated] = None
+        err: Optional[EngineSaturated] = None
+        for delay in self._retry.delays():
+            if delay:
+                time.sleep(delay)
             sat_host: Optional[_Host] = None
             with self._lock:
                 rec = self._record(name)
@@ -652,6 +930,7 @@ class CTCluster:
                                  and not f._done), key=lambda f: f._seq):
                     merged.update(f._updates_new)
                 merged.update(new_np)
+                seq_next = rec.ingest_seq + 1
                 payload = self.injector._maybe_poison(name, merged)
                 primary = self._primary(rec)
                 inners: List[Tuple[str, CTFuture]] = []
@@ -660,15 +939,16 @@ class CTCluster:
                         host = self._hosts.get(hid)
                         if host is None or not host.alive:
                             continue
-                        # a partial fan-out abandoned on saturation is
-                        # benign: full-dict ingests are last-writer-wins,
-                        # so the retry's payload supersedes the orphan
+                        # tag = the cluster's per-tenant seq, journaled
+                        # host-side so a restart can tell which WAL
+                        # entries the cluster had already committed
                         inners.append((hid, host.engine.submit_ingest(
-                            name, payload, block=False, **kw)))
+                            name, payload, block=False, tag=seq_next,
+                            **kw)))
                 except EngineSaturated as e:
                     err, sat_host = e, self._hosts.get(hid)
                 else:
-                    rec.ingest_seq += 1
+                    rec.ingest_seq = seq_next
                     by_host = dict(inners)
                     fut = ClusterFuture(self, "ingest", name,
                                         primary.host_id,
@@ -676,7 +956,7 @@ class CTCluster:
                                         levels=tuple(new_np),
                                         updates=merged,
                                         updates_new=new_np,
-                                        seq=rec.ingest_seq)
+                                        seq=seq_next)
                     fut._secondaries = [x for x in inners
                                         if x[0] != primary.host_id]
                     self._inflight.add(fut)
@@ -684,31 +964,43 @@ class CTCluster:
                     return fut
             if not self._rescue_saturated(sat_host):
                 raise err
+        raise err   # RetryPolicy attempts exhausted: honest backpressure
 
     def submit_query(self, name: str, points, **kw) -> ClusterFuture:
         """Route a point-evaluation batch to ``name``'s primary owner.
         Accepts the engine scheduling keywords (``deadline_ms=``,
         ``priority=``).  Queries are idempotent, so on host failure the
-        cluster resubmits this future to the new primary transparently."""
+        cluster resubmits this future to the new primary transparently.
+        Against a tenant still REPLAYING its WAL after a host restart,
+        the query serves the restored-snapshot state instead of waiting
+        for the replay; the returned future carries ``stale_seq`` (the
+        cluster committed seq of the state it reflects)."""
         kw.pop("block", None), kw.pop("timeout", None)
-        while True:
+        err: Optional[EngineSaturated] = None
+        for delay in self._retry.delays():
+            if delay:
+                time.sleep(delay)
             with self._lock:
                 rec = self._record(name)
                 primary = self._primary(rec)
                 try:
                     inner = primary.engine.submit_query(
-                        name, points, block=False, **kw)
+                        name, points, block=False,
+                        stale_ok=rec.recovering, **kw)
                 except EngineSaturated as e:
                     err = e
                 else:
                     fut = ClusterFuture(self, "query", name,
                                         primary.host_id, inner,
                                         points=points, query_kwargs=kw)
+                    if rec.recovering:
+                        fut.stale_seq = rec.stale_seq
                     self._inflight.add(fut)
                     self._counters["queries"] += 1
                     return fut
             if not self._rescue_saturated(primary):
                 raise err
+        raise err   # RetryPolicy attempts exhausted: honest backpressure
 
     def query(self, name: str, points) -> np.ndarray:
         return self.submit_query(name, points).result(_SYNC_TIMEOUT_S)
@@ -915,7 +1207,10 @@ class CTCluster:
         the replica-adoption vs recombination decision).  In-flight
         requests routed at the host are retried or resolved with
         ``HostFailed`` — never dropped.  Returns ``{tenant: outcome}``
-        (``"replica"``, ``"retained"``, ``"recombined"``)."""
+        (``"replica"``, ``"retained"``, ``"recombined"``, or — with a
+        durable store on the victim — ``"restored"``: the journaled
+        in-flight ingests were replayed from the WAL onto the new
+        owners instead of being dropped)."""
         with self._lock:
             host = self._hosts.get(host_id)
             if host is None or not host.alive:
@@ -940,6 +1235,10 @@ class CTCluster:
                 if fut._inner.done() and not fut._done:
                     self._finalize_from_inner_locked(fut)
             outcomes: Dict[str, str] = {}
+            #: (tenant, cluster seq) -> (new host, inner future) for the
+            #: WAL-replayed in-flight ingests: the sweep below retargets
+            #: the victim's futures at these instead of ``HostFailed``
+            replay_inner: Dict[Tuple[str, int], Tuple[str, CTFuture]] = {}
             for rec in self._records.values():
                 if host_id in rec.owners:
                     # one tenant's migration failing must not strand the
@@ -947,10 +1246,10 @@ class CTCluster:
                     # that would hang every future routed at this host
                     try:
                         outcomes[rec.name] = self._migrate_record(
-                            rec, host_id)
+                            rec, host_id, replay_inner)
                     except Exception as e:      # noqa: BLE001
                         outcomes[rec.name] = f"error: {e!r}"
-            retried = promoted = lost = 0
+            retried = promoted = lost = replayed = 0
             for fut in list(self._inflight):
                 if fut._done or fut._host_id != host_id:
                     continue
@@ -980,9 +1279,17 @@ class CTCluster:
                     live_sec = next(
                         ((hid, f) for hid, f in fut._secondaries
                          if self._hosts[hid].alive), None)
+                    replay_tgt = replay_inner.get((fut.name, fut._seq))
                     if live_sec is not None:
                         if fut._retarget_locked(*live_sec):
                             promoted += 1
+                    elif replay_tgt is not None:
+                        # the victim journaled this ingest at admission:
+                        # it was resubmitted from the WAL onto the new
+                        # owner — re-point the future at the replayed
+                        # acknowledgement instead of failing it
+                        if fut._retarget_locked(*replay_tgt):
+                            replayed += 1
                     else:
                         recombined = outcomes.get(fut.name) == "recombined"
                         fut._finalize_locked(error=HostFailed(
@@ -999,11 +1306,12 @@ class CTCluster:
             self._counters["retried_queries"] += retried
             self._counters["promoted_ingests"] += promoted
             self._counters["host_failed"] += lost
+            self._counters["replayed_ingests"] += replayed
             self._failovers.append({
                 "host": host_id, "reason": reason,
                 "tenants": len(outcomes), "outcomes": dict(outcomes),
                 "retried_queries": retried, "promoted_ingests": promoted,
-                "host_failed_ingests": lost,
+                "host_failed_ingests": lost, "replayed_ingests": replayed,
                 "recovery_ms": (time.monotonic() - t0) * 1e3,
             })
             return outcomes
@@ -1011,15 +1319,34 @@ class CTCluster:
     def _index_set(self, scheme: SchemeLike) -> set:
         return {tuple(ell) for ell, _ in scheme.grids}
 
-    def _migrate_record(self, rec: _TenantRecord, dead_hid: str) -> str:
+    def _migrate_record(self, rec: _TenantRecord, dead_hid: str,
+                        replay_inner: Optional[Dict[Tuple[str, int],
+                                               Tuple[str, CTFuture]]] = None
+                        ) -> str:
         """Move one tenant off a dead owner; caller holds the lock."""
         survivors = [o for o in rec.owners
                      if o != dead_hid and self._hosts[o].alive]
         outcome = "replica" if survivors else "retained"
+        pending: List[WALEntry] = []
         if not survivors:
-            # the only serving copy died: grids acked before the kill
-            # are retained; grids IN FLIGHT on the dead host are lost —
-            # drop them and recombine (Harding-style), coefficient-only
+            # with a durable victim, ingests IN FLIGHT on the dead host
+            # were journaled at admission: read everything newer than
+            # the cluster's committed seq back from its WAL and replay
+            # it onto the new owners below — no loss, no recombination
+            victim = self._hosts.get(dead_hid)
+            if victim is not None and victim.store is not None:
+                try:
+                    pending = victim.store.pending_after(
+                        rec.name, rec.committed_seq)
+                except (WALCorrupt, OSError):
+                    pending = []
+            if pending:
+                outcome = "restored"
+        if not survivors and not pending:
+            # the only serving copy died with nothing replayable: grids
+            # acked before the kill are retained; grids IN FLIGHT on the
+            # dead host are lost — drop them and recombine
+            # (Harding-style), coefficient-only
             lost = sorted({lvl for fut in self._inflight
                            if not fut._done and fut.kind == "ingest"
                            and fut.name == rec.name
@@ -1054,13 +1381,15 @@ class CTCluster:
                 host.engine.register(rec.name, rec.scheme, spec=hspec,
                                      plan=plan, surplus=surplus,
                                      deadline_ms=rec.deadline_ms,
-                                     priority=rec.priority)
+                                     priority=rec.priority,
+                                     tag=rec.committed_seq)
             else:
                 host.engine.register(rec.name, rec.scheme,
                                      rec.grids if rec.grids else None,
                                      spec=hspec, plan=plan,
                                      deadline_ms=rec.deadline_ms,
-                                     priority=rec.priority)
+                                     priority=rec.priority,
+                                     tag=rec.committed_seq)
         # drop serving copies on live ex-owners the ring walked past
         for hid in rec.owners:
             h = self._hosts.get(hid)
@@ -1072,7 +1401,205 @@ class CTCluster:
         rec.plan_spec = self._host_exec_spec(primary, rec.spec)
         if rec.plan is None or outcome != "recombined":
             rec.plan = primary.engine.plan(rec.name)
+        # replay the victim's journaled not-yet-committed ingests onto
+        # every new owner through the NORMAL ingest path (payloads are
+        # full merged dicts — last-writer-wins, so order is the WAL's);
+        # the primary's inner futures feed the fail_host retarget sweep
+        for e in pending:
+            inner: Optional[CTFuture] = None
+            for hid in new_owners:
+                host = self._hosts[hid]
+                try:
+                    f = host.engine.submit_ingest(
+                        rec.name, e.grids, block=False, tag=e.tag)
+                except Exception:       # noqa: BLE001 — best effort:
+                    continue            # an unreplayable entry degrades
+                if hid == new_owners[0]:
+                    inner = f
+            if replay_inner is not None and inner is not None \
+                    and e.tag is not None and e.tag >= 0:
+                replay_inner[(rec.name, int(e.tag))] = \
+                    (new_owners[0], inner)
         return outcome
+
+    def restart_host(self, host_id: str) -> Dict[str, str]:
+        """Bring a (failed or live) durable host back: rebuild its
+        engine over the SAME store, restore + rejoin + replay (the
+        module docstring's recovery state machine).  Returns
+        ``{tenant: outcome}`` with ``"restored"`` (served from the
+        host's own store) or ``"adopted"`` (the tenant advanced on
+        survivors during the outage and adopts back from a live donor).
+
+        Because the ring is rebuilt under the same seeded vnodes,
+        placement returns EXACTLY to the pre-failure assignment:
+        relocation is bounded to the restarted host's tenants in both
+        directions.  Tenants whose WAL replay is still pending after
+        the rejoin serve stale-marked queries (``ClusterFuture.
+        stale_seq``) until the replay — run as the last phase, outside
+        the cluster lock — catches them up."""
+        with self._lock:
+            host = self._hosts.get(host_id)
+            if host is None:
+                raise KeyError(f"no host {host_id!r} (hosts: "
+                               f"{sorted(self._hosts)})")
+            if host.store is None:
+                raise ValueError(
+                    f"restart_host({host_id!r}): host has no durable "
+                    f"store — build the cluster with durability_dir=")
+            alive = host.alive
+        if alive:
+            # a restart of a live host is an orderly handoff: normal
+            # failover first (replicas adopt, in-flights retarget), so
+            # the rebuild below starts from a quiesced host
+            try:
+                self.fail_host(host_id, reason="restart")
+            except HostFailed:
+                # last live host: nobody to hand off to — fail_host
+                # already marked it dead; recover purely from the store
+                pass
+        total_t0 = time.monotonic()
+        # -- phase 1: restore (NO cluster lock: compiles + store IO) ----
+        engine = CTEngine(host.spec, host_id=host_id,
+                          **self._engine_with_store_kwargs(host.store))
+        self._add_probe_tenant(engine)
+
+        def _spec_for(name: str) -> ExecSpec:
+            with self._lock:
+                rec = self._records.get(name)
+                tspec = rec.spec if rec is not None else self._default_spec
+            return self._host_exec_spec(host, tspec)
+
+        restored = engine.restore(host.store, specs=_spec_for,
+                                  replay=False)
+        restore_ms = (time.monotonic() - total_t0) * 1e3
+        if self._started:
+            # started BEFORE the rejoin so the health monitor sees a
+            # live heartbeat, not a fresh strike-out
+            engine.start()
+        # -- phase 2: rejoin the ring + freshness arbitration (locked) --
+        t1 = time.monotonic()
+        outcomes: Dict[str, str] = {}
+        marked: List[str] = []
+        with self._lock:
+            host.engine = engine
+            host.alive, host.killed, host.stalled = True, False, False
+            host.fail_reason = ""
+            self._health.forget(host_id)
+            # same seeded vnodes -> the pre-failure placement, exactly
+            self._ring = self._build_ring()
+            for fut in list(self._inflight):
+                if fut._inner.done() and not fut._done:
+                    self._finalize_from_inner_locked(fut)
+            for rec in self._records.values():
+                desired = self._ring.owners(rec.name, rec.replication)
+                info = restored.get(rec.name)
+                if host_id not in desired:
+                    # restored, but the (changed) ring no longer places
+                    # the tenant here: hand the state back
+                    if rec.name in engine:
+                        engine.unregister(rec.name)
+                    continue
+                fresh = (info is not None
+                         and info.tag >= rec.committed_seq)
+                if fresh:
+                    outcomes[rec.name] = "restored"
+                    if info.pending and desired[0] == host_id:
+                        # primary mid-replay: serve the snapshot state,
+                        # stale-marked, instead of blocking queries
+                        rec.recovering = True
+                        rec.stale_seq = max(info.snapshot_tag, 0)
+                        marked.append(rec.name)
+                else:
+                    # the tenant advanced on survivors during the
+                    # outage (or was registered during it): the store's
+                    # state is stale — drop it, adopt from a live donor
+                    outcomes[rec.name] = "adopted"
+                    if rec.name in engine:
+                        engine.unregister(rec.name)     # discards store
+                    donor = next(
+                        (self._hosts[o].engine for o in rec.owners
+                         if o != host_id and o in self._hosts
+                         and self._hosts[o].alive
+                         and rec.name in self._hosts[o].engine), None)
+                    hspec = self._host_exec_spec(host, rec.spec)
+                    plan = rec.plan if hspec == rec.plan_spec else None
+                    if donor is not None:
+                        engine.register(
+                            rec.name, rec.scheme, spec=hspec, plan=plan,
+                            surplus=donor._tenants[rec.name].surplus,
+                            deadline_ms=rec.deadline_ms,
+                            priority=rec.priority, tag=rec.committed_seq)
+                    else:
+                        engine.register(
+                            rec.name, rec.scheme,
+                            rec.grids if rec.grids else None, spec=hspec,
+                            plan=plan, deadline_ms=rec.deadline_ms,
+                            priority=rec.priority, tag=rec.committed_seq)
+                # live ex-owners the restored walk no longer reaches
+                for hid in rec.owners:
+                    h = self._hosts.get(hid)
+                    if h is not None and h.alive and hid not in desired \
+                            and hid != host_id and rec.name in h.engine:
+                        h.engine.unregister(rec.name)
+                rec.owners = desired
+                primary = self._hosts[desired[0]]
+                rec.plan_spec = self._host_exec_spec(primary, rec.spec)
+                rec.plan = primary.engine.plan(rec.name)
+            # futures still routed at this host (only possible when it
+            # was the LAST live host, so no failover swept them): re-
+            # point them at the rebuilt engine
+            for fut in list(self._inflight):
+                if fut._done or fut._host_id != host_id:
+                    continue
+                rec = self._records.get(fut.name)
+                if rec is None or host_id not in rec.owners:
+                    fut._finalize_locked(error=HostFailed(
+                        f"{fut.kind} for tenant {fut.name!r} could not "
+                        f"be re-routed after restarting {host_id!r}",
+                        host_id))
+                    self._inflight.discard(fut)
+                    continue
+                try:
+                    if fut.kind == "query":
+                        inner = engine.submit_query(
+                            fut.name, fut._points, block=False,
+                            stale_ok=rec.recovering, **fut._query_kwargs)
+                        if rec.recovering:
+                            fut.stale_seq = rec.stale_seq
+                    else:
+                        # resubmit the full retained payload under the
+                        # SAME cluster seq: idempotent against the WAL
+                        # replay of the journaled original (same
+                        # payload; newest engine seq wins)
+                        inner = engine.submit_ingest(
+                            fut.name, fut._updates, block=False,
+                            tag=fut._seq)
+                except Exception as e:          # noqa: BLE001
+                    fut._finalize_locked(error=e)
+                    self._inflight.discard(fut)
+                    continue
+                fut._retarget_locked(host_id, inner)
+        replace_ms = (time.monotonic() - t1) * 1e3
+        # -- phase 3: WAL replay (NO lock: device work), then unmark ----
+        t2 = time.monotonic()
+        replay_out = engine.replay()
+        replay_ms = (time.monotonic() - t2) * 1e3
+        with self._lock:
+            for name in marked:
+                rec = self._records.get(name)
+                if rec is not None:
+                    rec.recovering = False
+                    rec.stale_seq = None
+            self._restarts.append({
+                "host": host_id,
+                "tenants": len(outcomes), "outcomes": dict(outcomes),
+                "replayed": sum(r["replayed"] for r in
+                                replay_out.values()),
+                "restore_ms": restore_ms, "replace_ms": replace_ms,
+                "replay_ms": replay_ms,
+                "total_ms": (time.monotonic() - total_t0) * 1e3,
+            })
+        return outcomes
 
     def add_host(self, host_id: Optional[str] = None,
                  spec: Optional[ExecSpec] = None) -> str:
@@ -1084,10 +1611,12 @@ class CTCluster:
             if hid in self._hosts:
                 raise ValueError(f"host {hid!r} already exists")
             hspec = spec or ExecSpec()
-            ekw = {"check_finite": True}
-            engine = CTEngine(hspec, host_id=hid, **ekw)
+            store = self._make_store(hid)
+            engine = CTEngine(hspec, host_id=hid,
+                              **self._engine_with_store_kwargs(store))
             self._add_probe_tenant(engine)
-            self._hosts[hid] = _Host(host_id=hid, engine=engine, spec=hspec)
+            self._hosts[hid] = _Host(host_id=hid, engine=engine,
+                                     spec=hspec, store=store)
             self._ring = self._build_ring()
             started = self._started
         if started:
@@ -1116,7 +1645,8 @@ class CTCluster:
                 host.engine.register(name, rec.scheme, spec=hspec,
                                      plan=plan, surplus=surplus,
                                      deadline_ms=rec.deadline_ms,
-                                     priority=rec.priority)
+                                     priority=rec.priority,
+                                     tag=rec.committed_seq)
             for hid in rec.owners:
                 host = self._hosts.get(hid)
                 if host is not None and host.alive \
@@ -1132,14 +1662,19 @@ class CTCluster:
 
     def stats(self) -> Dict[str, Any]:
         """Cluster-wide serving statistics: per-host queue depth /
-        compile-cache / scheduler counters (each host's
+        compile-cache / scheduler / durability counters (each host's
         ``CTEngine.stats()``), the tenant placement map, ring
-        parameters, failover history and routing counters."""
+        parameters, failover + restart history and routing counters.
+        The whole tree is plain JSON types — ``json.dumps`` on it never
+        raises (the benchmark/CI upload contract)."""
         with self._lock:
             hosts = dict(self._hosts)
             records = dict(self._records)
             counters = dict(self._counters)
             failovers = list(self._failovers)
+            restarts = list(self._restarts)
+            recovering = sorted(n for n, r in records.items()
+                                if r.recovering)
             inflight = sum(1 for f in self._inflight if not f._done)
         per_host: Dict[str, Any] = {}
         for hid, host in hosts.items():
@@ -1158,16 +1693,20 @@ class CTCluster:
                 entry["scheduler"] = es["scheduler"]
                 entry["ingests"] = es["ingests"]
                 entry["eval"] = es["eval"]
+                entry["durability"] = es.get("durability")
             per_host[hid] = entry
-        return {
+        return _json_safe({
             "hosts": per_host,
             "live_hosts": sorted(h.host_id for h in hosts.values()
                                  if h.alive),
             "tenants": len(records),
             "placement": {n: list(r.owners) for n, r in records.items()},
+            "recovering": recovering,
             "replication": self.replication,
             "ring": {"vnodes": self.vnodes, "seed": self.seed},
+            "durability_dir": self._durability_dir,
             "inflight": inflight,
             "failovers": failovers,
+            "restarts": restarts,
             **counters,
-        }
+        })

@@ -1,0 +1,259 @@
+"""Chaos tier: seeded fault schedules (kill, restart, NaN-poison,
+crash-mid-snapshot, torn WAL append) driven against a small durable
+cluster under live load.  The two invariants every run must hold:
+
+* **zero lost acked ingests** — after the dust settles, each tenant
+  serves exactly the newest payload whose ingest future resolved
+  successfully (bit-identical to a never-crashed oracle engine), and
+* **zero hung futures** — every submitted future resolves, with a
+  value or a NAMED exception, never a hang.
+
+Deterministic by construction: schedules grow from an explicit seed,
+so any failure reproduces from the seed alone.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import CTEngine, clear_compile_cache
+from repro.core.levels import CombinationScheme, grid_shape
+from repro.runtime.cluster import (CTCluster, FaultEvent, FaultSchedule,
+                                   HostFailed)
+
+pytestmark = pytest.mark.chaos
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    clear_compile_cache()
+    yield
+
+
+SCHEME = CombinationScheme(2, 2)
+
+
+def _grids(seed):
+    rng = np.random.default_rng(seed)
+    return {ell: rng.standard_normal(grid_shape(ell))
+            for ell, _ in SCHEME.grids}
+
+
+def _payload(base, k):
+    """Distinct, recognisable payload for submission ``k``."""
+    return {ell: g * (1.0 + 0.01 * k) for ell, g in base.items()}
+
+
+# ---------------------------------------------------------------------------
+# Schedule generator: determinism + structural invariants
+# ---------------------------------------------------------------------------
+
+def test_fault_schedule_deterministic():
+    kw = dict(hosts=["h0", "h1", "h2"], tenants=["a", "b"],
+              duration_s=10.0, n_events=12)
+    a = FaultSchedule.seeded(123, **kw)
+    b = FaultSchedule.seeded(123, **kw)
+    assert a.events == b.events
+    c = FaultSchedule.seeded(124, **kw)
+    assert c.events != a.events
+
+
+def test_fault_schedule_structural_invariants():
+    """Every kill is paired with a restart of the same host; at most one
+    host is down at any time; all events land inside the fault window
+    (the tail of the run stays fault-free so recovery completes)."""
+    for seed in range(20):
+        sched = FaultSchedule.seeded(
+            seed, hosts=["h0", "h1", "h2", "h3"], tenants=["a", "b", "c"],
+            duration_s=10.0, n_events=10, restart_delay_s=1.0)
+        kills = [e for e in sched.events if e.kind == "kill"]
+        restarts = [e for e in sched.events if e.kind == "restart"]
+        assert len(kills) == len(restarts)
+        down_until = 0.0
+        for k in kills:
+            assert k.at_s >= down_until     # one outage at a time
+            r = next(r for r in restarts
+                     if r.target == k.target and r.at_s > k.at_s)
+            assert r.at_s == pytest.approx(k.at_s + 1.0)
+            down_until = r.at_s
+        for e in sched.events:
+            if e.kind != "restart":
+                assert 0.05 * 10.0 <= e.at_s <= 0.8 * 10.0
+        assert all(e.kind in FaultSchedule.KINDS + ("restart",)
+                   for e in sched.events)
+
+
+def test_fault_schedule_due_consumes_in_order():
+    sched = FaultSchedule([FaultEvent(1.0, "poison", "a"),
+                           FaultEvent(2.0, "poison", "b"),
+                           FaultEvent(3.0, "poison", "c")])
+    assert [e.target for e in sched.due(2.5)] == ["a", "b"]
+    assert sched.due(2.5) == []          # consumed, not re-delivered
+    assert not sched.exhausted
+    assert [e.target for e in sched.due(99.0)] == ["c"]
+    assert sched.exhausted
+
+
+def test_fault_schedule_apply_guards_skip_not_raise(tmp_path):
+    """Events that no longer apply are recorded in ``skipped``, never
+    raised: chaos runs must keep going."""
+    cl = CTCluster(1, durability_dir=str(tmp_path), seed=3)
+    cl.register("t", SCHEME, _grids(0))
+    sched = FaultSchedule([FaultEvent(0.0, "kill", "host0"),
+                           FaultEvent(0.0, "restart", "nonexistent"),
+                           FaultEvent(0.0, "bogus", "host0")])
+    for ev in sched.events:
+        assert sched.apply(cl, ev) is False
+    assert len(sched.skipped) == 3
+    assert sched.applied == []
+    # the guarded kill never fired: the only host still serves
+    assert cl.live_hosts() == ("host0",)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: R=1 kill -> restart -> bit-identity with the oracle
+# ---------------------------------------------------------------------------
+
+def test_r1_kill_restart_bit_identical_to_uncrashed_oracle(tmp_path):
+    """Kill an unreplicated tenant's only owner mid-stream, restart it
+    over the same store: placement returns exactly to pre-failure, and
+    answers are BIT-identical to a single never-crashed engine fed the
+    same acked ingests (snapshot + WAL replay, no approximation)."""
+    cl = CTCluster(3, replication=1, seed=7,
+                   durability_dir=str(tmp_path), snapshot_interval=3)
+    base = {n: _grids(i) for i, n in enumerate(["a", "b", "c", "d"])}
+    for n, g in base.items():
+        cl.register(n, SCHEME, g)
+    acked = {n: None for n in base}
+    for k in range(8):                   # spans a snapshot + WAL tail
+        for n in base:
+            p = _payload(base[n], k)
+            cl.submit_ingest(n, p, block=True).result(60)
+            acked[n] = p
+
+    victim = cl.owners_of("a")[0]
+    before = {n: cl.owners_of(n) for n in base}
+    cl.injector.kill(victim)
+    assert cl.check_health() == [victim]
+    outcomes = cl.restart_host(victim)
+    assert victim in cl.live_hosts()
+    # same seeded vnodes -> placement returns EXACTLY to pre-failure
+    assert {n: cl.owners_of(n) for n in base} == before
+    assert all(v in ("restored", "adopted") for v in outcomes.values())
+
+    pts = np.random.default_rng(5).random((24, 2))
+    for n, payload in acked.items():
+        oracle = CTEngine(host_id="oracle")
+        oracle.register(n, SCHEME, payload)
+        np.testing.assert_array_equal(cl.query(n, pts),
+                                      oracle.query(n, pts))
+    st = cl.stats()
+    assert st["restarts"] and st["restarts"][-1]["host"] == victim
+    assert st["restarts"][-1]["replayed"] >= 0
+
+
+def test_restart_replays_unreplicated_inflight_ingest(tmp_path):
+    """The durability upgrade to the failover story: an ingest in
+    flight on a dying R=1 owner — pre-durability a named ``HostFailed``
+    — is REPLAYED from the WAL onto the new owner and its future
+    resolves successfully.  Zero acked-or-admitted ingests lost."""
+    cl = CTCluster(2, replication=1, seed=7,
+                   durability_dir=str(tmp_path), snapshot_interval=100)
+    g = _grids(0)
+    cl.register("t", SCHEME, g)
+    victim = cl.owners_of("t")[0]
+    fut = cl.submit_ingest("t", _payload(g, 1))
+    cl.injector.kill(victim)
+    assert cl.check_health() == [victim]
+    fut.result(60)                       # replayed, not HostFailed
+    assert fut.retargeted >= 1
+
+    pts = np.random.default_rng(6).random((16, 2))
+    oracle = CTEngine(host_id="oracle")
+    oracle.register("t", SCHEME, _payload(g, 1))
+    np.testing.assert_array_equal(cl.query("t", pts),
+                                  oracle.query("t", pts))
+    assert cl.stats()["failovers"][-1]["outcomes"]["t"] == "restored"
+
+
+# ---------------------------------------------------------------------------
+# The full seeded chaos run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [101, 202])
+def test_seeded_chaos_run_no_lost_acks_no_hung_futures(tmp_path, seed):
+    """Drive a seeded fault schedule against a 3-host durable cluster
+    under live ingest+query load and assert the two chaos invariants."""
+    cl = CTCluster(3, replication=1, seed=13,
+                   durability_dir=str(tmp_path), snapshot_interval=4,
+                   monitor_interval_s=0.1)
+    tenants = ["a", "b", "c"]
+    base = {n: _grids(i) for i, n in enumerate(tenants)}
+    for n, g in base.items():
+        cl.register(n, SCHEME, g)
+    pts = np.random.default_rng(8).random((12, 2))
+
+    duration = 4.0
+    sched = FaultSchedule.seeded(
+        seed, hosts=list(cl.live_hosts()), tenants=tenants,
+        duration_s=duration, n_events=8, restart_delay_s=0.6)
+
+    futs = []        # (kind, tenant, k, future)
+    rejected = 0     # admission-time failures (torn WAL): named, not hung
+    cl.start()
+    try:
+        t0 = time.monotonic()
+        k = 0
+        while True:
+            elapsed = time.monotonic() - t0
+            for ev in sched.due(elapsed):
+                sched.apply(cl, ev)
+            if elapsed >= duration and sched.exhausted:
+                break
+            name = tenants[k % len(tenants)]
+            try:
+                futs.append(("ingest", name, k,
+                             cl.submit_ingest(name,
+                                              _payload(base[name], k))))
+            except Exception:            # torn-WAL admission failure
+                rejected += 1
+            try:
+                futs.append(("query", name, k, cl.submit_query(name, pts)))
+            except Exception:
+                rejected += 1
+            k += 1
+            time.sleep(0.04)
+    finally:
+        cl.stop()
+
+    # ---- invariant 1: zero hung futures ------------------------------
+    acked = {n: None for n in tenants}   # newest successfully acked k
+    deadline = time.monotonic() + 120.0
+    for kind, name, kk, f in futs:
+        try:
+            f.result(max(1.0, deadline - time.monotonic()))
+            if kind == "ingest":
+                if acked[name] is None or kk > acked[name]:
+                    acked[name] = kk
+        except (HostFailed, FloatingPointError):
+            pass                         # named resolution — not hung
+        assert f.done(), f"hung {kind} future for {name!r} (k={kk})"
+
+    # ---- invariant 2: zero lost acked ingests ------------------------
+    for n in tenants:
+        payload = (_payload(base[n], acked[n])
+                   if acked[n] is not None else base[n])
+        oracle = CTEngine(host_id="oracle")
+        oracle.register(n, SCHEME, payload)
+        got, want = cl.query(n, pts), oracle.query(n, pts)
+        assert np.array_equal(got, want), \
+            f"tenant {n!r}: acked ingest k={acked[n]} lost (seed {seed})"
+
+    # the run actually exercised faults (the schedule is non-trivial)
+    assert sched.exhausted
+    assert len(sched.applied) + len(sched.skipped) == len(sched.events)
+    st = cl.stats()
+    assert st["inflight"] == 0           # nothing left un-resolved
+    import json
+    json.dumps(st)                       # stats stay JSON-serializable

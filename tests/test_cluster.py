@@ -87,6 +87,48 @@ def test_ring_placement_deterministic_and_bounded_relocation(seed, n):
     assert all(grown.owners(k, 2) == r1.owners(k, 2) for k in keys)
 
 
+@pytest.mark.parametrize(
+    "seed,n", cases(lambda r: (seeds(r), integers(r, 3, 8)), n=10))
+def test_ring_remove_then_readd_restores_exact_placement(seed, n):
+    """The ``restart_host`` placement contract at the ring level: a host
+    that leaves and rejoins under the same seeded vnodes gets back
+    EXACTLY its pre-failure assignment, at every replication factor —
+    which is why a restarted host finds its own tenants in its own
+    durable store instead of pulling state across the network."""
+    hosts = [f"host{i}" for i in range(n)]
+    keys = [f"tenant-{k}" for k in range(150)]
+    before = HashRing(hosts, seed=seed)
+    readded = HashRing(list(hosts), seed=seed)   # leave + rejoin
+    for r in (1, 2, 3):
+        assert all(readded.owners(k, r) == before.owners(k, r)
+                   for k in keys)
+
+
+@pytest.mark.parametrize(
+    "seed,n", cases(lambda r: (seeds(r), integers(r, 3, 8)), n=10))
+def test_ring_relocation_bounded_in_both_directions(seed, n):
+    """Relocation is bounded by the victim's OWN tenants in both
+    directions: removal only reassigns keys whose owner walk crossed
+    the victim, and re-adding only reassigns keys that RETURN to the
+    victim — every other key's owner list is bit-for-bit unchanged."""
+    hosts = [f"host{i}" for i in range(n)]
+    keys = [f"tenant-{k}" for k in range(150)]
+    victim = hosts[-1]
+    full = HashRing(hosts, seed=seed)
+    shrunk = HashRing(hosts[:-1], seed=seed)
+    # removal: untouched owner walks stay identical
+    for k in keys:
+        if victim not in full.owners(k, 2):
+            assert shrunk.owners(k, 2) == full.owners(k, 2)
+    # re-add: the ONLY keys that move are the ones the victim reclaims,
+    # and each lands exactly on its pre-removal owner list
+    regrown = HashRing(hosts, seed=seed)
+    for k in keys:
+        if regrown.owners(k, 2) != shrunk.owners(k, 2):
+            assert victim in regrown.owners(k, 2)
+            assert regrown.owners(k, 2) == full.owners(k, 2)
+
+
 def test_cluster_restart_recomputes_identical_placement():
     """A rebuilt cluster (same host count, vnodes, seed) places every
     tenant on the same owners — placement is a pure function of the

@@ -1,0 +1,343 @@
+"""Durable tenant state: WAL roundtrip/rotation, torn vs corrupt
+records, crash-mid-snapshot fallback, the shared RetryPolicy, and the
+engine-level restore/replay bit-identity bar (a restored engine answers
+exactly like one that never crashed, fed the same acked ingests).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.engine import CTEngine
+from repro.core.levels import CombinationScheme, GeneralScheme, grid_shape
+from repro.runtime.durability import (DurableStore, RetryPolicy,
+                                      SnapshotCrashed, WALCorrupt, WALTorn,
+                                      scheme_from_json, scheme_to_json)
+
+SCHEME = CombinationScheme(2, 3)
+
+
+def _grids(seed, scheme=SCHEME):
+    rng = np.random.default_rng(seed)
+    return {ell: rng.standard_normal(grid_shape(ell))
+            for ell, _ in scheme.grids}
+
+
+@pytest.fixture
+def store(tmp_path):
+    return DurableStore(str(tmp_path), "hostA", fsync_every=2)
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy
+# ---------------------------------------------------------------------------
+
+def test_retry_policy_delay_shape():
+    """First attempt is free (0.0 delay), backoff grows geometrically
+    and saturates at max_delay_s; attempts bounds the total count."""
+    p = RetryPolicy(attempts=5, base_delay_s=0.01, max_delay_s=0.04,
+                    multiplier=2.0, jitter=0.0)
+    ds = list(p.delays())
+    assert len(ds) == 5
+    assert ds[0] == 0.0
+    assert ds[1:] == [0.01, 0.02, 0.04, 0.04]
+
+
+def test_retry_policy_jitter_deterministic_under_seeded_rng():
+    p = RetryPolicy(attempts=4, base_delay_s=0.01, jitter=0.5)
+    a = list(p.delays(np.random.default_rng(7)))
+    b = list(p.delays(np.random.default_rng(7)))
+    assert a == b
+    assert all(d >= 0.0 for d in a)
+
+
+def test_retry_policy_run_retries_then_raises():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        raise KeyError("nope")
+
+    p = RetryPolicy(attempts=3, base_delay_s=0.0)
+    with pytest.raises(KeyError):
+        p.run(flaky, retry_on=(KeyError,), sleep=False)
+    assert len(calls) == 3
+    # non-matching exceptions propagate on the FIRST attempt
+    calls.clear()
+    with pytest.raises(ValueError):
+        p.run(lambda: (_ for _ in ()).throw(ValueError("x")),
+              retry_on=(KeyError,), sleep=False)
+
+
+def test_retry_policy_validates_attempts():
+    with pytest.raises(ValueError):
+        RetryPolicy(attempts=0)
+
+
+# ---------------------------------------------------------------------------
+# Scheme (de)serialization
+# ---------------------------------------------------------------------------
+
+def test_scheme_json_roundtrip():
+    for scheme in (CombinationScheme(3, 4),
+                   GeneralScheme(dim=2, index_set=((1, 1), (2, 1), (1, 2)))):
+        back = scheme_from_json(scheme_to_json(scheme))
+        assert type(back) is type(scheme)
+        assert {tuple(e) for e, _ in back.grids} \
+            == {tuple(e) for e, _ in scheme.grids}
+
+
+# ---------------------------------------------------------------------------
+# WAL roundtrip, rotation, torn/corrupt records
+# ---------------------------------------------------------------------------
+
+def test_wal_roundtrip_bit_identical(store):
+    store.register("t", SCHEME)
+    payloads = {s: _grids(s) for s in (1, 2, 3)}
+    for seq, g in payloads.items():
+        store.append("t", seq, g, tag=seq * 10)
+    state = store.load("t")
+    assert [e.seq for e in state.entries] == [1, 2, 3]
+    assert [e.tag for e in state.entries] == [10, 20, 30]
+    for e in state.entries:
+        for ell, v in payloads[e.seq].items():
+            np.testing.assert_array_equal(e.grids[tuple(ell)], v)
+    assert state.max_seq == 3 and state.max_tag == 30
+
+
+def test_snapshot_rotates_and_prunes_wal(store, tmp_path):
+    store.register("t", SCHEME)
+    for seq in (1, 2, 3):
+        store.append("t", seq, _grids(seq), tag=seq)
+    surplus = np.arange(12.0)
+    store.snapshot("t", 3, surplus, tag=3, scheme=SCHEME)
+    store.append("t", 4, _grids(4), tag=4)
+    state = store.load("t")
+    # only entries NEWER than the snapshot replay
+    assert state.snapshot_seq == 3 and state.snapshot_tag == 3
+    np.testing.assert_array_equal(state.surplus, surplus)
+    assert [e.seq for e in state.entries] == [4]
+    # the covered segment was pruned, a fresh epoch is appending
+    segs = [fn for fn in os.listdir(store._dir("t"))
+            if fn.startswith("wal-")]
+    assert len(segs) == 1
+    assert store.stats()["rotations"] == 1
+
+
+def test_torn_tail_tolerated_mid_log_corruption_raises(store):
+    store.register("t", SCHEME)
+    for seq in (1, 2):
+        store.append("t", seq, _grids(seq), tag=seq)
+    store.flush("t")
+    seg = next(os.path.join(store._dir("t"), fn)
+               for fn in os.listdir(store._dir("t"))
+               if fn.startswith("wal-"))
+    # torn TAIL: cut the last record short -> tolerated, replay stops
+    data = open(seg, "rb").read()
+    with open(seg, "wb") as f:
+        f.write(data[:-7])
+    state = store.load("t")
+    assert [e.seq for e in state.entries] == [1]
+    assert any("torn" in ev for ev in state.events)
+    # mid-log corruption: flip a byte INSIDE record 1's payload (valid
+    # record 2 follows) -> WALCorrupt, never a silently wrong replay
+    with open(seg, "wb") as f:
+        bad = bytearray(data)
+        bad[40] ^= 0xFF
+        f.write(bad)
+    with pytest.raises(WALCorrupt):
+        store.load("t")
+
+
+def test_tear_next_append_seam(store):
+    store.register("t", SCHEME)
+    store.append("t", 1, _grids(1), tag=1)
+    store.tear_next_append()
+    with pytest.raises(WALTorn):
+        store.append("t", 2, _grids(2), tag=2)
+    # the torn record is a tolerated tail: seq 1 still replays
+    state = store.load("t")
+    assert [e.seq for e in state.entries] == [1]
+    # and the log keeps accepting appends after the injected crash
+    store.append("t", 2, _grids(2), tag=2)
+    assert [e.seq for e in store.load("t").entries] == [1, 2]
+
+
+def test_crash_mid_snapshot_previous_snapshot_survives(store):
+    store.register("t", SCHEME)
+    s1 = np.arange(4.0)
+    store.snapshot("t", 2, s1, tag=2, scheme=SCHEME)
+    store.append("t", 3, _grids(3), tag=3)
+    store.fail_next_snapshot()
+    with pytest.raises(SnapshotCrashed):
+        store.snapshot("t", 3, np.arange(8.0), tag=3, scheme=SCHEME)
+    state = store.load("t")
+    # restore sees the intact seq-2 snapshot, never the partial temp
+    assert state.snapshot_seq == 2
+    np.testing.assert_array_equal(state.surplus, s1)
+    assert [e.seq for e in state.entries] == [3]
+    assert store.stats()["snapshot_failures"] == 1
+
+
+def test_pending_after_filters_by_tag(store):
+    store.register("t", SCHEME)
+    for seq, tag in ((1, 5), (2, 6), (3, 7)):
+        store.append("t", seq, _grids(seq), tag=tag)
+    assert [e.tag for e in store.pending_after("t", 5)] == [6, 7]
+    assert store.pending_after("t", 7) == []
+    assert store.pending_after("missing", 0) == []
+
+
+def test_discard_drops_state(store):
+    store.register("t", SCHEME)
+    store.append("t", 1, _grids(1))
+    store.discard("t")
+    assert "t" not in store.tenants()
+    with pytest.raises(KeyError):
+        store.load("t")
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: journal at admission, snapshot on interval, restore
+# ---------------------------------------------------------------------------
+
+def _oracle(payloads):
+    e = CTEngine(host_id="oracle")
+    e.register("t", SCHEME, payloads[0])
+    for g in payloads[1:]:
+        e.update("t", g)
+    return e
+
+
+def test_engine_restore_bit_identical_to_never_crashed(tmp_path):
+    """The durability bar: kill an engine (drop it on the floor), build
+    a fresh one over the same store, restore — surplus AND query
+    answers are bit-identical to a never-crashed engine fed the same
+    acked ingests."""
+    store = DurableStore(str(tmp_path), "h0")
+    eng = CTEngine(host_id="h0", store=store, snapshot_interval=3)
+    payloads = [_grids(s) for s in range(8)]
+    eng.register("t", SCHEME, payloads[0])
+    for g in payloads[1:]:
+        eng.update("t", g)
+    # crash: the engine object is simply abandoned; the store survives
+    eng2 = CTEngine(host_id="h0", store=store, snapshot_interval=3)
+    info = eng2.restore(store)["t"]
+    assert info.snapshot_seq > 0          # interval snapshots happened
+    assert info.pending >= 1              # WAL tail replayed
+    assert info.replayed == info.pending
+    oracle = _oracle(payloads)
+    np.testing.assert_array_equal(np.asarray(eng2.surplus("t")),
+                                  np.asarray(oracle.surplus("t")))
+    pts = np.random.default_rng(3).random((17, 2))
+    np.testing.assert_array_equal(eng2.query("t", pts),
+                                  oracle.query("t", pts))
+
+
+def test_engine_restore_survives_crashed_snapshot(tmp_path):
+    store = DurableStore(str(tmp_path), "h0")
+    eng = CTEngine(host_id="h0", store=store, snapshot_interval=2)
+    payloads = [_grids(s) for s in range(5)]
+    eng.register("t", SCHEME, payloads[0])
+    eng.update("t", payloads[1])
+    store.fail_next_snapshot()            # next interval snapshot dies
+    for g in payloads[2:]:
+        eng.update("t", g)
+    eng2 = CTEngine(host_id="h0", store=store, snapshot_interval=2)
+    eng2.restore(store)
+    oracle = _oracle(payloads)
+    np.testing.assert_array_equal(np.asarray(eng2.surplus("t")),
+                                  np.asarray(oracle.surplus("t")))
+    # the crash was counted, not hidden
+    assert store.stats()["snapshot_failures"] == 1
+
+
+def test_engine_restore_replay_deferred_serves_stale_then_catches_up(
+        tmp_path):
+    """restore(replay=False): stale_ok queries serve the snapshot state
+    immediately; replay() then catches up to the full WAL tail."""
+    store = DurableStore(str(tmp_path), "h0")
+    eng = CTEngine(host_id="h0", store=store, snapshot_interval=3)
+    payloads = [_grids(s) for s in range(7)]
+    eng.register("t", SCHEME, payloads[0])
+    for g in payloads[1:]:
+        eng.update("t", g)
+    eng2 = CTEngine(host_id="h0", store=store, snapshot_interval=3)
+    info = eng2.restore(store, replay=False)["t"]
+    assert info.pending > 0 and info.replayed == 0
+    pts = np.random.default_rng(4).random((9, 2))
+    # snapshot-state oracle: the first snapshot_seq acked payloads
+    snap_oracle = _oracle(payloads[:info.snapshot_seq])
+    stale = eng2.submit_query("t", pts, stale_ok=True, block=True)
+    eng2.flush()
+    np.testing.assert_array_equal(stale.result(60.0),
+                                  snap_oracle.query("t", pts))
+    out = eng2.replay()["t"]
+    assert out["replayed"] == info.pending
+    np.testing.assert_array_equal(eng2.query("t", pts),
+                                  _oracle(payloads).query("t", pts))
+
+
+def test_engine_torn_append_fails_admission_nothing_acked_lost(tmp_path):
+    store = DurableStore(str(tmp_path), "h0")
+    eng = CTEngine(host_id="h0", store=store, snapshot_interval=100)
+    payloads = [_grids(s) for s in range(3)]
+    eng.register("t", SCHEME, payloads[0])
+    eng.update("t", payloads[1])
+    store.tear_next_append()
+    with pytest.raises(WALTorn):
+        eng.update("t", payloads[2])      # admission fails, NOT acked
+    # restore replays exactly the acked prefix
+    eng2 = CTEngine(host_id="h0", store=store, snapshot_interval=100)
+    eng2.restore(store)
+    oracle = _oracle(payloads[:2])
+    np.testing.assert_array_equal(np.asarray(eng2.surplus("t")),
+                                  np.asarray(oracle.surplus("t")))
+
+
+def test_engine_unregister_discards_durable_state(tmp_path):
+    store = DurableStore(str(tmp_path), "h0")
+    eng = CTEngine(host_id="h0", store=store)
+    eng.register("t", SCHEME, _grids(0))
+    assert "t" in store.tenants()
+    eng.unregister("t")
+    assert "t" not in store.tenants()
+    eng2 = CTEngine(host_id="h0", store=store)
+    assert eng2.restore(store) == {}
+
+
+def test_surrogate_store_passthrough_and_restore(tmp_path):
+    """``CTSurrogate(store=...)`` journals through its own engine and
+    ``CTSurrogate.restore`` rebuilds it bit-identically."""
+    from repro.launch.serve import CTSurrogate
+
+    store = DurableStore(str(tmp_path), "h0")
+    payloads = [_grids(s) for s in range(5)]
+    sur = CTSurrogate(SCHEME, payloads[0], store=store, snapshot_interval=2)
+    for g in payloads[1:]:
+        sur.update(g)
+    back = CTSurrogate.restore(store)
+    pts = np.random.default_rng(9).random((11, 2))
+    oracle = _oracle(payloads)
+    np.testing.assert_array_equal(back.query(pts), oracle.query("t", pts))
+    np.testing.assert_array_equal(np.asarray(back.surplus),
+                                  np.asarray(oracle.surplus("t")))
+    # store= composes only with the surrogate's OWN engine
+    with pytest.raises(ValueError, match="store="):
+        CTSurrogate(SCHEME, payloads[0], store=store,
+                    engine=CTEngine(host_id="x"))
+    with pytest.raises(KeyError):
+        CTSurrogate.restore(store, name="missing")
+
+
+def test_engine_stats_expose_durability(tmp_path):
+    store = DurableStore(str(tmp_path), "h0")
+    eng = CTEngine(host_id="h0", store=store, snapshot_interval=2)
+    eng.register("t", SCHEME, _grids(0))
+    eng.update("t", _grids(1))
+    d = eng.stats()["durability"]
+    assert d["snapshot_interval"] == 2
+    assert d["appends"] >= 2
+    # engines WITHOUT a store report None (the key is always present)
+    assert CTEngine(host_id="plain").stats()["durability"] is None
