@@ -1,0 +1,17 @@
+"""Static + runtime checkers for the repo's concurrency invariants.
+
+Layers (see ``README.md`` in this directory for the catalogue):
+
+* :mod:`repro.analysis.invariants` — machine-readable registry of
+  lock ranks, external call summaries, donation/bit-identity rules.
+* :mod:`repro.analysis.locklint` — AST static pass over ``src/repro``.
+* :mod:`repro.analysis.lockdep` — opt-in runtime lock-order
+  sanitizer (``REPRO_LOCKDEP=1``).
+* :mod:`repro.analysis.report` — JSON findings artifact.
+
+CLI: ``python -m repro.analysis [paths...]`` — exit 0 clean,
+1 violations, 2 internal error.
+
+Kept import-light on purpose: nothing here pulls in jax, so the
+linter and the lock seams stay usable from any context.
+"""

@@ -1,0 +1,53 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit codes are stable for pre-commit use:
+
+* 0 — clean (no unallowlisted violations)
+* 1 — violations found
+* 2 — internal error (parse failure, bad path, linter crash)
+
+``--json PATH`` writes the BENCH_analysis.json-style artifact;
+``--fail-on-violation`` is accepted for CI self-documentation
+(violations already exit 1 either way).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static lock-order/bit-identity invariant "
+                    "checker for src/repro.")
+    parser.add_argument(
+        "paths", nargs="*",
+        help="files or directories to lint (default: the whole "
+             "repro package)")
+    parser.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="write a BENCH_analysis.json-style findings artifact")
+    parser.add_argument(
+        "--fail-on-violation", action="store_true",
+        help="exit 1 when violations are found (the default; kept "
+             "explicit for CI readability)")
+    args = parser.parse_args(argv)
+
+    try:
+        from repro.analysis import locklint, report
+        findings, files = locklint.lint_paths(args.paths)
+        if args.json:
+            report.write_json(
+                report.build_report(findings, files), args.json)
+        print(report.render_console(findings, files))
+    except Exception:
+        traceback.print_exc()
+        return 2
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

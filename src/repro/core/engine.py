@@ -99,10 +99,15 @@ optional ``timeout=``).
 
 **Lock order.**  One engine lock (an ``RLock`` shared by the ``_work``
 and ``_space`` conditions) guards the registry, the queue, the
-watermarks and the counters.  The module-level locks (ingest-executable
-cache, ``build_plan`` cache, warn-once registry) are LEAVES: they are
-never held while taking an engine lock, and no device dispatch ever
-runs under ANY lock.
+watermarks and the counters.  The full rank order, the lock-class
+registry and every enforced rule live in
+``repro.analysis.invariants`` (checked statically by
+``python -m repro.analysis`` and at runtime under ``REPRO_LOCKDEP=1``);
+the short version: engine(20) sits between cluster(10) and the
+module-level cache locks (ingest-executable cache, ``build_plan``
+cache, warn-once registry), which are LEAVES — never held while
+taking an engine lock — and no device dispatch ever runs under ANY
+lock.
 
 CTEngine serving model
 ----------------------
@@ -178,6 +183,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.analysis import lockdep as _lockdep
 
 from repro.core.executor import (ExecutorPlan, MergeConfig, ShardedPlan,
                                  _assemble_members, _check_nodal_grids,
@@ -396,7 +403,7 @@ def plan_signature(plan, spec: ExecSpec) -> Tuple:
 _INGEST_EXECUTABLES: "collections.OrderedDict[Tuple, Callable]" = \
     collections.OrderedDict()
 _INGEST_CACHE_MAX = 64
-_INGEST_CACHE_LOCK = threading.Lock()
+_INGEST_CACHE_LOCK = _lockdep.make_lock("ingest-cache")
 
 
 def clear_compile_cache() -> None:
@@ -540,7 +547,7 @@ _DRAIN_TIMEOUT_S = 120.0
 # ---------------------------------------------------------------------------
 
 _SHARED_POOL: Optional[ThreadPoolExecutor] = None
-_SHARED_POOL_LOCK = threading.Lock()
+_SHARED_POOL_LOCK = _lockdep.make_lock("shared-pool")
 
 
 def _shared_pool() -> ThreadPoolExecutor:
@@ -763,7 +770,7 @@ class CTEngine:
         #: error messages, stats); None = a standalone engine
         self.host_id = host_id
         self._last_pump = time.monotonic()
-        self._lock = threading.RLock()
+        self._lock = _lockdep.make_rlock("engine")
         self._work = threading.Condition(self._lock)    # new work / progress
         self._space = threading.Condition(self._lock)   # queue has room
         self._work_seq = 0          # bumped on every submit/progress event
@@ -865,6 +872,7 @@ class CTEngine:
                         # journal at admission: a crash after this append
                         # replays the initial ingest; a crash during it
                         # fails the registration (nothing was admitted)
+                        # ctlint: ok(block-under-lock): journal order must equal admission order (PR 9)
                         self._store.append(name, seq0, nodal_grids,
                                            tag=tag)
                     except Exception:
@@ -998,6 +1006,7 @@ class CTEngine:
                 f"copies")
 
     def _dispatch_ingest(self, tenant: _Tenant, nodal_grids) -> jnp.ndarray:
+        _lockdep.note_dispatch("engine._dispatch_ingest")
         base = tenant.base_plan
         _check_nodal_grids(nodal_grids, base)
         parts = tuple(jnp.asarray(nodal_grids[ell])
@@ -1011,7 +1020,7 @@ class CTEngine:
         return f"engine[{self.host_id}]" if self.host_id else "engine"
 
     def _admit(self, block: bool, timeout: Optional[float],
-               name: str) -> None:
+               name: str) -> None:  # ctlint: holds(engine)
         """Bounded-queue admission control; caller holds the lock.  The
         rejection names the tenant and the live queue state — the
         actionable line a cluster operator greps for."""
@@ -1071,6 +1080,9 @@ class CTEngine:
             self._ingest_submitted[name] = seq
             if self._store is not None:
                 try:
+                    # an append outside the lock could ack seq N+1
+                    # before N is on disk, so this one stays under it
+                    # ctlint: ok(block-under-lock): journal order must equal admission order (PR 9)
                     self._store.append(name, seq, nodal_grids, tag=tag)
                 except Exception:
                     self._ingest_submitted[name] = seq - 1
@@ -1266,7 +1278,7 @@ class CTEngine:
                     delay = min(delay, next_wake - time.monotonic())
                 self._work.wait(max(delay, 0.001))
 
-    def _take_due(self, now: float) -> Tuple[List[_Request],
+    def _take_due(self, now: float) -> Tuple[List[_Request],  # ctlint: holds(engine)
                                              Optional[float]]:
         """Pull the due requests off the queue; caller holds the lock.
         Ingests and probes are always due (the pool overlaps ingests
@@ -1545,6 +1557,8 @@ class CTEngine:
         deadline first, chunked to ``max_batch``.  Runs OUTSIDE the
         engine lock (device dispatch never holds locks); counters update
         under the lock afterwards."""
+        _lockdep.note_dispatch("engine._dispatch_query_groups")
+
         def group_rank(item):
             entries = item[1]
             return (-max(r.priority for r, _, _ in entries),

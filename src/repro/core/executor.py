@@ -95,6 +95,8 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import lockdep as _lockdep
+
 from repro.core.levels import (LevelVector, SchemeLike, canonical_levels,
                                fine_levels, grid_shape)
 from repro.kernels.hierarchize import (batched_method, dehierarchize_batched,
@@ -122,7 +124,7 @@ __all__ = ["ExecutorPlan", "Bucket", "ShardedPlan", "SlabBucket",
 #: set and warned twice, breaking the warn-once contract).  Tests reset
 #: via ``repro.core.engine.reset_deprecation_warnings``.
 _WARNED_LEGACY: set = set()
-_WARNED_LEGACY_LOCK = threading.Lock()
+_WARNED_LEGACY_LOCK = _lockdep.make_lock("warn-once")
 
 
 def reset_legacy_warnings() -> None:
@@ -704,7 +706,7 @@ class _PlanCache:
 
     def __init__(self, maxsize: int):
         self._data: "collections.OrderedDict" = collections.OrderedDict()
-        self._lock = threading.Lock()
+        self._lock = _lockdep.make_lock("plan-cache")
         self._maxsize = maxsize
 
     def get(self, key):

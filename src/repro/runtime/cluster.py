@@ -67,7 +67,12 @@ One cluster ``RLock`` guards the host table, the ring, the tenant
 records, and the in-flight set.  Lock ORDER is strictly
 ``cluster -> engine``: the cluster calls into engines while holding its
 lock (registration, routing, failover), and an engine NEVER calls into
-the cluster — so the pair cannot deadlock.  Every engine submit made
+the cluster — so the pair cannot deadlock.  (The complete rank order
+and rule catalogue is ``repro.analysis.invariants``, enforced by the
+``repro.analysis`` linter and the ``REPRO_LOCKDEP=1`` runtime
+sanitizer; the intentional control-plane barriers below carry
+``# ctlint: ok(...)`` pragmas and ``lockdep.allowed_dispatch``
+sections.)  Every engine submit made
 under the cluster lock is NON-BLOCKING (``block=False``): a blocking
 admission wait on a host whose scheduler just died would hold the
 cluster lock forever and wedge the monitor out of the very failover
@@ -144,6 +149,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis import lockdep as _lockdep
 from repro.core.engine import (CTEngine, CTFuture, EngineSaturated,
                                ExecSpec)
 from repro.core.levels import CombinationScheme, SchemeLike, grid_shape
@@ -327,7 +333,7 @@ class ClusterFuture:
         #: stamp ``done_at`` from the WRONG inner.  Lock order is
         #: strictly ``cluster -> future`` and nothing is called while
         #: holding it, so it cannot deadlock.
-        self._flock = threading.Lock()
+        self._flock = _lockdep.make_lock("future")
 
     # -- state transitions (cluster lock held by callers in CTCluster; the
     #    per-future lock serializes them against each other regardless) ----
@@ -637,8 +643,12 @@ class CTCluster:
         self.vnodes, self.seed = vnodes, seed
         self._health = HostHealthTracker(cfg=health or HostHealthConfig())
         self._monitor_interval_s = monitor_interval_s
-        self._lock = threading.RLock()
+        self._lock = _lockdep.make_rlock("cluster")
         self._hosts: Dict[str, _Host] = {}
+        #: host ids reserved by an in-flight add_host (engine build +
+        #: probe warmup run OFF the cluster lock; the id must not be
+        #: handed out twice meanwhile)
+        self._joining: set = set()
         self._records: Dict[str, _TenantRecord] = {}
         self._inflight: set = set()
         self._failovers: List[Dict[str, Any]] = []
@@ -852,15 +862,17 @@ class CTCluster:
                                 replication=r, owners=owners,
                                 grids=grids_np, deadline_ms=deadline_ms,
                                 priority=priority)
-            for hid in owners:
-                host = self._hosts[hid]
-                hspec = self._host_exec_spec(host, tspec)
-                # tag 0 = the tenant's initial state (committed_seq 0):
-                # durable hosts journal the admission under it
-                host.engine.register(
-                    name, scheme, grids_np if nodal_grids is not None
-                    else None, spec=hspec, deadline_ms=deadline_ms,
-                    priority=priority, tag=0)
+            with _lockdep.allowed_dispatch("admission barrier"):
+                for hid in owners:
+                    host = self._hosts[hid]
+                    hspec = self._host_exec_spec(host, tspec)
+                    # tag 0 = the tenant's initial state (committed_seq
+                    # 0): durable hosts journal the admission under it
+                    # ctlint: ok(block-under-lock): admission barrier — the tenant must be live on every owner before register() returns (PR 7)
+                    host.engine.register(
+                        name, scheme, grids_np if nodal_grids is not None
+                        else None, spec=hspec, deadline_ms=deadline_ms,
+                        priority=priority, tag=0)
             primary = self._hosts[owners[0]]
             rec.plan = primary.engine.plan(name)
             rec.plan_spec = self._host_exec_spec(primary, tspec)
@@ -868,13 +880,22 @@ class CTCluster:
         return self
 
     def unregister(self, name: str) -> None:
+        """Remove a tenant: drop the routing record under the lock,
+        then tear the engines down WITHOUT it — engine unregister
+        frees device buffers and discards the durable store (disk
+        IO), and holding the cluster lock across that stalls serving
+        traffic for every other tenant.  Once the record is gone no
+        new work routes to the tenant; a concurrent re-register of
+        the same name may observe the teardown in progress and raise
+        from the engine, like any other admin-plane race."""
         with self._lock:
             rec = self._record(name)
-            for hid in rec.owners:
-                host = self._hosts.get(hid)
-                if host is not None and rec.name in host.engine:
-                    host.engine.unregister(name)
+            targets = [self._hosts[hid] for hid in rec.owners
+                       if self._hosts.get(hid) is not None]
             del self._records[name]
+        for host in targets:
+            if name in host.engine:
+                host.engine.unregister(name)
 
     # -- routed submission --------------------------------------------------
 
@@ -1027,10 +1048,12 @@ class CTCluster:
             merged = dict(rec.grids)
             merged.update(new_np)
             primary = self._primary(rec)
-            for hid in rec.owners:
-                host = self._hosts.get(hid)
-                if host is not None and host.alive:
-                    host.engine.refit(name, scheme, merged)
+            with _lockdep.allowed_dispatch("scheme-swap barrier"):
+                for hid in rec.owners:
+                    host = self._hosts.get(hid)
+                    if host is not None and host.alive:
+                        # ctlint: ok(block-under-lock): scheme-swap barrier — serving must not observe half-refitted owners (PR 7)
+                        host.engine.refit(name, scheme, merged)
             rec.scheme = scheme
             rec.grids = merged
             rec.plan = primary.engine.plan(name)
@@ -1048,10 +1071,12 @@ class CTCluster:
                 merged.update({tuple(ell): np.asarray(v)
                                for ell, v in nodal_grids.items()})
             primary = self._primary(rec)
-            for hid in rec.owners:
-                host = self._hosts.get(hid)
-                if host is not None and host.alive:
-                    host.engine.drop_grid(name, failed, merged)
+            with _lockdep.allowed_dispatch("recombination barrier"):
+                for hid in rec.owners:
+                    host = self._hosts.get(hid)
+                    if host is not None and host.alive:
+                        # ctlint: ok(block-under-lock): recombination barrier — all owners drop the failed grids atomically (PR 7)
+                        host.engine.drop_grid(name, failed, merged)
             rec.scheme = primary.engine.scheme(name)
             rec.plan = primary.engine.plan(name)
             rec.grids = merged
@@ -1066,11 +1091,12 @@ class CTCluster:
         with self._lock:
             self._finalize_from_inner_locked(fut)
 
-    def _finalize_from_inner_locked(self, fut: ClusterFuture) -> None:
+    def _finalize_from_inner_locked(self, fut: ClusterFuture) -> None:  # ctlint: holds(cluster)
         if fut._done or not fut._inner.done():
             return
         err = fut._inner.error()
         if err is None:
+            # ctlint: ok(block-under-lock): guarded by done() above — result() returns immediately
             fut._finalize_locked(value=fut._inner.result())
             if fut.kind == "ingest":
                 rec = self._records.get(fut.name)
@@ -1322,7 +1348,7 @@ class CTCluster:
     def _migrate_record(self, rec: _TenantRecord, dead_hid: str,
                         replay_inner: Optional[Dict[Tuple[str, int],
                                                Tuple[str, CTFuture]]] = None
-                        ) -> str:
+                        ) -> str:  # ctlint: holds(cluster)
         """Move one tenant off a dead owner; caller holds the lock."""
         survivors = [o for o in rec.owners
                      if o != dead_hid and self._hosts[o].alive]
@@ -1336,6 +1362,7 @@ class CTCluster:
             victim = self._hosts.get(dead_hid)
             if victim is not None and victim.store is not None:
                 try:
+                    # ctlint: ok(block-under-lock): failover WAL read — the tenant is already stopped for the world (PR 9)
                     pending = victim.store.pending_after(
                         rec.name, rec.committed_seq)
                 except (WALCorrupt, OSError):
@@ -1370,31 +1397,35 @@ class CTCluster:
                     outcome = "recombined"
         new_owners = self._ring.owners(rec.name, rec.replication)
         donor = self._hosts[survivors[0]].engine if survivors else None
-        for hid in new_owners:
-            host = self._hosts[hid]
-            if rec.name in host.engine:
-                continue
-            hspec = self._host_exec_spec(host, rec.spec)
-            plan = rec.plan if hspec == rec.plan_spec else None
-            if donor is not None:
-                surplus = donor._tenants[rec.name].surplus
-                host.engine.register(rec.name, rec.scheme, spec=hspec,
-                                     plan=plan, surplus=surplus,
-                                     deadline_ms=rec.deadline_ms,
-                                     priority=rec.priority,
-                                     tag=rec.committed_seq)
-            else:
-                host.engine.register(rec.name, rec.scheme,
-                                     rec.grids if rec.grids else None,
-                                     spec=hspec, plan=plan,
-                                     deadline_ms=rec.deadline_ms,
-                                     priority=rec.priority,
-                                     tag=rec.committed_seq)
+        with _lockdep.allowed_dispatch("failover barrier"):
+            for hid in new_owners:
+                host = self._hosts[hid]
+                if rec.name in host.engine:
+                    continue
+                hspec = self._host_exec_spec(host, rec.spec)
+                plan = rec.plan if hspec == rec.plan_spec else None
+                if donor is not None:
+                    surplus = donor._tenants[rec.name].surplus
+                    # ctlint: ok(block-under-lock): failover barrier — serving resumes only once the tenant lives on its new owners (PR 7)
+                    host.engine.register(rec.name, rec.scheme, spec=hspec,
+                                         plan=plan, surplus=surplus,
+                                         deadline_ms=rec.deadline_ms,
+                                         priority=rec.priority,
+                                         tag=rec.committed_seq)
+                else:
+                    # ctlint: ok(block-under-lock): failover barrier — serving resumes only once the tenant lives on its new owners (PR 7)
+                    host.engine.register(rec.name, rec.scheme,
+                                         rec.grids if rec.grids else None,
+                                         spec=hspec, plan=plan,
+                                         deadline_ms=rec.deadline_ms,
+                                         priority=rec.priority,
+                                         tag=rec.committed_seq)
         # drop serving copies on live ex-owners the ring walked past
         for hid in rec.owners:
             h = self._hosts.get(hid)
             if h is not None and h.alive and hid not in new_owners \
                     and rec.name in h.engine:
+                # ctlint: ok(block-under-lock): failover barrier — ex-owners drop their copy before placement commits (PR 7)
                 h.engine.unregister(rec.name)
         rec.owners = new_owners
         primary = self._hosts[new_owners[0]]
@@ -1497,6 +1528,7 @@ class CTCluster:
                     # restored, but the (changed) ring no longer places
                     # the tenant here: hand the state back
                     if rec.name in engine:
+                        # ctlint: ok(block-under-lock): restart phase 2 — the rejoining host is not serving yet (PR 9)
                         engine.unregister(rec.name)
                     continue
                 fresh = (info is not None
@@ -1515,6 +1547,7 @@ class CTCluster:
                     # state is stale — drop it, adopt from a live donor
                     outcomes[rec.name] = "adopted"
                     if rec.name in engine:
+                        # ctlint: ok(block-under-lock): restart phase 2 — stale store must be discarded before adoption (PR 9)
                         engine.unregister(rec.name)     # discards store
                     donor = next(
                         (self._hosts[o].engine for o in rec.owners
@@ -1523,23 +1556,31 @@ class CTCluster:
                          and rec.name in self._hosts[o].engine), None)
                     hspec = self._host_exec_spec(host, rec.spec)
                     plan = rec.plan if hspec == rec.plan_spec else None
-                    if donor is not None:
-                        engine.register(
-                            rec.name, rec.scheme, spec=hspec, plan=plan,
-                            surplus=donor._tenants[rec.name].surplus,
-                            deadline_ms=rec.deadline_ms,
-                            priority=rec.priority, tag=rec.committed_seq)
-                    else:
-                        engine.register(
-                            rec.name, rec.scheme,
-                            rec.grids if rec.grids else None, spec=hspec,
-                            plan=plan, deadline_ms=rec.deadline_ms,
-                            priority=rec.priority, tag=rec.committed_seq)
+                    with _lockdep.allowed_dispatch("restart adopt"):
+                        if donor is not None:
+                            # ctlint: ok(block-under-lock): restart phase 2 — adopt-from-donor must commit before the ring serves this host (PR 9)
+                            engine.register(
+                                rec.name, rec.scheme, spec=hspec,
+                                plan=plan,
+                                surplus=donor._tenants[rec.name].surplus,
+                                deadline_ms=rec.deadline_ms,
+                                priority=rec.priority,
+                                tag=rec.committed_seq)
+                        else:
+                            # ctlint: ok(block-under-lock): restart phase 2 — adopt-from-record must commit before the ring serves this host (PR 9)
+                            engine.register(
+                                rec.name, rec.scheme,
+                                rec.grids if rec.grids else None,
+                                spec=hspec, plan=plan,
+                                deadline_ms=rec.deadline_ms,
+                                priority=rec.priority,
+                                tag=rec.committed_seq)
                 # live ex-owners the restored walk no longer reaches
                 for hid in rec.owners:
                     h = self._hosts.get(hid)
                     if h is not None and h.alive and hid not in desired \
                             and hid != host_id and rec.name in h.engine:
+                        # ctlint: ok(block-under-lock): restart phase 2 — ex-owners drop their copy before placement commits (PR 9)
                         h.engine.unregister(rec.name)
                 rec.owners = desired
                 primary = self._hosts[desired[0]]
@@ -1604,23 +1645,35 @@ class CTCluster:
     def add_host(self, host_id: Optional[str] = None,
                  spec: Optional[ExecSpec] = None) -> str:
         """Join a fresh host and rebalance tenant placement onto the new
-        ring (``repro.runtime.elastic.rebalance_cluster``)."""
+        ring (``repro.runtime.elastic.rebalance_cluster``).
+
+        The engine build and probe-tenant warmup (an XLA compile plus a
+        dispatch) run OUTSIDE the cluster lock — holding it across a
+        compile stalls serving traffic for every tenant; the lock only
+        reserves the host id and later publishes the ready host."""
         from repro.runtime.elastic import rebalance_cluster
         with self._lock:
-            hid = host_id or f"host{len(self._hosts)}"
-            if hid in self._hosts:
+            hid = host_id or \
+                f"host{len(self._hosts) + len(self._joining)}"
+            if hid in self._hosts or hid in self._joining:
                 raise ValueError(f"host {hid!r} already exists")
+            self._joining.add(hid)
             hspec = spec or ExecSpec()
+            started = self._started
+        try:
             store = self._make_store(hid)
             engine = CTEngine(hspec, host_id=hid,
                               **self._engine_with_store_kwargs(store))
             self._add_probe_tenant(engine)
-            self._hosts[hid] = _Host(host_id=hid, engine=engine,
-                                     spec=hspec, store=store)
-            self._ring = self._build_ring()
-            started = self._started
-        if started:
-            engine.start()
+            if started:
+                engine.start()
+            with self._lock:
+                self._hosts[hid] = _Host(host_id=hid, engine=engine,
+                                         spec=hspec, store=store)
+                self._ring = self._build_ring()
+        finally:
+            with self._lock:
+                self._joining.discard(hid)
         rebalance_cluster(self)
         return hid
 
@@ -1636,21 +1689,24 @@ class CTCluster:
                 return "kept"
             donor = self._primary(rec).engine
             surplus = donor._tenants[name].surplus
-            for hid in desired:
-                host = self._hosts[hid]
-                if name in host.engine:
-                    continue
-                hspec = self._host_exec_spec(host, rec.spec)
-                plan = rec.plan if hspec == rec.plan_spec else None
-                host.engine.register(name, rec.scheme, spec=hspec,
-                                     plan=plan, surplus=surplus,
-                                     deadline_ms=rec.deadline_ms,
-                                     priority=rec.priority,
-                                     tag=rec.committed_seq)
+            with _lockdep.allowed_dispatch("rebalance barrier"):
+                for hid in desired:
+                    host = self._hosts[hid]
+                    if name in host.engine:
+                        continue
+                    hspec = self._host_exec_spec(host, rec.spec)
+                    plan = rec.plan if hspec == rec.plan_spec else None
+                    # ctlint: ok(block-under-lock): rebalance barrier — new owners adopt before placement commits (PR 7)
+                    host.engine.register(name, rec.scheme, spec=hspec,
+                                         plan=plan, surplus=surplus,
+                                         deadline_ms=rec.deadline_ms,
+                                         priority=rec.priority,
+                                         tag=rec.committed_seq)
             for hid in rec.owners:
                 host = self._hosts.get(hid)
                 if host is not None and host.alive \
                         and hid not in desired and name in host.engine:
+                    # ctlint: ok(block-under-lock): rebalance barrier — ex-owners drop their copy before placement commits (PR 7)
                     host.engine.unregister(name)
             rec.owners = desired
             primary = self._hosts[desired[0]]

@@ -63,6 +63,7 @@ from typing import (Any, Callable, Dict, Iterable, List, Optional, Sequence,
 
 import numpy as np
 
+from repro.analysis import lockdep as _lockdep
 from repro.checkpoint.checkpoint import (CheckpointCorrupt, latest_step,
                                          list_steps, restore_checkpoint,
                                          save_checkpoint)
@@ -278,7 +279,7 @@ class DurableStore:
         self.host_id = host_id
         self.fsync_every = fsync_every
         os.makedirs(self.root, exist_ok=True)
-        self._lock = threading.RLock()
+        self._lock = _lockdep.make_rlock("store")
         self._logs: Dict[str, _TenantLog] = {}
         self._counters = {"appends": 0, "fsyncs": 0, "snapshots": 0,
                           "rotations": 0, "replayed": 0,

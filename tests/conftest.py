@@ -46,3 +46,21 @@ def pytest_collection_modifyitems(config, items):
     for item in items:
         if "multidevice" in item.keywords:
             item.add_marker(skip)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _lockdep_session_gate():
+    """With ``REPRO_LOCKDEP=1`` every tier doubles as a lock-order
+    sanitizer run: any cycle / rank regression / held-across-dispatch
+    recorded across the whole session fails it here.  Tests that
+    provoke violations on purpose (``tests/test_lockdep.py``) force-
+    enable via ``lockdep.enable()`` and reset before returning, so
+    they do not trip this gate."""
+    from repro.analysis import lockdep
+    yield
+    if not lockdep.enabled_by_env():
+        return
+    bad = lockdep.violations()
+    assert not bad, (
+        "lockdep recorded %d lock-order violation(s) during this "
+        "session:\n%s" % (len(bad), "\n".join(map(repr, bad[:20]))))

@@ -307,6 +307,69 @@ def test_unregister_and_saturated_routing_errors_are_named():
         cl.query("t0", np.zeros((1, 3)))
 
 
+def test_unregister_tears_engines_down_outside_the_cluster_lock():
+    """Pinned regression (repro.analysis block-under-lock finding):
+    engine unregister frees device buffers and discards the durable
+    store — disk IO that must NOT run under the cluster lock, or a
+    slow teardown stalls serving traffic for every other tenant.  The
+    routing record disappears under the lock; the engine teardown
+    happens after it is released."""
+    cl = _cluster_with_tenants(2)
+    owners = list(cl._records["t0"].owners)
+    lock_owned_during_teardown = []
+    for hid in owners:
+        eng = cl._hosts[hid].engine
+        orig = eng.unregister
+
+        def spy(name, _orig=orig):
+            lock_owned_during_teardown.append(cl._lock._is_owned())
+            return _orig(name)
+
+        eng.unregister = spy
+    cl.unregister("t0")
+    assert len(lock_owned_during_teardown) == len(owners)
+    assert not any(lock_owned_during_teardown)
+    assert "t0" not in cl.names()
+    for hid in owners:
+        assert "t0" not in cl._hosts[hid].engine
+    # the survivor keeps serving
+    r = cl.query("t1", np.random.default_rng(3).random((4, 3)))
+    assert np.asarray(r).shape == (4,)
+
+
+def test_add_host_warms_probe_outside_the_cluster_lock():
+    """Pinned regression (repro.analysis dispatch-under-lock finding,
+    caught live by the REPRO_LOCKDEP=1 cluster tier): ``add_host``
+    registered + warmed the probe tenant — an XLA compile plus a
+    device dispatch — while holding the cluster lock, stalling every
+    tenant's serving traffic for the duration of the compile.  The
+    lock now only reserves the host id and publishes the ready host;
+    the probe warmup runs in between, lock-free."""
+    from repro.runtime.cluster import CTCluster
+    cl = _cluster_with_tenants(2)
+    lock_owned_during_warmup = []
+    orig = CTCluster._add_probe_tenant
+
+    def spy(self, engine):
+        lock_owned_during_warmup.append(self._lock._is_owned())
+        return orig(self, engine)
+
+    CTCluster._add_probe_tenant = spy
+    try:
+        hid = cl.add_host()
+    finally:
+        CTCluster._add_probe_tenant = orig
+    assert lock_owned_during_warmup == [False]
+    assert hid in cl._hosts
+    assert not cl._joining
+    # the new host is live and placement stays correct
+    pts = np.random.default_rng(5).random((4, 3))
+    for n in cl.names():
+        assert np.asarray(cl.query(n, pts)).shape == (4,)
+    with pytest.raises(ValueError):
+        cl.add_host(hid)
+
+
 def test_surrogate_rides_the_cluster_unchanged():
     """``CTSurrogate(cluster=)``: the one-tenant convenience API routes
     through placement/health/failover with identical answers."""

@@ -1,0 +1,253 @@
+"""Self-tests for the runtime lock-order sanitizer.
+
+The sanitizer must (a) deterministically flag a synthetic A->B/B->A
+ordering cycle without needing the deadlock interleaving to happen,
+(b) flag rank regressions against the registry, and (c) — the hard
+requirement — change NOTHING about lock semantics: a 4-thread engine
+workload run under ``lockdep.enable()`` must produce bit-identical
+results to the uninstrumented run.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis import lockdep
+from repro.core.engine import CTEngine, clear_compile_cache
+from repro.core.levels import CombinationScheme, grid_shape
+
+
+@pytest.fixture()
+def dep():
+    """Instrumentation forced on, graph cleared, restored after."""
+    lockdep.enable()
+    lockdep.reset()
+    yield lockdep
+    lockdep.reset()
+    lockdep.restore_default()
+
+
+def _violation_rules(dep):
+    return [v["rule"] for v in dep.violations()]
+
+
+# ---------------------------------------------------------------------------
+# detector
+# ---------------------------------------------------------------------------
+
+def test_disabled_returns_plain_locks():
+    lockdep.disable()       # forced off, even under REPRO_LOCKDEP=1
+    try:
+        assert type(lockdep.make_lock("x")) is type(threading.Lock())
+    finally:
+        lockdep.restore_default()
+
+
+def test_synthetic_cycle_flagged_deterministically(dep):
+    a = dep.make_lock("alpha")
+    b = dep.make_lock("beta")
+    # thread 1's order...
+    with a:
+        with b:
+            pass
+    # ...and thread 2's inverted order, replayed sequentially: the
+    # graph-based detector must flag the POTENTIAL deadlock without
+    # the actual interleaving.
+    with b:
+        with a:
+            pass
+    cycles = dep.report()["cycles"]
+    assert len(cycles) == 1
+    assert set(cycles[0]["path"]) == {"alpha", "beta"}
+    assert "lock-cycle" in _violation_rules(dep)
+
+
+def test_no_cycle_for_consistent_order(dep):
+    a = dep.make_lock("alpha")
+    b = dep.make_lock("beta")
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    rep = dep.report()
+    assert rep["cycles"] == []
+    assert [(e["from"], e["to"]) for e in rep["edges"]] == \
+        [("alpha", "beta")]
+    assert rep["edges"][0]["count"] == 3
+
+
+def test_rank_regression_flagged(dep):
+    engine = dep.make_rlock("engine")
+    cluster = dep.make_rlock("cluster")
+    with engine:
+        with cluster:      # cluster(10) under engine(20): wrong way
+            pass
+    kinds = [v.get("kind") for v in dep.violations()]
+    assert "rank-regression" in kinds
+
+
+def test_rank_increasing_order_clean(dep):
+    cluster = dep.make_rlock("cluster")
+    engine = dep.make_rlock("engine")
+    with cluster:
+        with engine:
+            pass
+    assert dep.violations() == []
+
+
+def test_same_class_two_instances_flagged(dep):
+    e1 = dep.make_rlock("engine")
+    e2 = dep.make_rlock("engine")
+    with e1:
+        with e2:
+            pass
+    kinds = [v.get("kind") for v in dep.violations()]
+    assert "same-class-nesting" in kinds
+
+
+def test_reentrant_reacquire_not_flagged(dep):
+    e = dep.make_rlock("engine")
+    with e:
+        with e:
+            pass
+    assert dep.violations() == []
+
+
+def test_note_dispatch_under_lock_flagged(dep):
+    e = dep.make_rlock("engine")
+    with e:
+        dep.note_dispatch("test-site")
+    v = dep.report()["dispatch_under_lock"]
+    assert len(v) == 1
+    assert v[0]["held"] == ["engine"]
+    assert v[0]["site"] == "test-site"
+
+
+def test_note_dispatch_without_lock_clean(dep):
+    dep.note_dispatch("test-site")
+    assert dep.violations() == []
+
+
+def test_allowed_dispatch_section_suppresses(dep):
+    e = dep.make_rlock("cluster")
+    with e:
+        with dep.allowed_dispatch("control-plane barrier"):
+            dep.note_dispatch("test-site")
+    assert dep.violations() == []
+
+
+# ---------------------------------------------------------------------------
+# wrapper semantics: Condition protocol + reentrancy bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_condition_wait_notify_roundtrip(dep):
+    lock = dep.make_rlock("engine")
+    cond = threading.Condition(lock)
+    state = {"ready": False, "seen": False}
+
+    def waiter():
+        with cond:
+            while not state["ready"]:
+                cond.wait(5)
+            state["seen"] = True
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    with cond:
+        state["ready"] = True
+        cond.notify_all()
+    t.join(5)
+    assert state["seen"]
+    assert dep.violations() == []
+
+
+def test_condition_wait_releases_reentrant_levels(dep):
+    # wait() from TWO levels deep must fully release (another thread
+    # can acquire) and restore both levels afterwards.
+    lock = dep.make_rlock("engine")
+    cond = threading.Condition(lock)
+    acquired_elsewhere = threading.Event()
+
+    def other():
+        with lock:
+            acquired_elsewhere.set()
+            with cond:
+                cond.notify_all()
+
+    with lock:          # level 1
+        with cond:      # level 2 (same RLock through the Condition)
+            t = threading.Thread(target=other)
+            t.start()
+            while not acquired_elsewhere.is_set():
+                cond.wait(5)
+        assert lock._is_owned()
+    t.join(5)
+    assert dep.violations() == []
+
+
+def test_wrapper_stack_balanced_after_exceptions(dep):
+    lock = dep.make_lock("alpha")
+    with pytest.raises(RuntimeError):
+        with lock:
+            raise RuntimeError("boom")
+    # a balanced stack means a later acquire records no bogus edge
+    with lock:
+        pass
+    assert dep.report()["edges"] == []
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: instrumented engine == plain engine
+# ---------------------------------------------------------------------------
+
+def _threaded_workload():
+    """4 tenants x 4 threads: ingest chains + queries, deterministic
+    per tenant because single-tenant ingests apply in submission
+    order.  Returns {tenant: query result} as numpy arrays."""
+    scheme = CombinationScheme(2, 3)
+    names = [f"t{i}" for i in range(4)]
+    eng = CTEngine()
+    for i, name in enumerate(names):
+        rng = np.random.default_rng(100 + i)
+        grids = {ell: rng.standard_normal(grid_shape(ell))
+                 for ell, _ in scheme.grids}
+        eng.register(name, scheme, grids)
+    eng.start()
+
+    def work(name, i):
+        rng = np.random.default_rng(200 + i)
+        for _ in range(3):
+            grids = {ell: rng.standard_normal(grid_shape(ell))
+                     for ell, _ in scheme.grids}
+            eng.submit_ingest(name, grids).result(30)
+
+    threads = [threading.Thread(target=work, args=(n, i))
+               for i, n in enumerate(names)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60)
+    pts = np.random.default_rng(7).random((16, 2))
+    out = {n: np.asarray(eng.submit_query(n, pts).result(30))
+           for n in names}
+    eng.stop()
+    return out
+
+
+def test_instrumented_engine_bit_identical():
+    clear_compile_cache()
+    lockdep.disable()       # uninstrumented baseline, even in the
+    try:                    # REPRO_LOCKDEP=1 CI run
+        plain = _threaded_workload()
+        lockdep.enable()
+        lockdep.reset()
+        instrumented = _threaded_workload()
+        assert lockdep.report()["cycles"] == []
+        assert [v for v in lockdep.violations()
+                if v["rule"] != "lock-cycle"] == []
+    finally:
+        lockdep.reset()
+        lockdep.restore_default()
+    for name in plain:
+        assert np.array_equal(plain[name], instrumented[name]), name
